@@ -1,0 +1,86 @@
+"""Shared benchmark scaffolding: slice menu, analytical exec models, and the
+workloads used across the paper-figure reproductions.
+
+The paper's slice menu on A100 (1g.5gb(7x) / 2g.10gb(3x) / 7g.40gb(1x)) maps
+to 16x16-chip / 4x64-chip / 1x256-chip partitions of the production pod
+(DESIGN.md §2). Execution latency uses the roofline model from the dry-run
+constants; preprocessing costs are calibrated per modality (audio: CPU
+librosa-class ~30 ms per 7.5 s utterance vs DPU kernel analytical cost).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+from repro.configs import get_config
+from repro.core.batching import (
+    analytical_decode_latency,
+    analytical_knee,
+    derive_policy,
+)
+from repro.core.batching.buckets import Batch
+from repro.core.batching.knee import kv_bytes_per_token
+
+SLICE_MENU = {
+    "1s(16x)": dict(chips=16, n_slices=16),   # ~ 1g.5gb(7x)
+    "4s(4x)": dict(chips=64, n_slices=4),     # ~ 2g.10gb(3x)
+    "16s(1x)": dict(chips=256, n_slices=1),   # ~ 7g.40gb(1x)
+}
+
+# Serving-study models (PREBA's own domains, mapped to assigned archs):
+SERVE_MODELS = {
+    "whisper-base": dict(decode_steps=20, ctx_per_sec=100),     # audio ASR
+    "phi-3-vision-4.2b": dict(decode_steps=16, ctx_per_sec=0),  # vision VLM
+    "tinyllama-1.1b": dict(decode_steps=32, ctx_per_sec=0),     # text LM
+}
+
+CPU_PRE_COST_PER_7_5S = 0.0175  # MEASURED: repro.data.preprocess_cpu.audio_pipeline,
+                                # 7.5 s @48k on this host (see EXPERIMENTS.md)
+IMG_CPU_PRE_COST = 0.0214       # MEASURED: image_pipeline 512x512 on this host
+
+
+def exec_model(arch: str, chips: int, decode_steps: int, ctx_per_sec: int):
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    kvb = kv_bytes_per_token(cfg)
+
+    def lat(batch: Batch) -> float:
+        ctx = int(batch.max_length * ctx_per_sec) if ctx_per_sec else int(batch.max_length)
+        return decode_steps * analytical_decode_latency(
+            n, batch.size, chips=chips, context_len=ctx, kv_bytes_per_token=kvb
+        )
+
+    return cfg, n, kvb, lat
+
+
+def batch_latency(arch: str, chips: int, b: int, ctx: int, decode_steps: int) -> float:
+    cfg = get_config(arch)
+    return decode_steps * analytical_decode_latency(
+        cfg.active_param_count(), b, chips=chips, context_len=ctx,
+        kv_bytes_per_token=kv_bytes_per_token(cfg),
+    )
+
+
+def policy_for(arch: str, chips: int, n_slices: int, ctx_per_sec: int = 100,
+               decode_steps: int = 20, bucket_width: float = 2.5):
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    kvb = kv_bytes_per_token(cfg)
+    profiles = {
+        bkt: analytical_knee(
+            n, chips=chips, context_len=int((bkt + 0.5) * bucket_width * max(1, ctx_per_sec)),
+            kv_bytes_per_token=kvb,
+        )
+        for bkt in range(12)
+    }
+    # scale knee latency to the full decode_steps request
+    profiles = {
+        k: type(p)(p.batch_sizes, tuple(l * decode_steps for l in p.latencies),
+                   p.batch_knee, p.time_knee * decode_steps)
+        for k, p in profiles.items()
+    }
+    return derive_policy(profiles, n_slices=n_slices, bucket_width=bucket_width)
+
+
+def audio_pre_cost(length_s: float) -> float:
+    return CPU_PRE_COST_PER_7_5S * length_s / 7.5

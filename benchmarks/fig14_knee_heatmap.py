@@ -1,0 +1,40 @@
+"""Paper Fig. 14/15: Batch_knee vs audio input length; Time_knee is ~constant
+across lengths (the property PREBA's bucketized policy exploits)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.batching import analytical_knee
+from repro.core.batching.knee import kv_bytes_per_token
+
+
+def run():
+    rows = []
+    cfg = get_config("whisper-base")
+    n = cfg.active_param_count()
+    kvb = kv_bytes_per_token(cfg)
+    for chips, slice_name in ((16, "1s(16x)"), (256, "16s(1x)")):
+        for secs in (5, 10, 15, 20, 25):
+            prof = analytical_knee(n, chips=chips, context_len=secs * 100,
+                                   kv_bytes_per_token=kvb)
+            rows.append(dict(slice=slice_name, audio_s=secs,
+                             batch_knee=prof.batch_knee,
+                             time_knee_ms=round(prof.time_knee * 1e3, 3)))
+    return rows
+
+
+def check(rows):
+    """Time_knee varies little with input length (paper: ~35 ms constant)."""
+    for sl in ("1s(16x)", "16s(1x)"):
+        ts = [r["time_knee_ms"] for r in rows if r["slice"] == sl]
+        if max(ts) > 3.0 * min(ts):
+            return False
+    return True
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("time_knee ~constant:", check(rows))

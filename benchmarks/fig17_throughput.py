@@ -1,0 +1,37 @@
+"""Paper Fig. 17: end-to-end throughput — Ideal vs PREBA(DPU) vs CPU
+baseline, as active servers scale 1x..16x. Headline: PREBA ~= Ideal,
+CPU baseline collapses (paper: 3.7x gain, >91.6% of Ideal)."""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import SLICE_MENU, audio_pre_cost, exec_model, policy_for
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run():
+    rows = []
+    arch = "whisper-base"
+    sc = SLICE_MENU["1s(16x)"]
+    _, _, _, lat = exec_model(arch, sc["chips"], 20, 100)
+    for active in (1, 4, 16):
+        pol = policy_for(arch, sc["chips"], active)
+        reqs0 = generate_requests(WorkloadSpec(rate_qps=6000, seed=17), 4000)
+        out = {}
+        for mode in ("none", "dpu", "cpu"):
+            res = simulate(copy.deepcopy(reqs0), pol, lat, audio_pre_cost,
+                           SimConfig(n_slices=active, preprocess=mode, cpu_cores=32))
+            out[mode] = res.qps
+        rows.append(dict(servers=active,
+                         qps_ideal=round(out["none"], 1),
+                         qps_preba=round(out["dpu"], 1),
+                         qps_cpu=round(out["cpu"], 1),
+                         preba_vs_cpu=round(out["dpu"] / max(out["cpu"], 1e-9), 2),
+                         preba_of_ideal=round(out["dpu"] / max(out["none"], 1e-9), 3)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

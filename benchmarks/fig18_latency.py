@@ -1,0 +1,31 @@
+"""Paper Fig. 18: throughput vs p95 latency curves for Ideal / PREBA / CPU
+baseline (load sweep)."""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import SLICE_MENU, audio_pre_cost, exec_model, policy_for
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run():
+    rows = []
+    arch = "whisper-base"
+    sc = SLICE_MENU["1s(16x)"]
+    _, _, _, lat = exec_model(arch, sc["chips"], 20, 100)
+    pol = policy_for(arch, sc["chips"], sc["n_slices"])
+    for rate in (500, 1500, 3000, 6000):
+        reqs0 = generate_requests(WorkloadSpec(rate_qps=rate, seed=18), 1500)
+        for mode in ("none", "dpu", "cpu"):
+            res = simulate(copy.deepcopy(reqs0), pol, lat, audio_pre_cost,
+                           SimConfig(n_slices=sc["n_slices"], preprocess=mode,
+                                     cpu_cores=32))
+            rows.append(dict(offered_qps=rate, system=mode,
+                             qps=round(res.qps, 1), p95_ms=round(res.p95_ms, 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

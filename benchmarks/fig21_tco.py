@@ -1,0 +1,54 @@
+"""Paper Fig. 20/21: power and cost-efficiency (TCO) model.
+
+TCO metric (paper §6.3): Throughput / (CAPEX + OPEX over 3 years).
+TPU adaptation: v5e chip-hour pricing replaces A100 CAPEX; the "DPU" is
+extra TPU compute amortized into the pod (we charge PREBA the preprocessing
+slice's chips), electricity at $0.139/kWh as in the paper.
+"""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import SLICE_MENU, audio_pre_cost, exec_model, policy_for
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+YEARS = 3
+HOURS = YEARS * 365 * 24
+CHIP_CAPEX = 4500.0       # $/chip (v5e list-ish, incl. host share)
+CHIP_POWER_KW = 0.30      # per chip incl. host/interconnect share
+CPU_CORE_CAPEX = 120.0
+CPU_CORE_KW = 0.012
+KWH = 0.139
+
+
+def tco_per_qps(qps: float, chips: int, cpu_cores: int, extra_chips: int = 0):
+    capex = (chips + extra_chips) * CHIP_CAPEX + cpu_cores * CPU_CORE_CAPEX
+    opex = ((chips + extra_chips) * CHIP_POWER_KW + cpu_cores * CPU_CORE_KW) * HOURS * KWH
+    return (capex + opex) / max(qps, 1e-9)
+
+
+def run():
+    arch = "whisper-base"
+    sc = SLICE_MENU["1s(16x)"]
+    _, _, _, lat = exec_model(arch, sc["chips"], 20, 100)
+    pol = policy_for(arch, sc["chips"], sc["n_slices"])
+    reqs0 = generate_requests(WorkloadSpec(rate_qps=6000, seed=21), 4000)
+    rows = []
+    cpu = simulate(copy.deepcopy(reqs0), pol, lat, audio_pre_cost,
+                   SimConfig(n_slices=16, preprocess="cpu", cpu_cores=32))
+    preba = simulate(copy.deepcopy(reqs0), pol, lat, audio_pre_cost,
+                     SimConfig(n_slices=16, preprocess="dpu"))
+    base_cost = tco_per_qps(cpu.qps, 256, 384)   # CPU baseline needs big core pool
+    preba_cost = tco_per_qps(preba.qps, 256, 32, extra_chips=8)  # DPU slice
+    rows.append(dict(system="baseline_cpu", qps=round(cpu.qps, 1),
+                     usd_per_qps=round(base_cost, 1)))
+    rows.append(dict(system="preba_dpu", qps=round(preba.qps, 1),
+                     usd_per_qps=round(preba_cost, 1),
+                     cost_eff_gain=round(base_cost / preba_cost, 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

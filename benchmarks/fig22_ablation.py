@@ -1,0 +1,44 @@
+"""Paper Fig. 22: ablation — Base vs Base+DPU vs Base+DPU+DynamicBatching.
+(+ the split-CU audio design vs the fused-CU strawman of Fig. 12b.)"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+
+from benchmarks.common import SLICE_MENU, audio_pre_cost, exec_model, policy_for
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run():
+    arch = "whisper-base"
+    sc = SLICE_MENU["1s(16x)"]
+    _, _, _, lat = exec_model(arch, sc["chips"], 20, 100)
+    pol = policy_for(arch, sc["chips"], sc["n_slices"])
+    static = dataclasses.replace(pol, batch_max={0: 1})  # no dynamic batching
+    reqs0 = generate_requests(WorkloadSpec(rate_qps=6000, seed=22), 4000)
+
+    def go(policy, **kw):
+        return simulate(copy.deepcopy(reqs0), policy, lat, audio_pre_cost,
+                        SimConfig(n_slices=sc["n_slices"], **kw))
+
+    base = go(static, preprocess="cpu", cpu_cores=32)
+    dpu = go(static, preprocess="dpu")
+    full = go(pol, preprocess="dpu")
+    fused = go(pol, preprocess="dpu", split_audio_cus=False)
+    rows = [
+        dict(system="base", qps=round(base.qps, 1), p95_ms=round(base.p95_ms, 1)),
+        dict(system="base+dpu", qps=round(dpu.qps, 1), p95_ms=round(dpu.p95_ms, 1),
+             speedup_vs_base=round(dpu.qps / max(base.qps, 1e-9), 2)),
+        dict(system="base+dpu+dynbatch", qps=round(full.qps, 1),
+             p95_ms=round(full.p95_ms, 1),
+             speedup_vs_base=round(full.qps / max(base.qps, 1e-9), 2)),
+        dict(system="fused_cu_strawman", qps=round(fused.qps, 1),
+             p95_ms=round(fused.p95_ms, 1)),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

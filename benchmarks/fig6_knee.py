@@ -1,0 +1,39 @@
+"""Paper Fig. 6: throughput + tail latency vs batch; Batch_knee per
+(model x slice). Key claim: fine slices have much smaller knees."""
+from __future__ import annotations
+
+from benchmarks.common import SERVE_MODELS, SLICE_MENU, policy_for
+from repro.configs import get_config
+from repro.core.batching import analytical_knee
+from repro.core.batching.knee import kv_bytes_per_token
+
+
+def run():
+    rows = []
+    for arch, meta in SERVE_MODELS.items():
+        cfg = get_config(arch)
+        for slice_name, sc in SLICE_MENU.items():
+            prof = analytical_knee(
+                cfg.active_param_count(), chips=sc["chips"],
+                context_len=int(7.5 * (meta["ctx_per_sec"] or 68)),
+                kv_bytes_per_token=kv_bytes_per_token(cfg),
+            )
+            rows.append(dict(arch=arch, slice=slice_name,
+                             batch_knee=prof.batch_knee,
+                             time_knee_ms=round(prof.time_knee * 1e3, 3)))
+    return rows
+
+
+def check(rows):
+    """Fine slices must have knee <= full slice (paper's Fig. 6 ordering)."""
+    by = {(r["arch"], r["slice"]): r["batch_knee"] for r in rows}
+    for arch in SERVE_MODELS:
+        assert by[(arch, "1s(16x)")] <= by[(arch, "16s(1x)")]
+    return True
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("ordering ok:", check(rows))

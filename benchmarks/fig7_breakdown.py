@@ -1,0 +1,30 @@
+"""Paper Fig. 7: average latency breakdown (batching vs execution) when fine
+and full slicing are tuned to the same throughput — fine slices spend less
+time forming batches (smaller Batch_max)."""
+from __future__ import annotations
+
+from benchmarks.common import SLICE_MENU, audio_pre_cost, exec_model, policy_for
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run():
+    rows = []
+    arch = "whisper-base"
+    for slice_name in ("1s(16x)", "16s(1x)"):
+        sc = SLICE_MENU[slice_name]
+        _, _, _, lat = exec_model(arch, sc["chips"], 20, 100)
+        pol = policy_for(arch, sc["chips"], sc["n_slices"])
+        reqs = generate_requests(WorkloadSpec(rate_qps=300, seed=3), 1500)
+        res = simulate(reqs, pol, lat, audio_pre_cost,
+                       SimConfig(n_slices=sc["n_slices"], preprocess="dpu"))
+        br = res.breakdown_ms()
+        rows.append(dict(slice=slice_name, qps=round(res.qps, 1),
+                         batching_ms=round(br["batching"], 2),
+                         execution_ms=round(br["execution"], 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Paper Fig. 8: end-to-end throughput with vs without CPU preprocessing +
+the CPU cores required to sustain peak model-execution throughput."""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import (
+    SERVE_MODELS,
+    SLICE_MENU,
+    audio_pre_cost,
+    exec_model,
+    policy_for,
+)
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run():
+    rows = []
+    sc = SLICE_MENU["1s(16x)"]
+    for arch, meta in SERVE_MODELS.items():
+        _, _, _, lat = exec_model(arch, sc["chips"], meta["decode_steps"],
+                                  meta["ctx_per_sec"])
+        pol = policy_for(arch, sc["chips"], sc["n_slices"],
+                         ctx_per_sec=meta["ctx_per_sec"],
+                         decode_steps=meta["decode_steps"])
+        spec = WorkloadSpec(rate_qps=6000, seed=5,
+                            modality="audio" if meta["ctx_per_sec"] else "text",
+                            mean_len=7.5 if meta["ctx_per_sec"] else 48,
+                            max_len=30 if meta["ctx_per_sec"] else 120)
+        pre = audio_pre_cost if meta["ctx_per_sec"] else (lambda ln: 0.0214)
+        reqs = generate_requests(spec, 2000)
+        ideal = simulate([_copy(r) for r in reqs], pol, lat, pre,
+                         SimConfig(n_slices=sc["n_slices"], preprocess="none"))
+        cpu = simulate([_copy(r) for r in reqs], pol, lat, pre,
+                       SimConfig(n_slices=sc["n_slices"], preprocess="cpu", cpu_cores=32))
+        # min cores for preprocessing alone to match ideal goodput
+        per_req = pre(spec.mean_len)
+        need = math.ceil(ideal.qps * per_req)
+        rows.append(dict(arch=arch, qps_ideal=round(ideal.qps, 1),
+                         qps_cpu=round(cpu.qps, 1),
+                         drop_pct=round(100 * (1 - cpu.qps / max(ideal.qps, 1e-9)), 1),
+                         cores_required=need))
+    return rows
+
+
+def _copy(r):
+    import copy
+
+    return copy.deepcopy(r)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,36 @@
+"""Paper Fig. 9: preprocessing throughput + CPU utilization vs number of
+activated inference servers — CPU saturates early; DPU scales."""
+from __future__ import annotations
+
+from benchmarks.common import SLICE_MENU, audio_pre_cost, exec_model, policy_for
+from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run():
+    rows = []
+    arch = "whisper-base"
+    sc = SLICE_MENU["1s(16x)"]
+    _, _, _, lat = exec_model(arch, sc["chips"], 20, 100)
+    for active in (1, 2, 4, 8, 16):
+        pol = policy_for(arch, sc["chips"], active)
+        for mode in ("cpu", "dpu"):
+            reqs = generate_requests(WorkloadSpec(rate_qps=6000, seed=9), 1200)
+            res = simulate(reqs, pol, lat, audio_pre_cost,
+                           SimConfig(n_slices=active, preprocess=mode, cpu_cores=32))
+            rows.append(dict(servers=active, preprocess=mode, qps=round(res.qps, 1)))
+    return rows
+
+
+def check(rows):
+    cpu = {r["servers"]: r["qps"] for r in rows if r["preprocess"] == "cpu"}
+    dpu = {r["servers"]: r["qps"] for r in rows if r["preprocess"] == "dpu"}
+    # CPU saturates: 16 servers gain little over 4; DPU keeps scaling
+    return cpu[16] < 1.5 * cpu[4] and dpu[16] > 1.5 * dpu[4]
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("saturation pattern ok:", check(rows))

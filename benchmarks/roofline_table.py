@@ -1,0 +1,62 @@
+"""Roofline table generator: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and emits the EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+
+def load(results_dir="results/dryrun", mesh="pod16x16"):
+    rows = []
+    for f in sorted(glob.glob(f"{results_dir}/*__{mesh}.json")):
+        r = json.loads(pathlib.Path(f).read_text())
+        rows.append(r)
+    return rows
+
+
+def run(results_dir: str = "results/dryrun"):
+    out = []
+    for r in load(results_dir):
+        if r["status"] != "ok":
+            out.append(dict(cell=r["cell"], status=r["status"],
+                            reason=r.get("reason", r.get("error", ""))[:60]))
+            continue
+        rf = r["roofline"]
+        out.append(dict(
+            cell=r["cell"], status="ok", bottleneck=rf["bottleneck"],
+            t_compute_s=f"{rf['t_compute']:.3e}",
+            t_memory_s=f"{rf['t_memory']:.3e}",
+            t_collective_s=f"{rf['t_collective']:.3e}",
+            useful=round(rf["useful_flops_ratio"], 2),
+            roofline_pct=round(100 * rf["roofline_fraction"], 1),
+            mem_gib=round(r["bytes_per_device"] / 2**30, 2),
+        ))
+    return out
+
+
+def markdown(results_dir: str = "results/dryrun", mesh="pod16x16") -> str:
+    lines = [
+        "| arch | shape | bottleneck | t_comp (s) | t_mem (s) | t_coll (s) "
+        "| useful | roofline% | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(results_dir, mesh):
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | *skipped* | — | — | — | — | — | — |"
+            )
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['bottleneck']} "
+            f"| {rf['t_compute']:.2e} | {rf['t_memory']:.2e} "
+            f"| {rf['t_collective']:.2e} | {rf['useful_flops_ratio']:.2f} "
+            f"| {100*rf['roofline_fraction']:.1f} "
+            f"| {r['bytes_per_device']/2**30:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,41 @@
+"""Lower + compile one (arch x shape) cell on the 512-device production mesh
+and print its memory/cost/roofline analysis — the building block of
+EXPERIMENTS.md §Dry-run. Runs on CPU via placeholder devices.
+
+    PYTHONPATH=src python examples/pod_dryrun_roofline.py --arch yi-34b \
+        --shape decode_32k [--multi-pod]
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    import pathlib
+
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod,
+                   pathlib.Path("results/dryrun"), force=True)
+    if rec["status"] != "ok":
+        print(rec)
+        return
+    r = rec["roofline"]
+    print(f"cell          : {rec['cell']}")
+    print(f"chips         : {rec['chips']}")
+    print(f"bytes/device  : {rec['bytes_per_device']/2**30:.2f} GiB")
+    print(f"t_compute     : {r['t_compute']:.3e} s")
+    print(f"t_memory      : {r['t_memory']:.3e} s")
+    print(f"t_collective  : {r['t_collective']:.3e} s")
+    print(f"bottleneck    : {r['bottleneck']}")
+    print(f"useful flops  : {100*r['useful_flops_ratio']:.1f}% of HLO dot flops")
+    print(f"roofline frac : {100*r['roofline_fraction']:.1f}%")
+    print(f"collectives   : {r['collectives']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Trip-count-aware parser for compiled (post-SPMD) HLO text.
+
+XLA's `Compiled.cost_analysis()` counts `while` (scan) bodies once, which
+undercounts a 22-layer scanned transformer by ~22x. This parser walks the
+computation call graph, multiplies per-computation costs by the while trip
+count (`backend_config known_trip_count`, with a condition-constant
+fallback), and accounts:
+
+  * dot FLOPs:        2 * prod(out_shape) * prod(contracting dims)
+  * dot operand bytes: lhs + rhs + out  (per-device HBM-traffic proxy)
+  * collective wire bytes per chip (ring formulas; see roofline.py)
+
+All shapes in post-partitioning HLO are *per-device*, so totals are
+per-device numbers.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_PARAM = re.compile(r"([\w.\-]+)\s*:\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)")
+_OPERANDS = re.compile(r"\(\s*(%[\w.\-]+(?:\s*,\s*%[\w.\-]+)*)?\s*\)")
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE.search(s)
+    if not m:
+        return "", ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # op name -> type str
+
+
+def split_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace():
+            m = _COMP_HDR.match(raw)
+            if m:
+                name = m.group(2)
+                cur = Computation(name)
+                comps[name] = cur
+                if m.group(1):
+                    entry_name = name
+                for pm in _PARAM.finditer(m.group(3)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                continue
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_DEF.match(raw)
+        if m:
+            op = Op(m.group(1), m.group(3), m.group(2), raw)
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.out_type
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(line: str, comps: Dict[str, Computation]) -> int:
+    m = _TRIP.search(line)
+    if m:
+        return int(m.group(1))
+    # fallback: constant in the condition computation
+    cm = re.search(r"condition=%?([\w.\-]+)", line)
+    if cm and cm.group(1) in comps:
+        for op in comps[cm.group(1)].ops:
+            if op.kind == "constant":
+                vm = re.search(r"constant\((\d+)\)", op.line)
+                if vm:
+                    return int(vm.group(1))
+    return 1
+
+
+def computation_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return mult
+    mult[entry.name] = 1.0
+    # propagate in topological-ish order via repeated passes (call graph is a DAG)
+    for _ in range(60):
+        changed = False
+        snapshot = dict(mult)
+        new = defaultdict(float)
+        new[entry.name] = 1.0
+        for cname, m in snapshot.items():
+            comp = comps.get(cname)
+            if comp is None or m == 0:
+                continue
+            for op in comp.ops:
+                factor = m
+                if op.kind == "while":
+                    factor = m * _trip_count(op.line, comps)
+                bm = _BRANCHES.search(op.line)
+                callees = list(_CALLS.findall(op.line))
+                if bm:
+                    callees += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+                for callee in callees:
+                    if callee in comps:
+                        new[callee] += factor
+        new_d = dict(new)
+        if any(abs(new_d.get(k, 0) - snapshot.get(k, 0)) > 1e-9 for k in set(new_d) | set(snapshot)):
+            changed = True
+        mult = defaultdict(float, new_d)
+        mult[entry.name] = 1.0
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _dot_flops_bytes(op: Op, comp: Computation) -> Tuple[float, float]:
+    _, out_dims = _parse_shape(op.out_type)
+    out_n = math.prod(out_dims) if out_dims else 0
+    om = _OPERANDS.search(op.line.split("=", 1)[1].split(op.kind, 1)[1])
+    operands = []
+    if om and om.group(1):
+        operands = [o.strip().lstrip("%") for o in om.group(1).split(",")]
+    lhs_type = comp.shapes.get(operands[0], "") if operands else ""
+    rhs_type = comp.shapes.get(operands[1], "") if len(operands) > 1 else ""
+    _, lhs_dims = _parse_shape(lhs_type)
+    cm = _LHS_CDIMS.search(op.line)
+    csize = 1
+    if cm and lhs_dims:
+        for d in cm.group(1).split(","):
+            if d:
+                csize *= lhs_dims[int(d)]
+    flops = 2.0 * out_n * csize
+    byts = float(
+        _shape_bytes(op.out_type) + _shape_bytes(lhs_type) + _shape_bytes(rhs_type)
+    )
+    return flops, byts
+
+
+def _collective_wire(op: Op, default_group: int) -> float:
+    out_bytes = _shape_bytes(op.out_type)
+    if out_bytes == 0:
+        return 0.0
+    gm = _GROUPS.search(op.line)
+    if gm:
+        first = gm.group(1).strip("{}")
+        n = max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    else:
+        gm2 = _GROUPS_IOTA.search(op.line)
+        n = int(gm2.group(2)) if gm2 else default_group
+    if n <= 1:
+        return 0.0
+    kind = op.kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (n - 1) / n
+    if kind == "all-gather":
+        return out_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return out_bytes * (n - 1)
+    if kind == "all-to-all":
+        return out_bytes * (n - 1) / n
+    if kind == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+@dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    param_bytes: float = 0.0
+    dots: int = 0
+
+    def to_dict(self):
+        return {
+            "dot_flops": self.dot_flops, "dot_bytes": self.dot_bytes,
+            "wire_bytes": self.wire_bytes, "dots": self.dots,
+            "collective_counts": self.collective_counts,
+            "collective_bytes": self.collective_bytes,
+            "param_bytes": self.param_bytes,
+        }
+
+
+def analyze_hlo(text: str, default_group: int = 1) -> HloCost:
+    comps = split_computations(text)
+    comps.pop("__entry__", None)
+    mult = computation_multipliers({**comps, "__entry__": comps[_entry_name(text)]}) \
+        if _entry_name(text) else {}
+    cost = HloCost()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind in ("dot", "dot_general"):
+                f, b = _dot_flops_bytes(op, comp)
+                cost.dot_flops += m * f
+                cost.dot_bytes += m * b
+                cost.dots += 1
+            else:
+                base = op.kind.replace("-start", "")
+                if base in _COLLECTIVE_KINDS and not op.kind.endswith("-done"):
+                    wire = _collective_wire(op, default_group)
+                    cost.wire_bytes += m * wire
+                    cost.collective_counts[base] = cost.collective_counts.get(base, 0) + m
+                    cost.collective_bytes[base] = (
+                        cost.collective_bytes.get(base, 0.0) + m * _shape_bytes(op.out_type)
+                    )
+    return cost
+
+
+def _entry_name(text: str) -> Optional[str]:
+    for raw in text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_HDR.match(raw)
+            if m:
+                return m.group(2)
+    return None

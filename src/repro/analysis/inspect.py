@@ -1,0 +1,71 @@
+"""Per-cell cost inspector for the perf loop: top dot ops by FLOPs and top
+collectives by wire bytes, with trip-count multipliers applied.
+
+    PYTHONPATH=src python -m repro.analysis.inspect --arch yi-34b --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.analysis import hlo_parse
+
+
+def summarize(text: str, default_group: int, top: int = 14):
+    comps = hlo_parse.split_computations(text)
+    entry = hlo_parse._entry_name(text)
+    mult = hlo_parse.computation_multipliers({**comps, "__entry__": comps[entry]})
+    dots = defaultdict(float)
+    colls = defaultdict(float)
+    coll_counts = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            meta = re.search(r'op_name="([^"]+)"', op.line)
+            tag = meta.group(1)[-110:] if meta else op.name
+            if op.kind in ("dot", "dot_general"):
+                f, _ = hlo_parse._dot_flops_bytes(op, comp)
+                dots[(tag, op.out_type[:40])] += m * f
+            else:
+                base = op.kind.replace("-start", "")
+                if base in hlo_parse._COLLECTIVE_KINDS and not op.kind.endswith("-done"):
+                    wire = hlo_parse._collective_wire(op, default_group)
+                    colls[(base, tag, op.out_type[:40])] += m * wire
+                    coll_counts[(base, tag, op.out_type[:40])] += m
+    print("== top dots by per-device FLOPs ==")
+    for (tag, shp), f in sorted(dots.items(), key=lambda x: -x[1])[:top]:
+        print(f"  {f:.3e}  {shp:40s} {tag}")
+    print("== top collectives by per-device wire bytes ==")
+    for (kind, tag, shp), b in sorted(colls.items(), key=lambda x: -x[1])[:top]:
+        n = coll_counts[(kind, tag, shp)]
+        print(f"  {b/2**30:8.3f} GiB x{n:5.0f}  {kind:18s} {shp:36s} {tag}")
+    return dots, colls
+
+
+def main():
+    import os
+
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, get_config
+    from repro.core import steps
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        compiled = steps.lower_cell(cfg, shape, mesh).compile()
+    summarize(compiled.as_text(), mesh.devices.size)
+
+
+if __name__ == "__main__":
+    main()

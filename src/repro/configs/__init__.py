@@ -1,0 +1,41 @@
+"""Arch configs for the assigned pool (+ shapes). Importing this package
+registers all architectures.
+"""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    reduced,
+    register,
+    serve_config,
+    shape_applicable,
+)
+
+# Register all assigned architectures.
+from repro.configs import (  # noqa: F401
+    h2o_danube_1_8b,
+    tinyllama_1_1b,
+    yi_34b,
+    granite_3_8b,
+    mamba2_370m,
+    whisper_base,
+    mixtral_8x22b,
+    moonshot_v1_16b_a3b,
+    jamba_v0_1_52b,
+    phi_3_vision_4_2b,
+)
+
+ASSIGNED_ARCHS = [
+    "h2o-danube-1.8b",
+    "tinyllama-1.1b",
+    "yi-34b",
+    "granite-3-8b",
+    "mamba2-370m",
+    "whisper-base",
+    "mixtral-8x22b",
+    "moonshot-v1-16b-a3b",
+    "jamba-v0.1-52b",
+    "phi-3-vision-4.2b",
+]

@@ -1,0 +1,251 @@
+"""Configuration system: model configs, input-shape configs, registry.
+
+Every assigned architecture is a ``ModelConfig`` registered under its id;
+``reduced()`` derives a CPU-smoke-testable config of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | ssm | audio | moe | hybrid | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = full attention; >0 = SWA window (all attn layers)
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # mixture-of-experts
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0            # per-expert ffn dim (0 -> d_ff)
+    n_shared_experts: int = 0
+    first_k_dense: int = 0       # leading dense (non-MoE) layers
+    moe_every: int = 1           # MoE on layers where idx % moe_every == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 4096   # tokens per dispatch group
+    router_aux_weight: float = 0.01
+    moe_impl: str = "einsum"     # einsum (GShard baseline) | sort (beyond-paper)
+
+    # state-space (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    ssm_ngroups: int = 1
+
+    # hybrid (jamba): attention on layers where idx % attn_every == attn_offset
+    attn_every: int = 0
+    attn_offset: int = 0
+
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    n_audio_ctx: int = 0
+    n_mels: int = 0
+
+    # vision-language (phi-3-vision)
+    n_img_tokens: int = 0
+
+    # numerics
+    dtype: str = "bfloat16"       # activation/compute dtype
+    param_dtype: str = "float32"  # master params (train); serving casts to dtype
+    remat: bool = True
+
+    # distribution knobs (set by step factories, not by arch configs)
+    attn_dp_axes: Tuple[str, ...] = ()  # batch-shard attention compute over these mesh axes
+    moe_shard_constraints: bool = False  # pin MoE compute shardings (prod meshes)
+    moe_ep_axis: str = ""                # expert-parallel mesh axis ('' = none)
+    moe_group_axes: Tuple[str, ...] = ()  # token-group dim sharding (how x arrives)
+
+    # --- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 256 multiple so the embedding shards evenly
+        (MaxText-style); logits are sliced back to the true vocab."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        # mamba2 conv covers x, B, C streams
+        return self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+
+    def layer_kinds(self) -> List[Tuple[str, str]]:
+        """Per-layer (mixer, ffn) kinds.
+
+        mixer in {attn, ssm}; ffn in {mlp, moe, none}.
+        """
+        kinds = []
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                mixer = "ssm"
+            elif self.family == "hybrid":
+                mixer = "attn" if (self.attn_every and i % self.attn_every == self.attn_offset) else "ssm"
+            else:
+                mixer = "attn"
+            if self.family == "ssm":
+                ffn = "none"  # mamba2 backbone has no separate FFN
+            elif self.n_experts and i >= self.first_k_dense and i % self.moe_every == self.moe_offset:
+                ffn = "moe"
+            else:
+                ffn = "mlp"
+            kinds.append((mixer, ffn))
+        return kinds
+
+    def is_subquadratic(self) -> bool:
+        """True when long-context decode is in-family (SSM/hybrid/SWA)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs are decoder-bearing (whisper = enc-dec)
+
+    def param_count(self) -> int:
+        """Analytical parameter count (matches the init tree; embeddings incl.)."""
+        from repro.models.api import count_params_analytical
+
+        return count_params_analytical(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.api import count_params_analytical
+
+        return count_params_analytical(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Shape configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell is in-family (see DESIGN.md §2)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic():
+        return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_REDUCERS: Dict[str, Callable[[ModelConfig], ModelConfig]] = {}
+
+
+def register(cfg: ModelConfig, reducer: Optional[Callable[[ModelConfig], ModelConfig]] = None) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    if reducer is not None:
+        _REDUCERS[cfg.name] = reducer
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (ensure arch modules imported)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def _default_reduce(cfg: ModelConfig) -> ModelConfig:
+    """Family-preserving reduced config for CPU smoke tests."""
+    changes = dict(
+        n_layers=min(cfg.n_layers, 4) if cfg.family != "hybrid" else 8,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        moe_group_size=64,
+    )
+    if cfg.n_experts:
+        changes.update(n_experts=min(cfg.n_experts, 4), top_k=min(cfg.top_k, 2), moe_d_ff=128)
+    if cfg.ssm_state:
+        changes.update(ssm_state=16, ssm_headdim=16, ssm_chunk=16)
+    if cfg.sliding_window:
+        changes.update(sliding_window=16)
+    if cfg.enc_layers:
+        changes.update(enc_layers=2, n_audio_ctx=24, n_mels=16)
+    if cfg.n_img_tokens:
+        changes.update(n_img_tokens=8)
+    if cfg.first_k_dense:
+        changes.update(first_k_dense=1)
+    return replace(cfg, **changes)
+
+
+def reduced(name_or_cfg) -> ModelConfig:
+    cfg = get_config(name_or_cfg) if isinstance(name_or_cfg, str) else name_or_cfg
+    reducer = _REDUCERS.get(cfg.name, _default_reduce)
+    out = reducer(cfg)
+    return replace(out, name=cfg.name + "-reduced")
+
+
+def serve_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Head-padded config for tensor-parallel serving (DESIGN.md §4).
+
+    When n_kv_heads < tp, KV heads are replicated rep = tp//n_kv_heads times
+    (so the kv axis shards evenly) and q heads are re-factored/zero-padded
+    into [kv_eff, g_eff] slots. Padded wo rows are zero => exact outputs.
+    """
+    if cfg.family == "ssm" or cfg.n_kv_heads % tp == 0 or tp <= 1:
+        return cfg
+    kh = cfg.n_kv_heads
+    if tp % kh:
+        raise ValueError(f"tp={tp} not a multiple of kv_heads={kh} for {cfg.name}")
+    rep = tp // kh
+    g = cfg.n_heads // kh
+    g_eff = -(-g // rep)
+    return replace(cfg, n_kv_heads=tp, n_heads=tp * g_eff)

@@ -1,0 +1,11 @@
+from repro.core.batching.knee import (  # noqa: F401
+    KneeProfile,
+    analytical_decode_latency,
+    analytical_knee,
+    find_knee,
+    kv_bytes_per_token,
+    profile_knee,
+)
+from repro.core.batching.policy import BatchPolicy, derive_policy  # noqa: F401
+from repro.core.batching.buckets import BucketedBatcher, Bucket  # noqa: F401
+from repro.core.batching.scheduler import SliceScheduler  # noqa: F401

@@ -1,0 +1,129 @@
+"""Bucketized variable-length batching queues (paper §4.3, Fig. 16).
+
+Inputs are bucketized by length into non-overlapping windows (2.5 s of audio
+in the paper; token-length windows for LM serving). Each bucket has its own
+queue and its own Batch_max (= that length's Batch_knee). A batch is released
+when (a) the bucket holds Batch_max requests, or (b) the oldest request has
+waited Time_queue. Under-full batches merge requests from *adjacent* buckets,
+capped by the Batch_max of the longest member's bucket.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.batching.policy import BatchPolicy
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float               # seconds (sim or wall clock)
+    length: float                # audio seconds or token count
+    payload: Any = None
+    preprocessed_at: Optional[float] = None
+    dispatched_at: Optional[float] = None
+    completed_at: Optional[float] = None
+
+
+@dataclass
+class Batch:
+    requests: List[Request]
+    bucket_id: int               # bucket of the longest member
+    formed_at: float
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def max_length(self) -> float:
+        return max(r.length for r in self.requests)
+
+
+@dataclass
+class Bucket:
+    bucket_id: int
+    queue: Deque[Request] = field(default_factory=deque)
+
+    def oldest_ready_time(self) -> Optional[float]:
+        if not self.queue:
+            return None
+        r = self.queue[0]
+        return r.preprocessed_at if r.preprocessed_at is not None else r.arrival
+
+
+class BucketedBatcher:
+    """N batching queues + merge logic. Deterministic, clock-agnostic."""
+
+    def __init__(self, policy: BatchPolicy, merge_adjacent: bool = True):
+        self.policy = policy
+        self.merge_adjacent = merge_adjacent
+        self.buckets: Dict[int, Bucket] = {}
+        self.formed = 0
+
+    def bucket_of(self, length: float) -> int:
+        return int(length / self.policy.bucket_width)
+
+    def enqueue(self, req: Request) -> None:
+        bid = self.bucket_of(req.length)
+        self.buckets.setdefault(bid, Bucket(bid)).queue.append(req)
+
+    def pending(self) -> int:
+        return sum(len(b.queue) for b in self.buckets.values())
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest time at which some bucket must be flushed."""
+        ts = [
+            t + self.policy.time_queue
+            for b in self.buckets.values()
+            if (t := b.oldest_ready_time()) is not None
+        ]
+        return min(ts) if ts else None
+
+    def poll(self, now: float) -> List[Batch]:
+        """Release every batch that is due at `now`."""
+        out: List[Batch] = []
+        for bid in sorted(self.buckets):
+            bucket = self.buckets[bid]
+            bmax = self.policy.batch_max_for(bid)
+            while len(bucket.queue) >= bmax:
+                out.append(self._form(bid, bmax, now))
+            t0 = bucket.oldest_ready_time()
+            if t0 is not None and now - t0 >= self.policy.time_queue:
+                out.append(self._form(bid, bmax, now))
+        return [b for b in out if b is not None]
+
+    def _form(self, bid: int, bmax: int, now: float) -> Optional[Batch]:
+        bucket = self.buckets[bid]
+        reqs: List[Request] = []
+        while bucket.queue and len(reqs) < bmax:
+            reqs.append(bucket.queue.popleft())
+        top_bid = bid
+        if self.merge_adjacent and len(reqs) < bmax:
+            top_bid, reqs = self._merge_neighbors(bid, reqs, now)
+        if not reqs:
+            return None
+        self.formed += 1
+        return Batch(requests=reqs, bucket_id=top_bid, formed_at=now)
+
+    def _merge_neighbors(self, bid: int, reqs: List[Request], now: float):
+        """Fill from adjacent buckets; the batch size cap follows the
+        *longest* member's bucket (paper: never exceed the Batch_max of the
+        longest input in the batch)."""
+        top_bid = bid
+        for nb in (bid + 1, bid - 1, bid + 2, bid - 2):
+            if nb < 0 or nb not in self.buckets:
+                continue
+            neighbor = self.buckets[nb]
+            while neighbor.queue:
+                cand_top = max(top_bid, nb)
+                cap = self.policy.batch_max_for(cand_top)
+                if len(reqs) >= cap:
+                    break
+                reqs.append(neighbor.queue.popleft())
+                top_bid = cand_top
+            if len(reqs) >= self.policy.batch_max_for(top_bid):
+                break
+        return top_bid, reqs

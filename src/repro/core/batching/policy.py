@@ -1,0 +1,52 @@
+"""Batch_max / Time_queue policy (paper §4.3).
+
+Batch_max(bucket)  = Batch_knee(bucket input length)
+Time_queue         = Time_knee / V   (V = number of slices), so the batcher
+                     produces on average V fresh batches per model-execution
+                     interval and no slice starves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.batching.knee import KneeProfile
+
+
+@dataclass(frozen=True)
+class BatchPolicy:
+    batch_max: Dict[int, int]        # bucket id -> Batch_max
+    time_queue: float                # seconds
+    time_knee: float
+    n_slices: int
+    bucket_width: float              # bucket window width (sec of audio / tokens)
+
+    def batch_max_for(self, bucket_id: int) -> int:
+        if bucket_id in self.batch_max:
+            return self.batch_max[bucket_id]
+        # fall back to the nearest profiled bucket (paper: per-length knees)
+        keys = sorted(self.batch_max)
+        if not keys:
+            return 1
+        nearest = min(keys, key=lambda k: abs(k - bucket_id))
+        return self.batch_max[nearest]
+
+
+def derive_policy(
+    profiles: Dict[int, KneeProfile],
+    n_slices: int,
+    bucket_width: float,
+) -> BatchPolicy:
+    """profiles: bucket id -> knee profile for that input-length bucket."""
+    assert profiles, "need at least one profiled bucket"
+    batch_max = {b: p.batch_knee for b, p in profiles.items()}
+    # Paper Fig.15: Time_knee is ~constant across input lengths; use median.
+    knees = sorted(p.time_knee for p in profiles.values())
+    time_knee = knees[len(knees) // 2]
+    return BatchPolicy(
+        batch_max=batch_max,
+        time_queue=time_knee / max(1, n_slices),
+        time_knee=time_knee,
+        n_slices=n_slices,
+        bucket_width=bucket_width,
+    )

@@ -1,0 +1,127 @@
+"""Batch -> slice dispatch with failure handling and straggler hedging.
+
+The slice pool is the MIG analogue (core/slicing): V independent sub-mesh
+serving replicas. The scheduler keeps slices busy (least-loaded dispatch),
+evicts failed slices (their in-flight batches are re-queued), and hedges
+stragglers: if a slice exceeds `hedge_factor x` the expected execution time,
+the batch is speculatively re-dispatched to another free slice and the first
+completion wins (large-scale runnability requirement).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.batching.buckets import Batch
+
+
+@dataclass
+class SliceState:
+    slice_id: int
+    healthy: bool = True
+    busy_until: float = 0.0
+    inflight: Optional[Batch] = None
+    dispatched_at: float = 0.0
+    expected_s: float = 0.0
+    hedged: bool = False
+    completed: int = 0
+
+
+class SliceScheduler:
+    def __init__(self, n_slices: int, *, hedge_factor: float = 3.0):
+        self.slices = {i: SliceState(i) for i in range(n_slices)}
+        self.hedge_factor = hedge_factor
+        self.requeued: List[Batch] = []
+        self.hedges = 0
+
+    # --- slice lifecycle ---------------------------------------------------
+    def fail_slice(self, slice_id: int) -> Optional[Batch]:
+        s = self.slices[slice_id]
+        s.healthy = False
+        b, s.inflight = s.inflight, None
+        if b is not None:
+            self.requeued.append(b)
+        return b
+
+    def recover_slice(self, slice_id: int) -> None:
+        self.slices[slice_id].healthy = True
+
+    def resize(self, n_slices: int) -> List[Batch]:
+        """Elastic re-slice (MIG reconfiguration analogue): drop or add
+        slices; in-flight work on dropped slices is re-queued."""
+        dropped: List[Batch] = []
+        for sid in [s for s in self.slices if s >= n_slices]:
+            st = self.slices.pop(sid)
+            if st.inflight is not None:
+                dropped.append(st.inflight)
+        for sid in range(n_slices):
+            self.slices.setdefault(sid, SliceState(sid))
+        self.requeued.extend(dropped)
+        return dropped
+
+    # --- dispatch ------------------------------------------------------------
+    def free_slices(self, now: float) -> List[int]:
+        return [
+            s.slice_id
+            for s in self.slices.values()
+            if s.healthy and s.inflight is None
+        ]
+
+    def dispatch(self, batch: Batch, now: float, expected_s: float) -> Optional[int]:
+        free = self.free_slices(now)
+        if not free:
+            return None
+        sid = min(free, key=lambda i: self.slices[i].completed)
+        s = self.slices[sid]
+        s.inflight = batch
+        s.dispatched_at = now
+        s.expected_s = expected_s
+        s.hedged = False
+        for r in batch.requests:
+            r.dispatched_at = now
+        return sid
+
+    def complete(self, slice_id: int, now: float) -> Optional[Batch]:
+        s = self.slices[slice_id]
+        b, s.inflight = s.inflight, None
+        if b is None:
+            return None
+        s.completed += 1
+        for r in b.requests:
+            r.completed_at = now
+        # cancel any hedge twin still in flight for the same batch
+        for other in self.slices.values():
+            if other.slice_id != slice_id and other.inflight is b:
+                other.inflight = None
+        return b
+
+    def stragglers(self, now: float) -> List[int]:
+        """Slices past hedge_factor x expected execution time."""
+        out = []
+        for s in self.slices.values():
+            if (
+                s.healthy
+                and s.inflight is not None
+                and not s.hedged
+                and s.expected_s > 0
+                and now - s.dispatched_at > self.hedge_factor * s.expected_s
+            ):
+                out.append(s.slice_id)
+        return out
+
+    def hedge(self, slice_id: int, now: float) -> Optional[int]:
+        """Speculatively re-dispatch a straggler's batch to a free slice."""
+        s = self.slices[slice_id]
+        if s.inflight is None:
+            return None
+        free = [x for x in self.free_slices(now) if x != slice_id]
+        if not free:
+            return None
+        twin = self.slices[free[0]]
+        twin.inflight = s.inflight
+        twin.dispatched_at = now
+        twin.expected_s = s.expected_s
+        s.hedged = True
+        self.hedges += 1
+        return twin.slice_id

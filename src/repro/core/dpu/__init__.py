@@ -1,0 +1,7 @@
+from repro.core.dpu.pipeline import (  # noqa: F401
+    ComputeUnit,
+    FunctionalUnit,
+    make_audio_cus,
+    make_image_cu,
+)
+from repro.core.dpu.runtime import DPU, DpuConfig  # noqa: F401

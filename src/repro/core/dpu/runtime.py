@@ -1,0 +1,109 @@
+"""DPU runtime: request-level parallelism over multiple CUs (paper Fig. 10).
+
+Design objectives carried over from the paper:
+  1. latency-centric — single-input requests are preprocessed immediately on
+     arrival (no preprocessing-side batching), maximizing the downstream
+     batcher's freedom;
+  2. throughput via replication — multiple CU instances process independent
+     requests concurrently;
+  3. fine-grained scheduling across CU *types* for audio so Normalize's
+     global-stats barrier never stalls Resample+Mel (Fig. 12c).
+
+`DPU.submit/poll` is the event-driven (simulated-clock) interface used by
+the serving simulator; `DPU.process` is the synchronous real-execution path.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.dpu.pipeline import ComputeUnit, make_audio_cus, make_audio_fused_cu, make_image_cu
+
+
+@dataclass(frozen=True)
+class DpuConfig:
+    modality: str = "audio"         # audio | image
+    n_cus: int = 4                  # CU instances per type
+    backend: str = "cpu"            # cpu | dpu (Pallas kernels)
+    split_audio_cus: bool = True    # False = Fig.12(b) strawman (ablation)
+
+
+class _CuPool:
+    """Instances of one CU type with earliest-free scheduling."""
+
+    def __init__(self, cu: ComputeUnit, n: int):
+        self.cu = cu
+        self.free_at = [0.0] * n
+
+    def schedule(self, now: float, x: Any) -> Tuple[float, float]:
+        """Returns (start, done). Occupies the CU for occupancy_s but the
+        request completes after latency_s (pipelined)."""
+        i = min(range(len(self.free_at)), key=lambda j: self.free_at[j])
+        start = max(now, self.free_at[i])
+        self.free_at[i] = start + self.cu.occupancy_s(x)
+        return start, start + self.cu.latency_s(x)
+
+
+class DPU:
+    def __init__(self, config: DpuConfig):
+        self.config = config
+        if config.modality == "image":
+            self.stages = [_CuPool(make_image_cu(config.backend), config.n_cus)]
+        elif config.split_audio_cus:
+            cu_a, cu_b = make_audio_cus(config.backend)
+            self.stages = [_CuPool(cu_a, config.n_cus), _CuPool(cu_b, config.n_cus)]
+        else:
+            self.stages = [_CuPool(make_audio_fused_cu(config.backend), config.n_cus)]
+        self.processed = 0
+
+    # --- simulated-clock path ------------------------------------------------
+    def submit(self, now: float, x: Any) -> float:
+        """Returns the completion time of preprocessing for one request."""
+        t = now
+        for pool in self.stages:
+            _, t = pool.schedule(t, x)
+        self.processed += 1
+        return t
+
+    # --- real-execution path ---------------------------------------------------
+    def process(self, x: Any) -> Any:
+        for pool in self.stages:
+            x = pool.cu.process(x)
+        self.processed += 1
+        return x
+
+    def latency_s(self, x: Any) -> float:
+        return sum(p.cu.latency_s(x) for p in self.stages)
+
+
+# ---------------------------------------------------------------------------
+# CPU-baseline preprocessing pool (the paper's bottleneck, §3.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CpuPreprocessPool:
+    """Host-core preprocessing: `n_cores` workers, each non-pipelined (a
+    core runs the whole pipeline per request). Models the paper's saturation:
+    demand scales with the number of active inference servers while the core
+    pool is fixed."""
+
+    n_cores: int
+    cost_per_request_s: Callable[[Any], float]
+    free_at: List[float] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.free_at = [0.0] * self.n_cores
+
+    def submit(self, now: float, x: Any) -> float:
+        i = min(range(self.n_cores), key=lambda j: self.free_at[j])
+        start = max(now, self.free_at[i])
+        done = start + self.cost_per_request_s(x)
+        self.free_at[i] = done
+        return done
+
+    def utilization(self, horizon: float) -> float:
+        busy = sum(min(t, horizon) for t in self.free_at)
+        return busy / (self.n_cores * horizon) if horizon > 0 else 0.0

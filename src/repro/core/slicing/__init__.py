@@ -1,0 +1,6 @@
+from repro.core.slicing.mig import (  # noqa: F401
+    SliceSpec,
+    SlicedPod,
+    PARTITION_MENU,
+    partition_pod,
+)

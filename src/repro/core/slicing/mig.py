@@ -1,0 +1,93 @@
+"""MIG-analogue pod slicing (DESIGN.md §2).
+
+NVIDIA MIG partitions one A100 into vGPU slices at GPC granularity with a
+fixed menu (1g.5gb(7x), 2g.10gb(3x), 7g.40gb(1x)). The TPU analogue
+partitions a pod's device grid into disjoint sub-meshes at a 16-chip
+granularity; each slice hosts an independent serving replica. The menu
+mirrors the paper's three design points:
+
+  fine   "1s(16x)"  16 slices x 16 chips   ~ 1g.5gb(7x)
+  medium "4s(4x)"    4 slices x 64 chips   ~ 2g.10gb(3x)
+  full   "16s(1x)"   1 slice  x 256 chips  ~ 7g.40gb(1x)
+
+Like MIG (where 2g.10gb(3x) strands one GPC), a menu entry may strand chips
+if the pod size does not divide; stranded chips are reported, not hidden.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SliceSpec:
+    name: str               # e.g. "1s(16x)"
+    chips_per_slice: int
+    n_slices: int
+
+
+PARTITION_MENU: Dict[str, Tuple[int, ...]] = {
+    # pod chips -> allowed chips_per_slice values
+    "default": (16, 32, 64, 128, 256),
+}
+
+
+def menu_for_pod(pod_chips: int) -> List[SliceSpec]:
+    out = []
+    for cps in PARTITION_MENU["default"]:
+        if cps <= pod_chips:
+            n = pod_chips // cps
+            out.append(SliceSpec(f"{cps//16}s({n}x)", cps, n))
+    return out
+
+
+@dataclass
+class PodSlice:
+    slice_id: int
+    devices: np.ndarray       # flat device array for this slice
+    healthy: bool = True
+
+    def make_mesh(self, model_axis: Optional[int] = None):
+        import jax
+
+        n = self.devices.size
+        model = model_axis or min(16, n)
+        while n % model:
+            model //= 2
+        return jax.sharding.Mesh(
+            self.devices.reshape(n // model, model), ("data", "model")
+        )
+
+
+@dataclass
+class SlicedPod:
+    spec: SliceSpec
+    slices: List[PodSlice]
+    stranded_chips: int = 0
+
+    def healthy_slices(self) -> List[PodSlice]:
+        return [s for s in self.slices if s.healthy]
+
+    def fail(self, slice_id: int) -> None:
+        self.slices[slice_id].healthy = False
+
+    def recover(self, slice_id: int) -> None:
+        self.slices[slice_id].healthy = True
+
+
+def partition_pod(devices: Sequence, chips_per_slice: int) -> SlicedPod:
+    """Partition a flat device list into disjoint slices (elastic: call again
+    with a different granularity to re-slice, the MIG reconfiguration)."""
+    arr = np.asarray(devices, dtype=object).reshape(-1)
+    n = arr.size
+    cps = min(chips_per_slice, n)
+    n_slices = n // cps
+    stranded = n - n_slices * cps
+    slices = [
+        PodSlice(i, arr[i * cps : (i + 1) * cps]) for i in range(n_slices)
+    ]
+    spec = SliceSpec(f"{max(1, cps // 16)}s({n_slices}x)", cps, n_slices)
+    return SlicedPod(spec=spec, slices=slices, stranded_chips=stranded)

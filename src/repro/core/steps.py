@@ -1,0 +1,268 @@
+"""Step factories: jitted train / prefill / decode with sharding attached.
+
+These are the units the dry-run lowers and the serving engine / train loop
+execute. Each factory returns (fn, in_shardings, out_shardings, arg_specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, serve_config
+from repro.distributed import ctx as dctx
+from repro.distributed import sharding as shd
+from repro.models import api, lm
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def _moe_fields(cfg: ModelConfig, mesh, group_axes) -> dict:
+    if not cfg.n_experts or mesh.devices.size == 1:
+        return {}
+    ep = "data" if cfg.n_experts % mesh.shape["data"] == 0 else ""
+    return {
+        "moe_shard_constraints": True,
+        "moe_ep_axis": ep,
+        "moe_group_axes": tuple(group_axes),
+    }
+
+
+def _train_cfg(cfg: ModelConfig, mesh, batch: int) -> ModelConfig:
+    """Attach the attention batch-DP constraint axes when the global batch
+    can occupy the whole mesh (exactly or with GSPMD padding)."""
+    fields = {}
+    # Batch-DP score sharding when the per-microbatch batch can occupy the
+    # mesh (it also shards the remat-saved carry 256-way). Heavily
+    # microbatched archs fall back to clean head-TP (kv_heads % model == 0,
+    # e.g. moonshot) or, for a few hybrid attention layers (jamba), to
+    # head_dim-sharded weights.
+    if mesh.devices.size > 1 and batch >= mesh.devices.size // 2:
+        fields["attn_dp_axes"] = tuple(mesh.axis_names)
+    # MoE groups stay on the single 'data' axis in train (canonical GShard
+    # g<->e transition); (data,model) groups make GSPMD fall back to full
+    # replication in the backward pass.
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    fields.update(_moe_fields(cfg, mesh, dp))
+    return dataclasses.replace(cfg, **fields) if fields else cfg
+
+
+def _serve_cfg(cfg: ModelConfig, mesh) -> ModelConfig:
+    if not shd._small_serve(cfg):  # small models use seq-sharded caches
+        cfg = serve_config(cfg, int(mesh.shape.get("model", 1)))
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    fields = _moe_fields(cfg, mesh, dp)
+    return dataclasses.replace(cfg, **fields) if fields else cfg
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def train_state_specs(cfg: ModelConfig):
+    p = api.param_specs(cfg)
+    f32 = lambda t: jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return {
+        "params": p,
+        "opt": {"mu": f32(p), "nu": f32(p), "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+
+
+def train_state_shardings(cfg: ModelConfig, mesh):
+    rules = shd.train_rules(mesh, cfg)
+    axes = api.param_axes(cfg)
+    pshard = shd.tree_shardings(api.param_specs(cfg), axes, rules, mesh)
+    return {
+        "params": pshard,
+        "opt": {"mu": pshard, "nu": pshard, "step": shd.scalar_sharding(mesh)},
+    }
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = api.init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+# Gradient-accumulation factors for arches whose per-step activation
+# footprint (MoE dispatch slots / attention transients) exceeds HBM at
+# global_batch=256 (see EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES = {
+    "mixtral-8x22b": 2,
+    "jamba-v0.1-52b": 16,
+    "moonshot-v1-16b-a3b": 4,
+    "yi-34b": 1,
+}
+
+
+def make_train_step(cfg: ModelConfig, oc: Optional[OptConfig] = None,
+                    microbatches: int = 1, param_shardings=None):
+    oc = oc or OptConfig()
+
+    def _constrain(tree):
+        """Pin a tree to the parameter shardings: anchors the bf16 cast at
+        the sharded layout (FSDP gathers run in bf16, §Perf A2) and forces
+        weight-grad reduce-scatter instead of f32 all-reduce (§Perf A1)."""
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, param_shardings)
+
+    def loss_fn(params_bf16, batch):
+        loss, metrics = lm.train_loss(params_bf16, batch, cfg)
+        return loss, metrics
+
+    def train_step(state, batch):
+        # Differentiate w.r.t. the bf16 tree (not the f32 master): weight
+        # gradients and their cross-shard reductions then run in bf16 — half
+        # the grad-sync wire bytes (§Perf A1'); the f32 master is only
+        # touched by the optimizer. One cast per step, sharding-anchored so
+        # per-layer FSDP gathers stay in the stored layout.
+        bf16 = _constrain(
+            jax.tree.map(
+                lambda x: x.astype(cfg.dtype) if x.dtype == jnp.float32 else x,
+                state["params"],
+            )
+        )
+        if microbatches == 1:
+            g16, metrics = jax.grad(loss_fn, has_aux=True)(bf16, batch)
+            grads = _constrain(jax.tree.map(lambda g: g.astype(jnp.float32), g16))
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch,
+            )
+
+            def acc(gsum, mbatch):
+                g, m = jax.grad(loss_fn, has_aux=True)(bf16, mbatch)
+                g = _constrain(g)
+                return jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            gsum, ms = jax.lax.scan(acc, zeros, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], oc
+        )
+        metrics = dict(metrics, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def lower_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh, oc=None,
+                     microbatches: Optional[int] = None):
+    if microbatches is None:
+        microbatches = TRAIN_MICROBATCHES.get(cfg.name, 1) if mesh.devices.size > 1 else 1
+    cfg = _train_cfg(cfg, mesh, shape.global_batch // microbatches)
+    rules = shd.train_rules(mesh, cfg)
+    state_specs = train_state_specs(cfg)
+    state_shardings = train_state_shardings(cfg, mesh)
+    batch_specs = api.train_batch_specs(cfg, shape)
+    batch_shardings = shd.batch_shardings(batch_specs, rules, mesh)
+    fn = make_train_step(cfg, oc, microbatches,
+                         param_shardings=state_shardings["params"])
+    jfn = jax.jit(
+        fn,
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    with dctx.mesh_context(mesh):
+        return jfn.lower(state_specs, batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill_fn(params, inputs):
+        return lm.prefill(
+            params,
+            inputs["tokens"],
+            cfg,
+            img_embeds=inputs.get("img_embeds"),
+            audio_frames=inputs.get("audio_frames"),
+        )
+
+    return prefill_fn
+
+
+def make_decode(cfg: ModelConfig):
+    def decode_fn(params, inputs):
+        return lm.decode(params, inputs["cache"], inputs["tokens"], inputs["pos"], cfg)
+
+    return decode_fn
+
+
+def serve_param_shardings(cfg: ModelConfig, mesh):
+    rules = shd.serve_rules(mesh, cfg)
+    return shd.tree_shardings(
+        api.param_specs(cfg, dtype=cfg.dtype), api.param_axes(cfg), rules, mesh
+    )
+
+
+def serve_cache_shardings(cfg: ModelConfig, mesh, batch: int, cache_len: int):
+    rules = shd.serve_rules(mesh, cfg)
+    return shd.tree_shardings(
+        api.cache_specs(cfg, batch, cache_len),
+        api.cache_axes(cfg, batch, cache_len),
+        rules,
+        mesh,
+    )
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    cfg = _serve_cfg(cfg, mesh)
+    rules = shd.serve_rules(mesh, cfg)
+    pspecs = api.param_specs(cfg, dtype=cfg.dtype)
+    pshard = serve_param_shardings(cfg, mesh)
+    ispecs = api.prefill_input_specs(cfg, shape)
+    ishard = shd.batch_shardings(ispecs, rules, mesh)
+    cshard = serve_cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+    fn = make_prefill(cfg)
+    jfn = jax.jit(
+        fn,
+        in_shardings=(pshard, ishard),
+        out_shardings=(None, cshard),
+    )
+    with dctx.mesh_context(mesh):
+        return jfn.lower(pspecs, ispecs)
+
+
+def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    cfg = _serve_cfg(cfg, mesh)
+    rules = shd.serve_rules(mesh, cfg)
+    pspecs = api.param_specs(cfg, dtype=cfg.dtype)
+    pshard = serve_param_shardings(cfg, mesh)
+    ispecs = api.decode_input_specs(cfg, shape)
+    cshard = serve_cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+    ishard = {
+        "cache": cshard,
+        "tokens": shd.batch_shardings(ispecs["tokens"], rules, mesh),
+        "pos": shd.scalar_sharding(mesh),
+    }
+    fn = make_decode(cfg)
+    jfn = jax.jit(
+        fn,
+        in_shardings=(pshard, ishard),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+    with dctx.mesh_context(mesh):
+        return jfn.lower(pspecs, ispecs)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, oc=None):
+    """Lower the step function an (arch x shape) cell calls for."""
+    if shape.kind == "train":
+        return lower_train_step(cfg, shape, mesh, oc)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh)
+    return lower_decode(cfg, shape, mesh)

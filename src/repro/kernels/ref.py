@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every DPU kernel (numerics mirror
+repro.data.preprocess_cpu; tests assert_allclose pallas-vs-ref)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import preprocess_cpu as pp
+
+# ---------------------------------------------------------------------------
+# Audio
+# ---------------------------------------------------------------------------
+
+
+def mel_spectrogram_ref(frames: jax.Array, cr: jax.Array, ci: jax.Array,
+                        fb: jax.Array) -> jax.Array:
+    """frames: [N, n_fft] (already framed+windowed+padded); cr/ci: [n_fft, F];
+    fb: [F, n_mels]. Returns log-mel [N, n_mels]."""
+    re = frames @ cr
+    im = frames @ ci
+    power = re * re + im * im
+    return jnp.log(power @ fb + 1e-6)
+
+
+def audio_normalize_ref(feats: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-utterance 3-phase normalize over the frame axis. feats: [T, F]."""
+    mu = jnp.mean(feats, axis=0, keepdims=True)
+    var = jnp.mean((feats - mu) ** 2, axis=0, keepdims=True)
+    return (feats - mu) / jnp.sqrt(var + eps)
+
+
+def audio_resample_ref(x: jax.Array, h: jax.Array, down: int) -> jax.Array:
+    """FIR decimation: y[i] = sum_k h[k] * xp[i*down + k] on the pre-padded
+    signal xp (padding applied by the op wrapper). x: [L], h: [taps]."""
+    taps = h.shape[0]
+    n_out = (x.shape[0] - taps) // down + 1
+    idx = jnp.arange(n_out)[:, None] * down + jnp.arange(taps)[None, :]
+    return (x[idx] * h[None, :]).sum(-1)
+
+
+# ---------------------------------------------------------------------------
+# Image
+# ---------------------------------------------------------------------------
+
+
+def jpeg_idct_ref(coeffs: jax.Array, qtable: jax.Array) -> jax.Array:
+    """coeffs: [NB, 8, 8] quantized DCT blocks; returns [NB, 8, 8] pixels."""
+    m = jnp.asarray(pp.idct_matrix())
+    deq = coeffs.astype(jnp.float32) * qtable.astype(jnp.float32)[None]
+    return jnp.einsum("ij,bjk,lk->bil", m, deq, m) + 128.0
+
+
+def image_resize_ref(img: jax.Array, ry: jax.Array, rx: jax.Array) -> jax.Array:
+    """Separable bilinear resize: ry: [H_out, H], rx: [W_out, W]; img: [H, W]."""
+    return ry @ img @ rx.T
+
+
+def image_normalize_ref(img: jax.Array, mean: float, std: float) -> jax.Array:
+    return (img - mean) / std
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """Flash-decode oracle. q: [B, H, D]; k,v: [B, S, KH, D]; valid_len: [B]
+    (number of valid cache slots, prefix-valid layout). GQA via H = KH*G."""
+    B, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k.astype(jnp.float32)) / jnp.sqrt(D * 1.0)
+    mask = jnp.arange(S)[None] < valid_len[:, None]  # [B, S]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D)

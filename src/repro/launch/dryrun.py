@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices, record memory/cost/roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, both meshes
+
+Results are cached per-cell as JSON under --out; EXPERIMENTS.md tables are
+generated from these by benchmarks/roofline_table.py.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             force: bool = False, save_hlo: bool = False) -> dict:
+    import jax
+
+    from repro.analysis import roofline
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.core import steps
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    out_path = out_dir / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": why,
+               "arch": arch, "shape": shape_name, "mesh": mesh_name}
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        with mesh:
+            lowered = steps.lower_cell(cfg, shape, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+        report = roofline.build_report(cfg, shape, mesh_name, chips, compiled, hlo_text)
+        mem_fields = {
+            k: float(getattr(mem, k, 0) or 0)
+            for k in (
+                "temp_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+        }
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec = {
+            "cell": cell_id, "status": "ok", "arch": arch, "shape": shape_name,
+            "mesh": mesh_name, "chips": chips,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "memory_analysis": mem_fields,
+            "bytes_per_device": (
+                mem_fields["argument_size_in_bytes"]
+                + mem_fields["temp_size_in_bytes"]
+                + mem_fields["output_size_in_bytes"]
+                - mem_fields["alias_size_in_bytes"]
+            ),
+            "cost_analysis": {k: float(v) for k, v in dict(cost).items()
+                              if isinstance(v, (int, float))},
+            "roofline": report.to_dict(),
+        }
+        if save_hlo:
+            (out_dir / f"{cell_id}.hlo.txt").write_text(hlo_text)
+    except Exception as e:  # noqa: BLE001 — recorded as a failed cell
+        rec = {"cell": cell_id, "status": "error", "arch": arch,
+               "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    from repro.configs import ASSIGNED_ARCHS, SHAPES
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    n_fail = 0
+    for arch, shape, multi in cells:
+        rec = run_cell(arch, shape, multi, out_dir, args.force, args.save_hlo)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (
+                f" bottleneck={r['bottleneck']}"
+                f" t=({r['t_compute']:.3e},{r['t_memory']:.3e},{r['t_collective']:.3e})s"
+                f" mem/dev={rec['bytes_per_device']/2**30:.2f}GiB"
+                f" compile={rec.get('compile_s', 0):.0f}s"
+            )
+        elif status == "error":
+            n_fail += 1
+            extra = " " + rec["error"][:200]
+        print(f"[{status:7s}] {rec['cell']}{extra}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

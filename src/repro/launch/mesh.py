@@ -1,0 +1,31 @@
+"""Production mesh construction (per brief): 16x16 single-pod, 2x16x16
+multi-pod. A function, not a module constant, so importing never touches
+jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_slice_mesh(devices, axes=("data", "model")):
+    """Mesh over an explicit device subset (vGPU-analogue slices)."""
+    import numpy as np
+
+    arr = np.array(devices)
+    n = arr.size
+    model = 1
+    for m in (16, 8, 4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.sharding.Mesh(arr.reshape(n // model, model), axes)

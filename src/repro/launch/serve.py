@@ -1,0 +1,44 @@
+"""Serving launcher: PREBA inference server over a (sliced) pod or locally.
+
+Local smoke: PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+                 --reduced --requests 32 --rate 50
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=50.0)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.serving.engine import EngineConfig, build_engine
+    from repro.serving.requests import WorkloadSpec, generate_requests
+
+    cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    engine = build_engine(cfg, ec=EngineConfig(max_new_tokens=args.max_new))
+    reqs = generate_requests(
+        WorkloadSpec(modality="text", rate_qps=args.rate, mean_len=48, max_len=120),
+        args.requests,
+    )
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run_until_idle()
+    lats = [r.completed_at - r.dispatched_at for r in done]
+    print(
+        f"served {len(done)} requests in {len(set(id(b) for b in []) ) or ''}"
+        f"{engine.batcher.formed} batches; "
+        f"exec p50={1e3*np.percentile(lats,50):.1f}ms p95={1e3*np.percentile(lats,95):.1f}ms"
+    )
+
+
+if __name__ == "__main__":
+    main()

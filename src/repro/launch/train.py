@@ -1,0 +1,51 @@
+"""Training launcher.
+
+Local smoke:      PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+                      --reduced --steps 20 --batch 4 --seq 64
+Pod (real TPUs):  run under your cluster runtime with jax.distributed; the
+                  mesh comes from make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_local_mesh, make_production_mesh
+    from repro.training.optimizer import OptConfig
+    from repro.training.train_loop import TrainLoopConfig, train
+
+    cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = (
+        make_production_mesh(multi_pod=args.multi_pod)
+        if args.production_mesh
+        else make_local_mesh()
+    )
+    dc = DataConfig(global_batch=args.batch, seq_len=args.seq)
+    tc = TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        microbatches=args.microbatches,
+    )
+    out = train(cfg, mesh, dc, tc, OptConfig(lr=args.lr, total_steps=args.steps))
+    print(f"done: {out['steps']} steps, final loss {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Public model API: build per-arch step inputs (real or abstract) and expose
+init/loss/prefill/decode uniformly. `input_specs` returns weak-type-correct
+ShapeDtypeStructs for the dry-run (no allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.lm import (  # noqa: F401  (re-exports)
+    cache_axes,
+    cache_specs,
+    count_params_analytical,
+    decode,
+    forward,
+    init_params,
+    param_axes,
+    param_specs,
+    prefill,
+    train_loss,
+)
+
+
+def frontend_stub_specs(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Modality-frontend stand-ins (precomputed frame/patch embeddings)."""
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.enc_layers:
+        out["audio_frames"] = jax.ShapeDtypeStruct((batch, cfg.n_audio_ctx, cfg.d_model), dt)
+    if cfg.n_img_tokens:
+        out["img_embeds"] = jax.ShapeDtypeStruct((batch, cfg.n_img_tokens, cfg.d_model), dt)
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    specs.update(frontend_stub_specs(cfg, b))
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    specs.update(frontend_stub_specs(cfg, b))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "cache": cache_specs(cfg, b, s),
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, key) -> Dict[str, Any]:
+    """Materialized random batch (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.enc_layers:
+        out["audio_frames"] = jax.random.normal(k3, (batch, cfg.n_audio_ctx, cfg.d_model), dt)
+    if cfg.n_img_tokens:
+        out["img_embeds"] = jax.random.normal(k3, (batch, cfg.n_img_tokens, cfg.d_model), dt)
+    return out

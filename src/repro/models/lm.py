@@ -1,0 +1,731 @@
+"""Unified scan-based LM covering all assigned families.
+
+One parameter-definition tree drives init / abstract specs / shardings; the
+forward pass interprets per-layer *kinds* from the config (attn/ssm mixer,
+mlp/moe ffn, optional cross-attention for enc-dec). Layer stacks are grouped
+into a scanned `body` of identical blocks (period = lcm of the kind pattern)
+plus an unrolled `prefix` (e.g. moonshot's leading dense layer), which keeps
+the lowered HLO small enough to compile 512-way GSPMD programs quickly.
+
+GQA tensors are factored as [kv_heads, q_per_kv, head_dim] throughout so the
+kv_heads axis can be model-sharded without reshapes (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | dt_bias | a_log
+    scale: float = 0.02
+    dtype: Optional[str] = None
+    tags: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def block_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p = cfg.attn_every
+    if cfg.n_experts and cfg.moe_every > 1:
+        p = int(p * cfg.moe_every // math.gcd(p, cfg.moe_every))
+    return p
+
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, kh, hd = cfg.d_model, cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kh
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "ln": ParamDef((d,), (None,), "ones"),
+        "wq": ParamDef((d, kh, g, hd), ("embed", "kv_heads", None, "head_dim")),
+        "wk": ParamDef((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((kh, g, hd, d), ("kv_heads", None, "head_dim", "embed"), scale=out_scale),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, d_ff: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "ln": ParamDef((d,), (None,), "ones"),
+        "wi_gate": ParamDef((d, d_ff), ("embed", "mlp")),
+        "wi_up": ParamDef((d, d_ff), ("embed", "mlp")),
+        "wo": ParamDef((d_ff, d), ("mlp", "embed"), scale=out_scale),
+    }
+
+
+def _moe_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, e = cfg.d_model, cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    defs = {
+        "ln": ParamDef((d,), (None,), "ones"),
+        "router": ParamDef((d, e), ("embed", None)),
+        "wi_gate": ParamDef((e, d, f), ("expert", "expert_embed", "expert_mlp"), tags=("expert",)),
+        "wi_up": ParamDef((e, d, f), ("expert", "expert_embed", "expert_mlp"), tags=("expert",)),
+        "wo": ParamDef((e, f, d), ("expert", "expert_mlp", "expert_embed"), scale=out_scale, tags=("expert",)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        defs["shared"] = {
+            "wi_gate": ParamDef((d, fs), ("embed", "mlp")),
+            "wi_up": ParamDef((d, fs), ("embed", "mlp")),
+            "wo": ParamDef((fs, d), ("mlp", "embed"), scale=out_scale),
+        }
+    return defs
+
+
+def _ssm_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, cd, h = cfg.d_inner, cfg.conv_dim, cfg.n_ssm_heads
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "ln": ParamDef((d,), (None,), "ones"),
+        "in_z": ParamDef((d, di), ("embed", "ssm_inner")),
+        "in_xbc": ParamDef((d, cd), ("embed", "ssm_conv")),
+        "in_dt": ParamDef((d, h), ("embed", "ssm_heads")),
+        "conv_w": ParamDef((cd, cfg.ssm_conv), ("ssm_conv", None), scale=0.1),
+        "conv_b": ParamDef((cd,), ("ssm_conv",), "zeros"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), "dt_bias"),
+        "A_log": ParamDef((h,), ("ssm_heads",), "a_log"),
+        "D": ParamDef((h,), ("ssm_heads",), "ones"),
+        "norm_w": ParamDef((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed"), scale=out_scale),
+    }
+
+
+def _sublayer_defs(cfg: ModelConfig, kind: Tuple[str, str], with_xattn: bool) -> Dict[str, Any]:
+    mixer, ffn = kind
+    sub: Dict[str, Any] = {}
+    sub["mixer"] = _attn_defs(cfg) if mixer == "attn" else _ssm_defs(cfg)
+    if with_xattn:
+        sub["xattn"] = _attn_defs(cfg)
+    if ffn == "mlp":
+        sub["ffn"] = _mlp_defs(cfg, cfg.d_ff)
+    elif ffn == "moe":
+        sub["ffn"] = _moe_defs(cfg)
+    return sub
+
+
+def _block_defs(cfg: ModelConfig, kinds, with_xattn) -> Dict[str, Any]:
+    return {f"l{i}": _sublayer_defs(cfg, k, with_xattn) for i, k in enumerate(kinds)}
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(
+        lambda pd: ParamDef(
+            (n,) + pd.shape, ("layers",) + pd.axes, pd.init, pd.scale, pd.dtype, pd.tags
+        ),
+        tree,
+        is_leaf=is_param_def,
+    )
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    kinds = cfg.layer_kinds()
+    p = block_period(cfg)
+    npre = cfg.first_k_dense
+    body_kinds = kinds[npre:]
+    assert len(body_kinds) % p == 0, (cfg.name, len(body_kinds), p)
+    nb = len(body_kinds) // p
+    with_xattn = cfg.enc_layers > 0
+
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, d), ("vocab", "embed")),
+        "final_ln": ParamDef((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.padded_vocab), ("embed", "vocab"))
+    if npre:
+        defs["prefix"] = {
+            f"l{i}": _sublayer_defs(cfg, kinds[i], with_xattn) for i in range(npre)
+        }
+    defs["body"] = _stack(_block_defs(cfg, body_kinds[:p], with_xattn), nb)
+    if cfg.enc_layers:
+        enc_block = {
+            "mixer": _attn_defs(cfg),
+            "ffn": _mlp_defs(cfg, cfg.d_ff),
+        }
+        defs["encoder"] = {
+            "blocks": _stack(enc_block, cfg.enc_layers),
+            "ln": ParamDef((d,), (None,), "ones"),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Init / specs / counting
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype: Optional[str] = None):
+    defs = model_defs(cfg)
+    dt = jnp.dtype(dtype or cfg.param_dtype)
+    flat, treedef = jax.tree.flatten_with_path(defs, is_leaf=is_param_def)
+
+    def one(path, pd: ParamDef):
+        k = jax.random.fold_in(
+            key, zlib.crc32(jax.tree_util.keystr(path).encode()) % (2**31)
+        )
+        d = jnp.dtype(pd.dtype) if pd.dtype else dt
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, d)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, d)
+        if pd.init == "dt_bias":
+            dt_ = jnp.exp(
+                jax.random.uniform(k, pd.shape, jnp.float32)
+                * (math.log(0.1) - math.log(0.001))
+                + math.log(0.001)
+            )
+            return (dt_ + jnp.log(-jnp.expm1(-dt_))).astype(d)
+        if pd.init == "a_log":
+            return jnp.log(
+                jax.random.uniform(k, pd.shape, jnp.float32, 1.0, 16.0)
+            ).astype(d)
+        return (jax.random.normal(k, pd.shape, jnp.float32) * pd.scale).astype(d)
+
+    leaves = [one(p, pd) for p, pd in flat]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def param_specs(cfg: ModelConfig, dtype: Optional[str] = None):
+    dt = jnp.dtype(dtype or cfg.param_dtype)
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, jnp.dtype(pd.dtype) if pd.dtype else dt),
+        model_defs(cfg),
+        is_leaf=is_param_def,
+    )
+
+
+def param_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda pd: pd.axes, model_defs(cfg), is_leaf=is_param_def)
+
+
+def count_params_analytical(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = 0
+    for pd in jax.tree.leaves(model_defs(cfg), is_leaf=is_param_def):
+        n = math.prod(pd.shape)
+        if active_only and "expert" in pd.tags:
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cache definitions (must mirror what prefill emits / decode consumes;
+# enforced by tests against jax.eval_shape of prefill)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CacheDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+
+
+def is_cache_def(x) -> bool:
+    return isinstance(x, CacheDef)
+
+
+def ring_len(cfg: ModelConfig, cache_len: int) -> int:
+    return min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
+
+
+def _sublayer_cache_defs(cfg, kind, with_xattn, batch, cache_len):
+    mixer, _ = kind
+    wc = ring_len(cfg, cache_len)
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    sub: Dict[str, Any] = {}
+    if mixer == "attn":
+        sub["mixer"] = {
+            "k": CacheDef((batch, wc, kh, hd), ("batch", "seq", "kv_heads", "head_dim"), cfg.dtype),
+            "v": CacheDef((batch, wc, kh, hd), ("batch", "seq", "kv_heads", "head_dim"), cfg.dtype),
+        }
+    else:
+        sub["mixer"] = {
+            "conv": CacheDef(
+                (batch, cfg.ssm_conv - 1, cfg.conv_dim), ("batch", None, "ssm_conv"), cfg.dtype
+            ),
+            "state": CacheDef(
+                (batch, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                ("batch", "ssm_heads", None, None),
+                "float32",
+            ),
+        }
+    if with_xattn:
+        sub["xattn"] = {
+            "ck": CacheDef(
+                (batch, cfg.n_audio_ctx, kh, hd), ("batch", "seq", "kv_heads", "head_dim"), cfg.dtype
+            ),
+            "cv": CacheDef(
+                (batch, cfg.n_audio_ctx, kh, hd), ("batch", "seq", "kv_heads", "head_dim"), cfg.dtype
+            ),
+        }
+    return sub
+
+
+def _stack_cache(tree, n):
+    return jax.tree.map(
+        lambda cd: CacheDef((n,) + cd.shape, ("layers",) + cd.axes, cd.dtype),
+        tree,
+        is_leaf=is_cache_def,
+    )
+
+
+def cache_defs(cfg: ModelConfig, batch: int, cache_len: int):
+    kinds = cfg.layer_kinds()
+    p = block_period(cfg)
+    npre = cfg.first_k_dense
+    nb = (len(kinds) - npre) // p
+    with_xattn = cfg.enc_layers > 0
+    defs: Dict[str, Any] = {}
+    if npre:
+        defs["prefix"] = {
+            f"l{i}": _sublayer_cache_defs(cfg, kinds[i], with_xattn, batch, cache_len)
+            for i in range(npre)
+        }
+    block = {
+        f"l{i}": _sublayer_cache_defs(cfg, kinds[npre + i], with_xattn, batch, cache_len)
+        for i in range(p)
+    }
+    defs["body"] = _stack_cache(block, nb)
+    return defs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(
+        lambda cd: jax.ShapeDtypeStruct(cd.shape, jnp.dtype(cd.dtype)),
+        cache_defs(cfg, batch, cache_len),
+        is_leaf=is_cache_def,
+    )
+
+
+def cache_axes(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(
+        lambda cd: cd.axes, cache_defs(cfg, batch, cache_len), is_leaf=is_cache_def
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=None,
+                  make_cache=False, cache_len=0):
+    """Self- or cross-attention sublayer (pre-norm residual added by caller).
+
+    x: [B,S,D] normed input; kv_x: encoder output for cross-attn (no rope).
+    Returns (out, cache_entry|None).
+    """
+    dt = x.dtype
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
+    src = kv_x if kv_x is not None else x
+    k = jnp.einsum("bsd,dkh->bskh", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkh->bskh", src, p["wv"].astype(dt))
+    q = L.constrain_batch_dp(q, cfg.attn_dp_axes)
+    k = L.constrain_batch_dp(k, cfg.attn_dp_axes)
+    v = L.constrain_batch_dp(v, cfg.attn_dp_axes)
+    if kv_x is None:
+        qpos = pos0 + jnp.arange(S, dtype=jnp.int32)
+        kpos_ = qpos
+        q = _rope4(q, qpos, cfg.rope_theta)
+        k = L.apply_rope(k, qpos, cfg.rope_theta)
+    else:
+        qpos = jnp.arange(S, dtype=jnp.int32)
+        kpos_ = kpos if kpos is not None else jnp.arange(k.shape[1], dtype=jnp.int32)
+    kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
+    qf = q.reshape(B, S, kh * g, hd)
+    o = L.attention(
+        qf, k, v, qpos, kpos_, causal=(causal and kv_x is None), window=window, pos0=pos0
+    )
+    o = L.constrain_batch_dp(o.reshape(B, S, kh, g, hd), cfg.attn_dp_axes)
+    out = jnp.einsum("bskgh,kghd->bsd", o, p["wo"].astype(dt))
+    cache = None
+    if make_cache:
+        if kv_x is not None:
+            cache = {"ck": k, "cv": v}
+        else:
+            wc = ring_len(cfg, cache_len)
+            slots = jnp.arange(S - wc, S, dtype=jnp.int32) % wc
+            ck = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(k[:, S - wc :])
+            cv = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(v[:, S - wc :])
+            cache = {"k": ck, "v": cv}
+    return out, cache
+
+
+def _rope4(q, pos, theta):
+    """RoPE on [B,S,KH,G,D] (factored GQA heads)."""
+    b, s, kh, g, d = q.shape
+    out = L.apply_rope(q.reshape(b, s, kh * g, d), pos, theta)
+    return out.reshape(b, s, kh, g, d)
+
+
+def _attn_decode(x, p, cfg, cache, pos):
+    """Single-token attention. x: [B,1,D]; cache: {'k','v'} ring buffers."""
+    dt = x.dtype
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
+    k1 = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
+    v1 = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
+    pos_arr = pos[None].astype(jnp.int32)
+    q = _rope4(q, pos_arr, cfg.rope_theta)
+    k1 = L.apply_rope(k1, pos_arr, cfg.rope_theta)
+    wc = cache["k"].shape[1]
+    idx = (pos % wc).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), idx, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), idx, 1)
+    j = jnp.arange(wc, dtype=jnp.int32)
+    kpos = pos - jnp.mod(pos - j, wc)
+    kpos = jnp.where(kpos >= 0, kpos, -1)
+    kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
+    o = L.attention_dense(
+        q.reshape(B, 1, kh * g, hd), ck, cv, pos_arr, kpos, causal=True, window=0
+    )
+    out = jnp.einsum("bskgh,kghd->bsd", o.reshape(B, 1, kh, g, hd), p["wo"].astype(dt))
+    return out, {"k": ck, "v": cv}
+
+
+def _xattn_decode(x, p, cfg, cache):
+    dt = x.dtype
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
+    ck, cv = cache["ck"], cache["cv"]
+    kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
+    kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    qpos = jnp.zeros((1,), jnp.int32)
+    o = L.attention_dense(
+        q.reshape(B, 1, kh * g, hd), ck, cv, qpos, kpos, causal=False, window=0
+    )
+    out = jnp.einsum("bskgh,kghd->bsd", o.reshape(B, 1, kh, g, hd), p["wo"].astype(dt))
+    return out
+
+
+def _ffn_forward(x, sub, cfg, kind):
+    _, ffn = kind
+    if ffn == "none":
+        return x, 0.0
+    h = L.rmsnorm(x, sub["ffn"]["ln"], cfg.norm_eps)
+    if ffn == "moe":
+        if cfg.moe_shard_constraints and cfg.moe_group_axes:
+            # explicit batch->'data' reshard at MoE entry: GSPMD otherwise
+            # lowers the (data,model)->(data) transition at the shard_map
+            # boundary as permute+all-reduce chains (~480 GiB on mixtral)
+            from jax.sharding import PartitionSpec as P
+
+            h = jax.lax.with_sharding_constraint(
+                h, P(tuple(cfg.moe_group_axes), None, None)
+            )
+        y, aux = L.moe(h, sub["ffn"], cfg)
+        return x + y, aux
+    return x + L.mlp(h, sub["ffn"]), 0.0
+
+
+def _sublayer_forward(x, sub, cfg, kind, *, enc_out, mode, cache_len):
+    """Full-sequence sublayer. Returns (x, aux, cache_entry)."""
+    mixer, _ = kind
+    cache_entry: Dict[str, Any] = {}
+    make_cache = mode == "prefill"
+    if mixer == "attn":
+        h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
+        o, c = _attn_forward(
+            h, sub["mixer"], cfg, causal=True, window=cfg.sliding_window,
+            make_cache=make_cache, cache_len=cache_len,
+        )
+        x = x + o
+        if make_cache:
+            cache_entry["mixer"] = c
+    else:
+        h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
+        if make_cache:
+            o, (conv_tail, fstate) = L.ssm_block(h, sub["mixer"], cfg, return_state=True)
+            cache_entry["mixer"] = {"conv": conv_tail, "state": fstate}
+        else:
+            o = L.ssm_block(h, sub["mixer"], cfg)
+        x = x + o
+    if "xattn" in sub:
+        h = L.rmsnorm(x, sub["xattn"]["ln"], cfg.norm_eps)
+        o, c = _attn_forward(
+            h, sub["xattn"], cfg, causal=False, kv_x=enc_out, make_cache=make_cache
+        )
+        x = x + o
+        if make_cache:
+            cache_entry["xattn"] = c
+    x, aux = _ffn_forward(x, sub, cfg, kind)
+    return x, aux, cache_entry
+
+
+def _sublayer_decode(x, sub, cache_sub, cfg, kind, pos):
+    mixer, _ = kind
+    new_cache: Dict[str, Any] = {}
+    if mixer == "attn":
+        h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
+        o, c = _attn_decode(h, sub["mixer"], cfg, cache_sub["mixer"], pos)
+        x = x + o
+        new_cache["mixer"] = c
+    else:
+        h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
+        o, (conv, state) = L.ssm_block_decode(
+            h, sub["mixer"], cfg, cache_sub["mixer"]["conv"], cache_sub["mixer"]["state"]
+        )
+        x = x + o
+        new_cache["mixer"] = {"conv": conv, "state": state}
+    if "xattn" in sub:
+        h = L.rmsnorm(x, sub["xattn"]["ln"], cfg.norm_eps)
+        x = x + _xattn_decode(h, sub["xattn"], cfg, cache_sub["xattn"])
+        new_cache["xattn"] = cache_sub["xattn"]
+    x, _ = _ffn_forward(x, sub, cfg, kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+
+def encode_audio(params, audio_frames, cfg):
+    """audio_frames: [B, n_audio_ctx, d_model] stub embeddings (post-conv)."""
+    x = audio_frames.astype(_cdt(cfg))
+    enc = params["encoder"]
+
+    def body(x, bp):
+        h = L.rmsnorm(x, bp["mixer"]["ln"], cfg.norm_eps)
+        o, _ = _attn_forward(h, bp["mixer"], cfg, causal=False)
+        x = x + o
+        h = L.rmsnorm(x, bp["ffn"]["ln"], cfg.norm_eps)
+        x = x + L.mlp(h, bp["ffn"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return L.rmsnorm(x, enc["ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Top-level forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _kinds_for(cfg):
+    kinds = cfg.layer_kinds()
+    p = block_period(cfg)
+    npre = cfg.first_k_dense
+    return kinds[:npre], tuple(kinds[npre : npre + p])
+
+
+def forward(params, tokens, cfg: ModelConfig, *, mode: str = "train",
+            img_embeds=None, audio_frames=None, cache_len: int = 0):
+    """mode: 'train' -> (hidden, aux); 'prefill' -> (hidden_last, cache)."""
+    assert mode in ("train", "prefill")
+    dt = _cdt(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.n_img_tokens and img_embeds is not None:
+        n = cfg.n_img_tokens
+        x = jnp.concatenate([img_embeds.astype(dt), x[:, n:]], axis=1)
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = encode_audio(params, audio_frames, cfg)
+
+    pre_kinds, body_kinds = _kinds_for(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    prefix_cache: Dict[str, Any] = {}
+    for i, kind in enumerate(pre_kinds):
+        sub = params["prefix"][f"l{i}"]
+        x, a, ce = _sublayer_forward(
+            x, sub, cfg, kind, enc_out=enc_out, mode=mode, cache_len=cache_len
+        )
+        aux = aux + a
+        if mode == "prefill":
+            prefix_cache[f"l{i}"] = ce
+
+    def _make_sub(kind):
+        def sub_fn(x, sub, enc):
+            return _sublayer_forward(
+                x, sub, cfg, kind, enc_out=enc, mode=mode, cache_len=cache_len
+            )
+
+        if cfg.remat and mode == "train":
+            # Per-sublayer remat: hybrid blocks hold several MoE sublayers
+            # per scan iteration; without this the backward keeps all their
+            # dispatched-slot tensors alive at once (jamba: ~90 GB/chip).
+            return jax.checkpoint(sub_fn, prevent_cse=False)
+        return sub_fn
+
+    sub_fns = [_make_sub(kind) for kind in body_kinds]
+
+    def block_fn(carry, bp):
+        x, aux = carry
+        cache_block = {}
+        for i, kind in enumerate(body_kinds):
+            x, a, ce = sub_fns[i](x, bp[f"l{i}"], enc_out)
+            aux = aux + a
+            cache_block[f"l{i}"] = ce
+        # Remat saves the scan carry per block; constraining it to
+        # batch x (all mesh axes) shards the saved activations 256-way
+        # instead of 16-way (yi train_4k: 56 GB -> 3.5 GB per chip).
+        x = L.constrain_batch_dp(x, cfg.attn_dp_axes)
+        return (x, aux), (cache_block if mode == "prefill" else None)
+
+    body = jax.checkpoint(block_fn, prevent_cse=False) if (cfg.remat and mode == "train") else block_fn
+    (x, aux), body_cache = jax.lax.scan(body, (x, aux), params["body"])
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+
+    if mode == "train":
+        return x, aux
+    cache = {}
+    if pre_kinds:
+        cache["prefix"] = prefix_cache
+    cache["body"] = body_cache
+    return x, cache
+
+
+def logits_from_hidden(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    return logits[..., : cfg.vocab]  # strip sharding-pad vocab slots
+
+
+def decode(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: [B,1] int32; pos: scalar int32 (current
+    absolute position being written). Returns (logits [B,1,V], new_cache)."""
+    dt = _cdt(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    pre_kinds, body_kinds = _kinds_for(cfg)
+
+    new_cache: Dict[str, Any] = {}
+    if pre_kinds:
+        new_prefix = {}
+        for i, kind in enumerate(pre_kinds):
+            x, nc = _sublayer_decode(
+                x, params["prefix"][f"l{i}"], cache["prefix"][f"l{i}"], cfg, kind, pos
+            )
+            new_prefix[f"l{i}"] = nc
+        new_cache["prefix"] = new_prefix
+
+    # The body cache rides in the scan *carry* and is updated in place with
+    # dynamic_update_index (scan xs->ys would double-buffer the whole KV
+    # cache: +2 copies, e.g. +16 GB/chip on yi decode_32k).
+    nb = jax.tree.leaves(params["body"])[0].shape[0]
+
+    def block_fn(carry, xs):
+        x, cbody = carry
+        bp, i = xs
+        cb = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False), cbody
+        )
+        ncb = {}
+        for li, kind in enumerate(body_kinds):
+            x, nc = _sublayer_decode(x, bp[f"l{li}"], cb[f"l{li}"], cfg, kind, pos)
+            ncb[f"l{li}"] = nc
+        cbody = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, i, 0), cbody, ncb
+        )
+        return (x, cbody), None
+
+    (x, new_body), _ = jax.lax.scan(
+        block_fn, (x, cache["body"]), (params["body"], jnp.arange(nb))
+    )
+    new_cache["body"] = new_body
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return logits_from_hidden(params, x, cfg), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, img_embeds=None, audio_frames=None):
+    """Full-sequence prefill. Returns (last-position logits [B,1,V], cache)."""
+    x, cache = forward(
+        params, tokens, cfg, mode="prefill",
+        img_embeds=img_embeds, audio_frames=audio_frames,
+        cache_len=tokens.shape[1],
+    )
+    logits = logits_from_hidden(params, x[:, -1:], cfg)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence to bound logits memory)
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent_chunked(params, x, labels, cfg, chunk: int = 2048):
+    """x: [B,S,D] final hidden; labels int32 [B,S] (-100 = ignore).
+    Computes CE + z-loss scanning over sequence chunks (logits for a 163k
+    vocab at 1M tokens would otherwise need ~0.7 TB)."""
+    B, S, D = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    xs = jnp.moveaxis(x.reshape(B, nc, c, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+
+    def body(carry, inp):
+        nll_sum, z_sum, count = carry
+        xc, lc = inp
+        logits = logits_from_hidden(params, xc, cfg)  # fp32 [B,c,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        return (
+            nll_sum + jnp.sum(nll),
+            z_sum + jnp.sum(lse * lse * mask),
+            count + jnp.sum(mask),
+        ), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (nll_sum, z_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32),) * 3, (xs, ls)
+    )
+    count = jnp.maximum(count, 1.0)
+    return nll_sum / count, z_sum / count
+
+
+def train_loss(params, batch, cfg: ModelConfig, z_loss_weight: float = 1e-4):
+    x, aux = forward(
+        params, batch["tokens"], cfg, mode="train",
+        img_embeds=batch.get("img_embeds"), audio_frames=batch.get("audio_frames"),
+    )
+    nll, z2 = softmax_xent_chunked(params, x, batch["labels"], cfg)
+    loss = nll + z_loss_weight * z2 + aux
+    return loss, {"loss": loss, "nll": nll, "aux": aux}

@@ -1,0 +1,63 @@
+"""Head-padding transform for tensor-parallel serving (DESIGN.md §4).
+
+serve_config(cfg, tp) re-factors attention heads as [kv_eff = tp,
+g_eff = ceil(g/rep)] when n_kv_heads < tp. This module transforms a
+*trained* (true-shape) parameter tree into the padded serving layout:
+kv heads are replicated `rep` times, q/o head slots zero-padded — padded wo
+rows are zero so outputs are exact (verified by tests/test_serve_pad.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, serve_config
+
+
+def _pad_attn(p: dict, cfg: ModelConfig, scfg: ModelConfig) -> dict:
+    kh, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    kh_e = scfg.n_kv_heads
+    rep = kh_e // kh
+    g_e = scfg.n_heads // kh_e
+    d = cfg.d_model
+
+    def pad_q(w):  # [*, kh, g, hd] -> [*, kh*rep, g_e, hd]
+        lead = w.shape[:-3]
+        pad_g = rep * g_e - g
+        wp = jnp.pad(w, [(0, 0)] * len(lead) + [(0, 0), (0, pad_g), (0, 0)])
+        return wp.reshape(*lead, kh * rep, g_e, hd)
+
+    def pad_o(w):  # [*, kh, g, hd, d] -> [*, kh*rep, g_e, hd, d]
+        lead = w.shape[:-4]
+        pad_g = rep * g_e - g
+        wp = jnp.pad(w, [(0, 0)] * len(lead) + [(0, 0), (0, pad_g), (0, 0), (0, 0)])
+        return wp.reshape(*lead, kh * rep, g_e, hd, d)
+
+    def rep_kv(w):  # [*, kh, hd] -> [*, kh*rep, hd]
+        return jnp.repeat(w, rep, axis=-2)
+
+    return {
+        "ln": p["ln"],
+        "wq": pad_q(p["wq"]),
+        "wk": rep_kv(p["wk"]),
+        "wv": rep_kv(p["wv"]),
+        "wo": pad_o(p["wo"]),
+    }
+
+
+def pad_params_for_serve(params: Any, cfg: ModelConfig, tp: int):
+    """Returns (serve_cfg, padded_params). Identity when no padding needed."""
+    scfg = serve_config(cfg, tp)
+    if scfg.n_kv_heads == cfg.n_kv_heads:
+        return scfg, params
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if set(tree) >= {"wq", "wk", "wv", "wo"}:
+                return _pad_attn(tree, cfg, scfg)
+            return {k: walk(v) for k, v in tree.items()}
+        return tree
+
+    return scfg, walk(params)

@@ -1,0 +1,105 @@
+"""Real-execution serving engine (reduced models, CPU or a pod slice).
+
+Composes the same component classes the simulator uses — DPU/CPU preprocess,
+BucketedBatcher, SliceScheduler — but executes real jitted prefill/decode on
+mesh slices. This is the integration-test and quickstart path; the simulator
+covers pod-scale what-ifs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.policy import BatchPolicy
+from repro.core.dpu.runtime import DPU, DpuConfig
+from repro.models import api, lm
+
+
+@dataclass
+class EngineConfig:
+    max_new_tokens: int = 8
+    bucket_width: float = 64.0     # prompt-length buckets (tokens)
+    preprocess: str = "none"       # none | dpu (audio/image frontends)
+
+
+class ServingEngine:
+    """Single-slice engine: enqueue requests, run_until_idle() drains them
+    through preprocess -> dynamic batching -> prefill -> decode."""
+
+    def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
+                 ec: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.ec = ec
+        self.batcher = BucketedBatcher(policy)
+        self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
+        self.completed: List[Request] = []
+        self._decode_jit = jax.jit(
+            lambda p, c, t, pos: lm.decode(p, c, t, pos, cfg)
+        )
+        self._prefill_cache: Dict[int, Any] = {}
+
+    def submit(self, req: Request) -> None:
+        req.preprocessed_at = time.monotonic()
+        self.batcher.enqueue(req)
+
+    def run_until_idle(self) -> List[Request]:
+        while self.batcher.pending():
+            now = time.monotonic()
+            batches = self.batcher.poll(now)
+            if not batches:
+                # force timeout flush
+                batches = self.batcher.poll(now + self.policy.time_queue + 1e-3)
+            for b in batches:
+                self._execute(b)
+        return self.completed
+
+    def _execute(self, batch: Batch) -> None:
+        t0 = time.monotonic()
+        max_len = int(max(r.length for r in batch.requests))
+        max_len = max(8, max_len)
+        toks = np.zeros((len(batch.requests), max_len), np.int32)
+        for i, r in enumerate(batch.requests):
+            n = int(r.length)
+            rng = np.random.default_rng(r.rid)
+            toks[i, :n] = rng.integers(0, self.cfg.vocab, n)
+        logits, cache = lm.prefill(self.params, jnp.asarray(toks), self.cfg)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        outs = [tok]
+        pos = max_len
+        for _ in range(self.ec.max_new_tokens - 1):
+            logits, cache = self._decode_jit(self.params, cache, tok, jnp.int32(pos))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append(tok)
+            pos += 1
+        done = time.monotonic()
+        for i, r in enumerate(batch.requests):
+            r.dispatched_at = t0
+            r.completed_at = done
+            r.payload = np.concatenate([np.asarray(o[i]) for o in outs])
+            self.completed.append(r)
+
+
+def build_engine(cfg: ModelConfig, *, seed: int = 0,
+                 ec: EngineConfig = EngineConfig()) -> ServingEngine:
+    from repro.core.batching import analytical_knee, derive_policy, kv_bytes_per_token
+
+    params = api.init_params(cfg, jax.random.PRNGKey(seed), dtype=cfg.dtype)
+    n_active = cfg.active_param_count()
+    profiles = {
+        b: analytical_knee(
+            n_active, chips=1, context_len=int((b + 0.5) * ec.bucket_width),
+            kv_bytes_per_token=kv_bytes_per_token(cfg),
+        )
+        for b in range(8)
+    }
+    policy = derive_policy(profiles, n_slices=1, bucket_width=ec.bucket_width)
+    return ServingEngine(cfg, params, policy, ec)

@@ -1,0 +1,39 @@
+"""Inference request generation: Poisson arrivals (MLPerf-style, paper §5)
+with LibriSpeech-like length distribution for audio (paper Fig. 13) and
+fixed-size inputs for vision."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.batching.buckets import Request
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    modality: str = "audio"        # audio | image | text
+    rate_qps: float = 100.0
+    mean_len: float = 7.5          # audio seconds / prompt tokens
+    sigma: float = 0.6             # lognormal shape (LibriSpeech-ish)
+    max_len: float = 30.0
+    fixed_len: float = 1.0         # for image (one unit)
+    seed: int = 0
+
+
+def generate_requests(spec: WorkloadSpec, n: int) -> List[Request]:
+    rng = np.random.default_rng(spec.seed)
+    gaps = rng.exponential(1.0 / spec.rate_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    if spec.modality == "image":
+        lengths = np.full(n, spec.fixed_len)
+    else:
+        mu = math.log(spec.mean_len) - spec.sigma**2 / 2
+        lengths = np.minimum(rng.lognormal(mu, spec.sigma, size=n), spec.max_len)
+        lengths = np.maximum(lengths, 0.5)
+    return [
+        Request(rid=i, arrival=float(arrivals[i]), length=float(lengths[i]))
+        for i in range(n)
+    ]

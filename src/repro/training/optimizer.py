@@ -1,0 +1,64 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule (pure JAX;
+moments share the parameter sharding so optimizer state is FSDP-sharded)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, oc.warmup_steps)
+    t = (step - oc.warmup_steps) / jnp.maximum(1.0, oc.total_steps - oc.warmup_steps)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(t, 0.0, 1.0)))
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, 0.1 + 0.9 * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), t)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, opt_state, oc: OptConfig):
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(oc, step)
+    b1c = 1 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["mu"], opt_state["nu"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,152 @@
+"""Dynamic batching system: knee math, policy, bucketized queues (property
+tests with hypothesis: no request lost or duplicated, caps respected)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.batching import (
+    BatchPolicy,
+    BucketedBatcher,
+    analytical_decode_latency,
+    analytical_knee,
+    derive_policy,
+    find_knee,
+)
+from repro.core.batching.buckets import Request
+
+
+def test_find_knee_synthetic_plateau():
+    # throughput saturates at batch 16: knee must land there
+    bs = [1, 2, 4, 8, 16, 32, 64]
+    lat = [0.010] * 5 + [0.020, 0.040]  # beyond 16, latency doubles per step
+    prof = find_knee(bs, lat)
+    assert prof.batch_knee == 16
+    assert prof.time_knee == pytest.approx(0.010)
+
+
+def test_analytical_knee_scales_with_slice_size():
+    """Paper §3.2: smaller slices have smaller knees (1g.5gb vs 7g.40gb)."""
+    n = 1_000_000_000
+    small = analytical_knee(n, chips=1).batch_knee
+    large = analytical_knee(n, chips=16).batch_knee
+    assert small <= large
+    assert large >= 4
+
+
+def test_analytical_latency_monotonic_in_batch():
+    lats = [analytical_decode_latency(1e9, b, chips=4) for b in (1, 8, 64, 512)]
+    assert all(b >= a for a, b in zip(lats, lats[1:]))
+
+
+def test_time_queue_formula():
+    """Time_queue = Time_knee / n_slices (paper §4.3)."""
+    prof = find_knee([1, 2, 4], [0.03, 0.03, 0.06])
+    pol = derive_policy({0: prof}, n_slices=7, bucket_width=2.5)
+    assert pol.time_queue == pytest.approx(pol.time_knee / 7)
+
+
+def _policy(bmax_by_bucket, tq=0.05):
+    return BatchPolicy(
+        batch_max=bmax_by_bucket, time_queue=tq, time_knee=tq * 4,
+        n_slices=4, bucket_width=2.5,
+    )
+
+
+def test_batch_released_at_batch_max():
+    pol = _policy({0: 4})
+    b = BucketedBatcher(pol, merge_adjacent=False)
+    for i in range(4):
+        b.enqueue(Request(rid=i, arrival=0.0, length=1.0))
+    out = b.poll(0.0)
+    assert len(out) == 1 and out[0].size == 4
+
+
+def test_batch_released_at_timeout():
+    pol = _policy({0: 8}, tq=0.05)
+    b = BucketedBatcher(pol, merge_adjacent=False)
+    b.enqueue(Request(rid=0, arrival=0.0, length=1.0))
+    assert b.poll(0.01) == []
+    out = b.poll(0.06)
+    assert len(out) == 1 and out[0].size == 1
+
+
+def test_adjacent_merge_respects_longest_member_cap():
+    """Paper: merged batches never exceed Batch_max of the longest input."""
+    pol = _policy({0: 8, 1: 2})
+    b = BucketedBatcher(pol, merge_adjacent=True)
+    b.enqueue(Request(rid=0, arrival=0.0, length=1.0))     # bucket 0
+    for i in range(1, 5):
+        b.enqueue(Request(rid=i, arrival=0.0, length=3.0))  # bucket 1
+    out = b.poll(1.0)  # timeout flush of bucket 0 merges neighbors
+    assert out, "expected a batch"
+    batch = out[0]
+    top = max(b.bucket_of(r.length) for r in batch.requests)
+    assert batch.size <= pol.batch_max_for(top)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lengths=st.lists(st.floats(0.5, 29.9), min_size=1, max_size=60),
+    bmax=st.integers(1, 9),
+)
+def test_no_request_lost_or_duplicated(lengths, bmax):
+    pol = _policy({i: bmax for i in range(16)}, tq=0.01)
+    b = BucketedBatcher(pol)
+    for i, ln in enumerate(lengths):
+        b.enqueue(Request(rid=i, arrival=0.0, length=ln))
+    seen = []
+    t = 0.0
+    for _ in range(200):
+        t += 0.02
+        for batch in b.poll(t):
+            seen.extend(r.rid for r in batch.requests)
+            top = max(b.bucket_of(r.length) for r in batch.requests)
+            assert batch.size <= pol.batch_max_for(top)
+        if not b.pending():
+            break
+    assert sorted(seen) == list(range(len(lengths)))
+
+
+def test_scheduler_failure_requeues_inflight():
+    from repro.core.batching import SliceScheduler
+    from repro.core.batching.buckets import Batch
+
+    s = SliceScheduler(2)
+    batch = Batch([Request(0, 0.0, 1.0)], 0, 0.0)
+    sid = s.dispatch(batch, 0.0, expected_s=0.1)
+    assert sid is not None
+    s.fail_slice(sid)
+    assert batch in s.requeued
+    assert s.free_slices(0.0) == [1 - sid]
+
+
+def test_scheduler_hedging_and_first_wins():
+    from repro.core.batching import SliceScheduler
+    from repro.core.batching.buckets import Batch
+
+    s = SliceScheduler(2, hedge_factor=2.0)
+    batch = Batch([Request(0, 0.0, 1.0)], 0, 0.0)
+    sid = s.dispatch(batch, 0.0, expected_s=0.1)
+    assert s.stragglers(0.15) == []
+    lag = s.stragglers(0.5)
+    assert lag == [sid]
+    twin = s.hedge(sid, 0.5)
+    assert twin is not None and twin != sid
+    done = s.complete(twin, 0.6)
+    assert done is batch
+    # the original straggler's inflight was cancelled
+    assert s.slices[sid].inflight is None
+
+
+def test_scheduler_elastic_resize():
+    from repro.core.batching import SliceScheduler
+    from repro.core.batching.buckets import Batch
+
+    s = SliceScheduler(4)
+    b = Batch([Request(0, 0.0, 1.0)], 0, 0.0)
+    s.dispatch(b, 0.0, 0.1)
+    s.resize(2)
+    assert len(s.slices) == 2
+    s.resize(8)
+    assert len(s.slices) == 8

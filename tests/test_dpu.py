@@ -1,0 +1,71 @@
+"""DPU runtime: pipeline occupancy semantics (paper Fig. 12), CPU-pool
+saturation (paper Fig. 9 shape), end-to-end numerics via kernels."""
+import numpy as np
+import pytest
+
+from repro.core.dpu.pipeline import make_audio_cus, make_audio_fused_cu, make_image_cu
+from repro.core.dpu.runtime import DPU, CpuPreprocessPool, DpuConfig
+
+
+def test_split_audio_cus_beat_fused_throughput():
+    """Fig. 12(b) vs 12(c): the fused CU serializes on Normalize's global
+    stats; split CU types pipeline back-to-back requests."""
+    split = DPU(DpuConfig(modality="audio", n_cus=1, split_audio_cus=True))
+    fused = DPU(DpuConfig(modality="audio", n_cus=1, split_audio_cus=False))
+    n, length = 32, 16000 * 5
+    t_split = max(split.submit(0.0, length) for _ in range(n))
+    t_fused = max(fused.submit(0.0, length) for _ in range(n))
+    assert t_split < t_fused
+
+
+def test_single_request_latency_counts_all_stages():
+    cu_a, cu_b = make_audio_cus()
+    lat = cu_a.latency_s(16000) + cu_b.latency_s(16000)
+    assert lat > 0
+    # occupancy of the streaming CU is bounded by its slowest stage
+    assert cu_a.occupancy_s(16000) <= cu_a.latency_s(16000)
+    # the normalize CU is non-streaming: occupancy == latency
+    assert cu_b.occupancy_s(16000) == pytest.approx(cu_b.latency_s(16000))
+
+
+def test_more_cus_more_throughput():
+    few = DPU(DpuConfig(n_cus=1))
+    many = DPU(DpuConfig(n_cus=4))
+    n = 64
+    t_few = max(few.submit(0.0, 16000) for _ in range(n))
+    t_many = max(many.submit(0.0, 16000) for _ in range(n))
+    assert t_many < t_few
+
+
+def test_cpu_pool_saturates_like_fig9():
+    """Doubling offered load beyond the core count stops helping: the
+    completion horizon grows linearly — the paper's preprocessing wall."""
+    pool = CpuPreprocessPool(n_cores=4, cost_per_request_s=lambda _: 0.01)
+    t16 = max(pool.submit(0.0, None) for _ in range(16))
+    pool2 = CpuPreprocessPool(n_cores=4, cost_per_request_s=lambda _: 0.01)
+    t32 = max(pool2.submit(0.0, None) for _ in range(32))
+    assert t32 >= 1.9 * t16
+
+
+def test_dpu_real_execution_matches_cpu_reference():
+    """backend='cpu' CU pipeline == direct numpy pipeline (audio)."""
+    from repro.data import preprocess_cpu as pp
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(48000).astype(np.float32)
+    dpu = DPU(DpuConfig(modality="audio", backend="cpu"))
+    got = dpu.process(x)
+    want = pp.audio_pipeline(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_image_cu_real_execution():
+    from repro.data import preprocess_cpu as pp
+
+    rng = np.random.default_rng(0)
+    co = rng.integers(-32, 32, (32, 32, 8, 8)).astype(np.float32)
+    qt = rng.integers(1, 16, (8, 8)).astype(np.float32)
+    cu = make_image_cu("cpu")
+    got = cu.process({"coeffs": co, "qtable": qt})
+    want = pp.image_pipeline(co, qt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,87 @@
+"""Pipeline parallelism: exact equivalence with sequential apply on an
+8-device host mesh (subprocess keeps the device count out of this process),
+plus the bubble-fraction arithmetic and HLO-parser unit checks."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.distributed.pipeline import bubble_fraction
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert bubble_fraction(4, 28) < 0.1  # deep pipelines want many microbatches
+
+
+_PIPE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.pipeline import pipeline_apply
+
+    N_STAGES, N_MICRO, MB, D = 4, 8, 2, 16
+    mesh = jax.make_mesh((N_STAGES,), ("pipe",))
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (N_STAGES, D, D)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(1), (N_STAGES, D)) * 0.1
+    mbs = jax.random.normal(jax.random.PRNGKey(2), (N_MICRO, MB, D))
+
+    def stage_fn(params, x):
+        wi, bi = params
+        return jnp.tanh(x @ wi + bi)
+
+    got = pipeline_apply(stage_fn, (w, b), mbs, mesh)
+    # sequential reference
+    want = mbs
+    for s in range(N_STAGES):
+        want = jnp.tanh(want @ w[s] + b[s])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+    print("PIPE_OK")
+    """
+)
+
+
+def test_pipeline_matches_sequential_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _PIPE_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=300,
+    )
+    assert "PIPE_OK" in out.stdout, out.stdout[-1500:] + out.stderr[-1500:]
+
+
+def test_hlo_parser_scan_trip_count():
+    """The parser must multiply scan bodies by their trip count exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.hlo_parse import analyze_hlo
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+
+        y, _ = jax.lax.scan(body, x, None, length=11)
+        return y
+
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(spec, spec).compile()
+    cost = analyze_hlo(compiled.as_text())
+    assert cost.dot_flops == pytest.approx(2 * 64**3 * 11)
+
+
+def test_collective_wire_formulas():
+    from repro.analysis.hlo_parse import Op, _collective_wire
+
+    op = Op("x", "all-reduce", "f32[100]", "replica_groups={{0,1,2,3}}")
+    assert _collective_wire(op, 4) == pytest.approx(2 * 400 * 3 / 4)
+    op2 = Op("x", "all-gather", "f32[100]", "replica_groups={{0,1}}")
+    assert _collective_wire(op2, 2) == pytest.approx(400 * 1 / 2)
+    op3 = Op("x", "reduce-scatter", "f32[100]", "replica_groups={{0,1}}")
+    assert _collective_wire(op3, 2) == pytest.approx(400.0)

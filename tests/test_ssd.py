@@ -1,0 +1,80 @@
+"""Mamba2 SSD: chunked scan vs naive recurrence oracle + decode-step
+consistency (prefill handoff)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.models import layers as L
+
+rng = np.random.default_rng(7)
+
+
+def naive_ssd(x, dt, A, Bm, Cm):
+    """Sequential recurrence oracle: h_t = h_{t-1} e^{dt A} + dt B x."""
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = np.repeat(Bm, rep, axis=2)
+    Ch = np.repeat(Cm, rep, axis=2)
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros_like(x, dtype=np.float64)
+    for t in range(l):
+        dA = np.exp(dt[:, t] * A[None])  # [b,h]
+        inc = np.einsum("bhp,bhn->bhpn", x[:, t] * dt[:, t][..., None], Bh[:, t])
+        state = state * dA[..., None, None] + inc
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("l", [16, 32])
+def test_ssd_chunked_vs_naive(chunk, l):
+    b, h, p, g, n = 2, 4, 8, 1, 16
+    x = rng.standard_normal((b, l, h, p)).astype(np.float32)
+    dt = (0.001 + rng.random((b, l, h)) * 0.1).astype(np.float32)
+    A = (-rng.random(h) * 4 - 0.5).astype(np.float32)
+    Bm = rng.standard_normal((b, l, g, n)).astype(np.float32)
+    Cm = rng.standard_normal((b, l, g, n)).astype(np.float32)
+    y, final = L.ssd_chunked(
+        jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A), jnp.asarray(Bm),
+        jnp.asarray(Cm), chunk,
+    )
+    y_ref, final_ref = naive_ssd(x, dt, A, Bm, Cm)
+    assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    assert_allclose(np.asarray(final), final_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_step_continues_ssd():
+    """Running SSD on l tokens then ssm_step on token l+1 == SSD on l+1."""
+    b, l, h, p, g, n = 1, 16, 2, 4, 1, 8
+    x = rng.standard_normal((b, l + 1, h, p)).astype(np.float32)
+    dt = (0.01 + rng.random((b, l + 1, h)) * 0.1).astype(np.float32)
+    A = (-rng.random(h) * 2 - 0.5).astype(np.float32)
+    Bm = rng.standard_normal((b, l + 1, g, n)).astype(np.float32)
+    Cm = rng.standard_normal((b, l + 1, g, n)).astype(np.float32)
+    _, state_l = L.ssd_chunked(
+        jnp.asarray(x[:, :l]), jnp.asarray(dt[:, :l]), jnp.asarray(A),
+        jnp.asarray(Bm[:, :l]), jnp.asarray(Cm[:, :l]), 8,
+    )
+    y_step, _ = L.ssm_step(
+        jnp.asarray(x[:, l]), jnp.asarray(dt[:, l]), jnp.asarray(A),
+        jnp.asarray(Bm[:, l]), jnp.asarray(Cm[:, l]), state_l,
+    )
+    y_full, _ = L.ssd_chunked(
+        jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A), jnp.asarray(Bm),
+        jnp.asarray(Cm), 17,
+    )
+    assert_allclose(np.asarray(y_step), np.asarray(y_full[:, -1]), rtol=2e-3, atol=2e-3)
+
+
+def test_conv1d_step_continues_causal():
+    b, l, c, k = 2, 10, 6, 4
+    x = rng.standard_normal((b, l, c)).astype(np.float32)
+    w = rng.standard_normal((c, k)).astype(np.float32)
+    bias = rng.standard_normal(c).astype(np.float32)
+    full = L.conv1d_causal(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias))
+    state = jnp.asarray(x[:, l - k : l - 1])
+    y1, _ = L.conv1d_step(jnp.asarray(x[:, -1]), state, jnp.asarray(w), jnp.asarray(bias))
+    assert_allclose(np.asarray(y1), np.asarray(full[:, -1]), rtol=1e-5, atol=1e-5)
