@@ -33,6 +33,11 @@ _OP_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[
 _SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _PARAM = re.compile(r"([\w.\-]+)\s*:\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)")
 _OPERANDS = re.compile(r"\(\s*(%[\w.\-]+(?:\s*,\s*%[\w.\-]+)*)?\s*\)")
+# call args with optional inline operand types (newer XLA prints
+# `dot(f32[64,64]{1,0} %lhs, ...)`; older text is `dot(%lhs, ...)`)
+_ARG = re.compile(
+    r"(?:(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%([\w.\-]+)"
+)
 _CALLS = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"")
@@ -161,15 +166,30 @@ def computation_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
     return dict(mult)
 
 
+def _call_args(line: str, kind: str) -> List[Tuple[str, str]]:
+    """[(inline_type or '', operand name)] for an op's call parentheses."""
+    try:
+        rest = line.split("= ", 1)[1].split(kind + "(", 1)[1]
+    except IndexError:
+        return []
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                rest = rest[:i]
+                break
+    return [(m.group(1) or "", m.group(2)) for m in _ARG.finditer(rest)]
+
+
 def _dot_flops_bytes(op: Op, comp: Computation) -> Tuple[float, float]:
     _, out_dims = _parse_shape(op.out_type)
     out_n = math.prod(out_dims) if out_dims else 0
-    om = _OPERANDS.search(op.line.split("=", 1)[1].split(op.kind, 1)[1])
-    operands = []
-    if om and om.group(1):
-        operands = [o.strip().lstrip("%") for o in om.group(1).split(",")]
-    lhs_type = comp.shapes.get(operands[0], "") if operands else ""
-    rhs_type = comp.shapes.get(operands[1], "") if len(operands) > 1 else ""
+    args = _call_args(op.line, op.kind)
+    lhs_type = (args[0][0] or comp.shapes.get(args[0][1], "")) if args else ""
+    rhs_type = (args[1][0] or comp.shapes.get(args[1][1], "")) if len(args) > 1 else ""
     _, lhs_dims = _parse_shape(lhs_type)
     cm = _LHS_CDIMS.search(op.line)
     csize = 1

@@ -30,6 +30,9 @@ class FunctionalUnit:
     fn: Callable[[Any], Any]
     cost_s: Callable[[Any], float]      # analytical per-request latency
     streaming: bool = True              # False => needs full input (Normalize)
+    batch_fn: Optional[Callable[[List[Any]], List[Any]]] = None
+    # batch_fn processes a stack of same-shape requests in ONE kernel launch
+    # (DPU backend); None falls back to a per-request fn loop (CPU baseline).
 
 
 @dataclass
@@ -41,6 +44,18 @@ class ComputeUnit:
         for u in self.units:
             x = u.fn(x)
         return x
+
+    def process_batch(self, xs: List[Any]) -> List[Any]:
+        """Process a stack of same-shape requests through the CU. FUs with a
+        batch_fn handle the whole stack in one kernel launch; the rest loop.
+        """
+        xs = list(xs)
+        for u in self.units:
+            if u.batch_fn is not None and len(xs) > 1:
+                xs = list(u.batch_fn(xs))
+            else:
+                xs = [u.fn(x) for x in xs]
+        return xs
 
     def latency_s(self, x: Any) -> float:
         """End-to-end single-request latency (sum of pipelined stages)."""
@@ -118,10 +133,14 @@ def make_image_cu(backend: str = "cpu") -> ComputeUnit:
     return ComputeUnit(
         "image",
         [
-            FunctionalUnit("decode", ops["decode"], _img_decode_cost),
-            FunctionalUnit("resize", ops["resize"], _img_resize_cost),
-            FunctionalUnit("crop", ops["crop"], _img_norm_cost),
-            FunctionalUnit("normalize", ops["normalize"], _img_norm_cost),
+            FunctionalUnit("decode", ops["decode"], _img_decode_cost,
+                           batch_fn=ops.get("decode_batch")),
+            FunctionalUnit("resize", ops["resize"], _img_resize_cost,
+                           batch_fn=ops.get("resize_batch")),
+            FunctionalUnit("crop", ops["crop"], _img_norm_cost,
+                           batch_fn=ops.get("crop_batch")),
+            FunctionalUnit("normalize", ops["normalize"], _img_norm_cost,
+                           batch_fn=ops.get("normalize_batch")),
         ],
     )
 
@@ -132,13 +151,16 @@ def make_audio_cus(backend: str = "cpu") -> Tuple[ComputeUnit, ComputeUnit]:
     cu_a = ComputeUnit(
         "audio_feat",
         [
-            FunctionalUnit("resample", ops["resample"], _audio_resample_cost),
-            FunctionalUnit("mel", ops["mel"], _audio_mel_cost),
+            FunctionalUnit("resample", ops["resample"], _audio_resample_cost,
+                           batch_fn=ops.get("resample_batch")),
+            FunctionalUnit("mel", ops["mel"], _audio_mel_cost,
+                           batch_fn=ops.get("mel_batch")),
         ],
     )
     cu_b = ComputeUnit(
         "audio_norm",
-        [FunctionalUnit("normalize", ops["normalize"], _audio_norm_cost, streaming=False)],
+        [FunctionalUnit("normalize", ops["normalize"], _audio_norm_cost,
+                        streaming=False, batch_fn=ops.get("normalize_batch"))],
     )
     return cu_a, cu_b
 
@@ -157,14 +179,37 @@ def make_audio_fused_cu(backend: str = "cpu") -> ComputeUnit:
 
 
 def _image_ops(backend: str) -> Dict[str, Callable]:
+    """Per-request ops plus `*_batch` variants (DPU backend): a batch op
+    takes/returns a list of same-shape requests and runs the whole stack in
+    one kernel launch. The CPU baseline intentionally has none — host cores
+    run one request per core (the paper's preprocessing wall)."""
     if backend == "dpu":
+        import jax.numpy as jnp
+
         from repro.kernels import ops as kops
+
+        def decode_batch(cs):
+            qt = cs[0]["qtable"]
+            if not all(np.array_equal(np.asarray(c["qtable"]), np.asarray(qt)) for c in cs[1:]):
+                return [kops.jpeg_decode(c["coeffs"], c["qtable"]) for c in cs]
+            stack = jnp.stack([jnp.asarray(c["coeffs"]) for c in cs])
+            return list(kops.jpeg_decode_batch(stack, jnp.asarray(qt)))
 
         return {
             "decode": lambda c: kops.jpeg_decode(c["coeffs"], c["qtable"]),
             "resize": lambda x: kops.image_resize(x, 256, 256),
             "crop": lambda x: kops.center_crop(x, 224, 224),
             "normalize": lambda x: kops.image_normalize(x, 127.5, 64.0),
+            "decode_batch": decode_batch,
+            "resize_batch": lambda xs: list(
+                kops.image_resize_batch(jnp.stack(xs), 256, 256)
+            ),
+            "crop_batch": lambda xs: list(
+                kops.center_crop_batch(jnp.stack(xs), 224, 224)
+            ),
+            "normalize_batch": lambda xs: list(
+                kops.image_normalize_batch(jnp.stack(xs), 127.5, 64.0)
+            ),
         }
     from repro.data import preprocess_cpu as pp
 
@@ -178,12 +223,23 @@ def _image_ops(backend: str) -> Dict[str, Callable]:
 
 def _audio_ops(backend: str) -> Dict[str, Callable]:
     if backend == "dpu":
+        import jax.numpy as jnp
+
         from repro.kernels import ops as kops
 
         return {
             "resample": lambda x: kops.audio_resample(x, 1, 3),
             "mel": kops.mel_spectrogram,
             "normalize": kops.audio_normalize,
+            "resample_batch": lambda xs: list(
+                kops.audio_resample_batch(jnp.stack(xs), 1, 3)
+            ),
+            "mel_batch": lambda xs: list(
+                kops.mel_spectrogram_batch(jnp.stack(xs))
+            ),
+            "normalize_batch": lambda xs: list(
+                kops.audio_normalize_batch(jnp.stack(xs))
+            ),
         }
     from repro.data import preprocess_cpu as pp
 

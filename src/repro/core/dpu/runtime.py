@@ -30,6 +30,13 @@ class DpuConfig:
     split_audio_cus: bool = True    # False = Fig.12(b) strawman (ablation)
 
 
+def _shape_key(x: Any) -> Any:
+    """Same-shape grouping key for batched preprocessing."""
+    if isinstance(x, dict):
+        return tuple(sorted((k, getattr(v, "shape", None)) for k, v in x.items()))
+    return getattr(x, "shape", None)
+
+
 class _CuPool:
     """Instances of one CU type with earliest-free scheduling."""
 
@@ -73,6 +80,23 @@ class DPU:
             x = pool.cu.process(x)
         self.processed += 1
         return x
+
+    def process_batch(self, xs: List[Any]) -> List[Any]:
+        """Preprocess a stack of requests; same-shape runs go through the CU
+        batch path (one kernel launch per FU per stack) instead of one launch
+        per request. Order of the results matches the input order."""
+        groups: Dict[Any, List[int]] = {}
+        for i, x in enumerate(xs):
+            groups.setdefault(_shape_key(x), []).append(i)
+        out: List[Any] = [None] * len(xs)
+        for idxs in groups.values():
+            ys = [xs[i] for i in idxs]
+            for pool in self.stages:
+                ys = pool.cu.process_batch(ys)
+            for i, y in zip(idxs, ys):
+                out[i] = y
+        self.processed += len(xs)
+        return out
 
     def latency_s(self, x: Any) -> float:
         return sum(p.cu.latency_s(x) for p in self.stages)

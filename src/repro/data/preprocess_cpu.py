@@ -8,9 +8,17 @@ Audio pipeline  (paper Fig. 4b): resample -> mel spectrogram -> normalize
 from __future__ import annotations
 
 import math
+from functools import lru_cache
 from typing import Optional, Tuple
 
 import numpy as np
+
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    """Mark an lru_cache'd operator matrix read-only (shared across calls)."""
+    a.setflags(write=False)
+    return a
+
 
 # ---------------------------------------------------------------------------
 # Image
@@ -19,13 +27,14 @@ import numpy as np
 _IDCT_N = 8
 
 
+@lru_cache(maxsize=None)
 def idct_matrix(n: int = _IDCT_N) -> np.ndarray:
     """Orthonormal DCT-III (inverse DCT-II) matrix M: block = M @ coeff @ M.T"""
     k = np.arange(n)[None, :]
     x = np.arange(n)[:, None]
     m = np.cos((2 * x + 1) * k * np.pi / (2 * n)) * np.sqrt(2.0 / n)
     m[:, 0] *= 1.0 / np.sqrt(2.0)
-    return m.astype(np.float32)
+    return _frozen(m.astype(np.float32))
 
 
 def decode_blocks(coeffs: np.ndarray, qtable: np.ndarray) -> np.ndarray:
@@ -56,6 +65,7 @@ def resize_bilinear(img: np.ndarray, out_h: int, out_w: int) -> np.ndarray:
     return out.astype(np.float32)
 
 
+@lru_cache(maxsize=None)
 def _resize_matrix(n_in: int, n_out: int) -> np.ndarray:
     """[n_out, n_in] bilinear interpolation weights (half-pixel centers)."""
     m = np.zeros((n_out, n_in), np.float32)
@@ -68,7 +78,7 @@ def _resize_matrix(n_in: int, n_out: int) -> np.ndarray:
         hi_c = min(max(lo + 1, 0), n_in - 1)
         m[o, lo_c] += 1.0 - frac
         m[o, hi_c] += frac
-    return m
+    return _frozen(m)
 
 
 def center_crop(img: np.ndarray, ch: int, cw: int) -> np.ndarray:
@@ -98,12 +108,13 @@ def image_pipeline(coeffs: np.ndarray, qtable: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
+@lru_cache(maxsize=None)
 def fir_lowpass(num_taps: int, cutoff: float) -> np.ndarray:
     """Windowed-sinc lowpass (Hamming), cutoff in normalized Nyquist units."""
     n = np.arange(num_taps) - (num_taps - 1) / 2.0
     h = np.sinc(cutoff * n) * cutoff
     h *= np.hamming(num_taps)
-    return (h / h.sum()).astype(np.float32)
+    return _frozen((h / h.sum()).astype(np.float32))
 
 
 def resample_poly(x: np.ndarray, up: int, down: int, num_taps: int = 48) -> np.ndarray:
@@ -119,8 +130,9 @@ def resample_poly(x: np.ndarray, up: int, down: int, num_taps: int = 48) -> np.n
     return y[::down].astype(np.float32)
 
 
+@lru_cache(maxsize=None)
 def hann(n: int) -> np.ndarray:
-    return (0.5 - 0.5 * np.cos(2 * np.pi * np.arange(n) / n)).astype(np.float32)
+    return _frozen((0.5 - 0.5 * np.cos(2 * np.pi * np.arange(n) / n)).astype(np.float32))
 
 
 def frame_signal(x: np.ndarray, frame: int, hop: int) -> np.ndarray:
@@ -129,6 +141,7 @@ def frame_signal(x: np.ndarray, frame: int, hop: int) -> np.ndarray:
     return x[idx]
 
 
+@lru_cache(maxsize=None)
 def mel_filterbank(n_mels: int, n_fft: int, sr: int,
                    fmin: float = 0.0, fmax: Optional[float] = None) -> np.ndarray:
     fmax = fmax or sr / 2
@@ -147,16 +160,17 @@ def mel_filterbank(n_mels: int, n_fft: int, sr: int,
         for j in range(c, r):
             if r > c:
                 fb[i, j] = (r - j) / (r - c)
-    return fb
+    return _frozen(fb)
 
 
+@lru_cache(maxsize=None)
 def dft_matrices(n_fft: int) -> Tuple[np.ndarray, np.ndarray]:
     """Real/imag DFT bases [n_fft, n_fft//2+1] — the MXU-native FFT
     formulation used by the DPU kernel (matmul instead of butterflies)."""
     k = np.arange(n_fft // 2 + 1)[None, :]
     t = np.arange(n_fft)[:, None]
     ang = -2.0 * np.pi * t * k / n_fft
-    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+    return _frozen(np.cos(ang).astype(np.float32)), _frozen(np.sin(ang).astype(np.float32))
 
 
 def mel_spectrogram(x: np.ndarray, *, sr: int = 16000, n_fft: int = 512,

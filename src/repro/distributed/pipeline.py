@@ -72,12 +72,13 @@ def pipeline_apply(
         )
         return outs
 
-    return jax.shard_map(
+    from repro.distributed.ctx import shard_map
+
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, microbatches)
 
 

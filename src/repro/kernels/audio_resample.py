@@ -37,6 +37,44 @@ def _resample_kernel(hs, down, x_ref, out_ref):
     out_ref[...] = acc
 
 
+def _resample_kernel_b(hs, down, x_ref, out_ref):
+    # batched variant: grid (N, out-tiles); row n of the signal stack
+    n = pl.program_id(0)
+    i = pl.program_id(1)
+    taps = len(hs)
+    start = i * BLOCK_OUT * down
+    x = pl.load(
+        x_ref, (n, pl.dslice(start, BLOCK_OUT * down + taps))
+    ).astype(jnp.float32)
+    acc = jnp.zeros((BLOCK_OUT,), jnp.float32)
+    for k in range(taps):
+        acc = acc + hs[k] * jax.lax.slice(x, (k,), (k + BLOCK_OUT * down,), (down,))
+    out_ref[...] = acc[None]
+
+
+def audio_resample_batch_pallas(x: jax.Array, h: jax.Array, down: int, *,
+                                interpret: bool = True) -> jax.Array:
+    """x: [N, L] stack of pre-padded same-length signals -> [N, n_out]
+    decimated outputs in a single kernel launch (grid (N, out-tiles))."""
+    nsig, length = x.shape
+    taps = h.shape[0]
+    n_out = (length - taps) // down + 1
+    nb = pl.cdiv(n_out, BLOCK_OUT)
+    need = nb * BLOCK_OUT * down + taps
+    xp = jnp.pad(x, ((0, 0), (0, max(0, need - length))))
+
+    hs = tuple(float(v) for v in np_taps(h))
+    out = pl.pallas_call(
+        functools.partial(_resample_kernel_b, hs, down),
+        grid=(nsig, nb),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, BLOCK_OUT), lambda n, i: (n, i)),
+        out_shape=jax.ShapeDtypeStruct((nsig, nb * BLOCK_OUT), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:, :n_out]
+
+
 def audio_resample_pallas(x: jax.Array, h: jax.Array, down: int, *,
                           interpret: bool = True) -> jax.Array:
     """x: [L] pre-padded signal; h: [taps] FIR; decimate by `down`.

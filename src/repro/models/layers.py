@@ -53,13 +53,16 @@ def rmsnorm_gated(x: jax.Array, z: jax.Array, w: jax.Array, eps: float = 1e-5) -
 
 
 def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
-    """x: [B, S, H, D]; pos: int32 [S] absolute positions."""
+    """x: [B, S, H, D]; pos: int32 [S] absolute positions, or [B, S] per-row
+    positions (ragged left-padded serving batches)."""
     d = x.shape[-1]
     half = d // 2
     inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
-    freqs = pos.astype(jnp.float32)[:, None] * inv[None, :]  # [S, half]
-    cos = jnp.cos(freqs)[None, :, None, :]
-    sin = jnp.sin(freqs)[None, :, None, :]
+    freqs = pos.astype(jnp.float32)[..., :, None] * inv  # [S, half] or [B, S, half]
+    if freqs.ndim == 2:
+        freqs = freqs[None]
+    cos = jnp.cos(freqs)[:, :, None, :]
+    sin = jnp.sin(freqs)[:, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
     out = jnp.concatenate([x1f * cos - x2f * sin, x1f * sin + x2f * cos], axis=-1)
@@ -72,13 +75,25 @@ def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
 
 
 def _pair_mask(qpos: jax.Array, kpos: jax.Array, causal: bool, window: int) -> jax.Array:
-    """[Sq, Skv] bool mask. kpos < 0 marks invalid cache slots."""
-    m = kpos[None, :] >= 0
+    """[Sq, Skv] bool mask (or [B, Sq, Skv] when either pos is per-row [B, S]).
+    Negative positions mark invalid slots: kpos < 0 excludes a cache slot,
+    qpos < 0 fully masks a padding query row."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    m = (k >= 0) & (q >= 0)
     if causal:
-        m = m & (qpos[:, None] >= kpos[None, :])
+        m = m & (q >= k)
     if window:
-        m = m & ((qpos[:, None] - kpos[None, :]) < window)
+        m = m & ((q - k) < window)
     return m
+
+
+def _batch_mask(mask: jax.Array) -> jax.Array:
+    """Normalize a _pair_mask result to [B|1, 1, 1, Sq, Skv] for [B,KH,G,Sq,Skv]
+    score tensors."""
+    if mask.ndim == 2:
+        mask = mask[None]
+    return mask[:, None, None]
 
 
 def attention_dense(q, k, v, qpos, kpos, *, causal=True, window=0):
@@ -89,9 +104,12 @@ def attention_dense(q, k, v, qpos, kpos, *, causal=True, window=0):
     qg = q.reshape(B, Sq, KH, G, D)
     s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k, preferred_element_type=jnp.float32)
     s = s * (1.0 / math.sqrt(D))
-    mask = _pair_mask(qpos, kpos, causal, window)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    mask = _batch_mask(_pair_mask(qpos, kpos, causal, window))
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    # fully-masked query rows (left-pad slots) emit exactly 0, not a uniform
+    # average; a no-op elsewhere since masked probs are already exactly 0
+    p = jnp.where(mask, p, 0.0)
     o = jnp.einsum("bkgqj,bjkd->bqkgd", p.astype(v.dtype), v)
     return o.reshape(B, Sq, H, D)
 
@@ -109,13 +127,18 @@ def attention_blockwise(q, k, v, qpos, kpos, *, causal=True, window=0, kv_block=
         pad = kv_block - Skv % kv_block
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+        kpos = jnp.pad(
+            kpos, [(0, 0)] * (kpos.ndim - 1) + [(0, pad)], constant_values=-1
+        )
         Skv += pad
     nb = Skv // kv_block
     qg = (q.reshape(B, Sq, KH, G, D)).astype(jnp.float32)
     ks = jnp.moveaxis(k.reshape(B, nb, kv_block, KH, D), 1, 0)
     vs = jnp.moveaxis(v.reshape(B, nb, kv_block, KH, D), 1, 0)
-    kps = kpos.reshape(nb, kv_block)
+    if kpos.ndim == 2:  # per-row positions: scan over [nb, B, kv_block]
+        kps = jnp.moveaxis(kpos.reshape(B, nb, kv_block), 1, 0)
+    else:
+        kps = kpos.reshape(nb, kv_block)
     scale = 1.0 / math.sqrt(D)
 
     m0 = jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32)
@@ -126,10 +149,11 @@ def attention_blockwise(q, k, v, qpos, kpos, *, causal=True, window=0, kv_block=
         m, l, acc = carry
         kb, vb, kp = xs
         s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, kb.astype(jnp.float32)) * scale
-        mask = _pair_mask(qpos, kp, causal, window)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = _batch_mask(_pair_mask(qpos, kp, causal, window))
+        s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)  # fully-masked pad queries stay exactly 0
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
@@ -180,9 +204,12 @@ def attention_swa_banded(q, k, v, pos0: int, window: int, *, kv_block=512):
 
 
 def attention(q, k, v, qpos, kpos, *, causal=True, window=0, pos0=0, kv_block=512):
-    """Dispatcher: picks banded-SWA / blockwise / dense by shape."""
+    """Dispatcher: picks banded-SWA / blockwise / dense by shape. Per-row
+    [B, S] positions (ragged serving batches) route to dense/blockwise, which
+    handle batched masks; the banded path assumes shared positions."""
     Sq, Skv = q.shape[1], k.shape[1]
-    if window and Sq == Skv and Sq % window == 0 and Sq // window >= 2 and causal:
+    shared_pos = qpos.ndim == 1 and kpos.ndim == 1
+    if window and shared_pos and Sq == Skv and Sq % window == 0 and Sq // window >= 2 and causal:
         return attention_swa_banded(q, k, v, pos0, window, kv_block=kv_block)
     if Sq * Skv <= 4096 * 1024 or Sq == 1:
         return attention_dense(q, k, v, qpos, kpos, causal=causal, window=window)
@@ -400,12 +427,13 @@ def moe_shard_map(x, p, cfg, mesh):
     ep_spec = P("data", None, "model") if ep else P(None, dp, "model")
     ep_spec_o = P("data", "model", None) if ep else P(None, "model", dp)
     dt = x.dtype
-    y, aux = jax.shard_map(
+    from repro.distributed.ctx import shard_map as _shmap
+
+    y, aux = _shmap(
         local_fn,
         mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None), ep_spec, ep_spec, ep_spec_o),
         out_specs=(P(dp, None, None), P()),
-        check_vma=False,
     )(
         x.reshape(G, group, D),
         p["router"].astype(jnp.float32),
@@ -574,18 +602,34 @@ def _ssm_split(xBC, cfg):
     return xs, Bm, Cm
 
 
-def ssm_block(x, p, cfg, init_state=None, return_state=False):
-    """Full-sequence Mamba2 block. x: [B, L, D]."""
+def ssm_block(x, p, cfg, init_state=None, return_state=False, pos_offset=None):
+    """Full-sequence Mamba2 block. x: [B, L, D].
+
+    pos_offset: [B] left-pad amounts (bucketed serving). The conv/dt biases
+    make padding slots nonzero even when their inputs are zero, so with an
+    offset the pad slots' dt is forced to 0 (state-neutral: dA = 1, zero
+    increment) and the block output is zeroed there, keeping the padded rows'
+    state and residual stream exactly equal to unpadded execution.
+    """
     B, L, D = x.shape
     dt_ = x.dtype
     z = jnp.einsum("bld,di->bli", x, p["in_z"].astype(dt_))
     xBC = jnp.einsum("bld,dc->blc", x, p["in_xbc"].astype(dt_))
     dtr = jnp.einsum("bld,dh->blh", x, p["in_dt"].astype(dt_))
     xBC = jax.nn.silu(conv1d_causal(xBC, p["conv_w"], p["conv_b"]))
+    valid = None
+    if pos_offset is not None:
+        valid = (
+            jnp.arange(L, dtype=jnp.int32)[None, :]
+            >= pos_offset[:, None].astype(jnp.int32)
+        )
+        xBC = xBC * valid[..., None].astype(xBC.dtype)
     xs, Bm, Cm = _ssm_split(xBC, cfg)
     h, pd = cfg.n_ssm_heads, cfg.ssm_headdim
     g, n = cfg.ssm_ngroups, cfg.ssm_state
     dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     xh = xs.reshape(B, L, h, pd)
     y, fstate = ssd_chunked(
@@ -595,6 +639,8 @@ def ssm_block(x, p, cfg, init_state=None, return_state=False):
     y = y + p["D"].astype(dt_)[None, None, :, None] * xh
     y = rmsnorm_gated(y.reshape(B, L, cfg.d_inner), z, p["norm_w"], cfg.norm_eps)
     out = jnp.einsum("bli,id->bld", y, p["out_proj"].astype(dt_))
+    if valid is not None:
+        out = out * valid[..., None].astype(out.dtype)
     if return_state:
         conv_tail = _conv_tail(x, p, cfg)
         return out, (conv_tail, fstate)

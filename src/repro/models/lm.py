@@ -186,7 +186,7 @@ def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
 def init_params(cfg: ModelConfig, key: jax.Array, dtype: Optional[str] = None):
     defs = model_defs(cfg)
     dt = jnp.dtype(dtype or cfg.param_dtype)
-    flat, treedef = jax.tree.flatten_with_path(defs, is_leaf=is_param_def)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_param_def)
 
     def one(path, pd: ParamDef):
         k = jax.random.fold_in(
@@ -343,10 +343,14 @@ def _cdt(cfg):
 
 
 def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=None,
-                  make_cache=False, cache_len=0):
+                  make_cache=False, cache_len=0, pos_offset=None):
     """Self- or cross-attention sublayer (pre-norm residual added by caller).
 
     x: [B,S,D] normed input; kv_x: encoder output for cross-attn (no rope).
+    pos_offset: [B] int32 left-pad amounts for ragged serving batches — row b's
+    token at padded index j has true position j - pos_offset[b]; negative
+    positions are padding, masked out of attention (and the emitted cache
+    slots carry invalid positions for decode).
     Returns (out, cache_entry|None).
     """
     dt = x.dtype
@@ -360,11 +364,15 @@ def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=N
     v = L.constrain_batch_dp(v, cfg.attn_dp_axes)
     if kv_x is None:
         qpos = pos0 + jnp.arange(S, dtype=jnp.int32)
+        if pos_offset is not None:
+            qpos = qpos[None, :] - pos_offset[:, None].astype(jnp.int32)
         kpos_ = qpos
         q = _rope4(q, qpos, cfg.rope_theta)
         k = L.apply_rope(k, qpos, cfg.rope_theta)
     else:
         qpos = jnp.arange(S, dtype=jnp.int32)
+        if pos_offset is not None:
+            qpos = qpos[None, :] - pos_offset[:, None].astype(jnp.int32)
         kpos_ = kpos if kpos is not None else jnp.arange(k.shape[1], dtype=jnp.int32)
     kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
     qf = q.reshape(B, S, kh * g, hd)
@@ -379,9 +387,15 @@ def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=N
             cache = {"ck": k, "cv": v}
         else:
             wc = ring_len(cfg, cache_len)
-            slots = jnp.arange(S - wc, S, dtype=jnp.int32) % wc
-            ck = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(k[:, S - wc :])
-            cv = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(v[:, S - wc :])
+            if wc >= S:
+                # decode headroom: slots S..wc-1 stay empty (ring positions
+                # j - wc < 0 => masked invalid until decode writes them)
+                ck = jnp.pad(k, ((0, 0), (0, wc - S), (0, 0), (0, 0))).astype(dt)
+                cv = jnp.pad(v, ((0, 0), (0, wc - S), (0, 0), (0, 0))).astype(dt)
+            else:
+                slots = jnp.arange(S - wc, S, dtype=jnp.int32) % wc
+                ck = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(k[:, S - wc :])
+                cv = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(v[:, S - wc :])
             cache = {"k": ck, "v": cv}
     return out, cache
 
@@ -393,26 +407,37 @@ def _rope4(q, pos, theta):
     return out.reshape(b, s, kh, g, d)
 
 
-def _attn_decode(x, p, cfg, cache, pos):
-    """Single-token attention. x: [B,1,D]; cache: {'k','v'} ring buffers."""
+def _attn_decode(x, p, cfg, cache, pos, pos_offset=None):
+    """Single-token attention. x: [B,1,D]; cache: {'k','v'} ring buffers.
+
+    `pos` is the scalar *padded* write position (shared ring slot); with
+    pos_offset [B], rope/masking use per-row true positions pos - offset, so a
+    left-padded ragged batch decodes exactly like per-row unpadded decode.
+    """
     dt = x.dtype
     B = x.shape[0]
     q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
     k1 = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
     v1 = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
-    pos_arr = pos[None].astype(jnp.int32)
-    q = _rope4(q, pos_arr, cfg.rope_theta)
-    k1 = L.apply_rope(k1, pos_arr, cfg.rope_theta)
     wc = cache["k"].shape[1]
+    j = jnp.arange(wc, dtype=jnp.int32)
+    slot_pos = pos - jnp.mod(pos - j, wc)  # padded-coordinate position per slot
+    if pos_offset is None:
+        qpos = pos[None].astype(jnp.int32)
+        kpos = jnp.where(slot_pos >= 0, slot_pos, -1)
+    else:
+        off = pos_offset.astype(jnp.int32)
+        qpos = (pos - off)[:, None]                      # [B,1] true positions
+        kpos = slot_pos[None, :] - off[:, None]          # [B,wc]
+        kpos = jnp.where(kpos >= 0, kpos, -1)            # pad slots -> invalid
+    q = _rope4(q, qpos, cfg.rope_theta)
+    k1 = L.apply_rope(k1, qpos, cfg.rope_theta)
     idx = (pos % wc).astype(jnp.int32)
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), idx, 1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), idx, 1)
-    j = jnp.arange(wc, dtype=jnp.int32)
-    kpos = pos - jnp.mod(pos - j, wc)
-    kpos = jnp.where(kpos >= 0, kpos, -1)
     kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
     o = L.attention_dense(
-        q.reshape(B, 1, kh * g, hd), ck, cv, pos_arr, kpos, causal=True, window=0
+        q.reshape(B, 1, kh * g, hd), ck, cv, qpos, kpos, causal=True, window=0
     )
     out = jnp.einsum("bskgh,kghd->bsd", o.reshape(B, 1, kh, g, hd), p["wo"].astype(dt))
     return out, {"k": ck, "v": cv}
@@ -453,7 +478,7 @@ def _ffn_forward(x, sub, cfg, kind):
     return x + L.mlp(h, sub["ffn"]), 0.0
 
 
-def _sublayer_forward(x, sub, cfg, kind, *, enc_out, mode, cache_len):
+def _sublayer_forward(x, sub, cfg, kind, *, enc_out, mode, cache_len, pos_offset=None):
     """Full-sequence sublayer. Returns (x, aux, cache_entry)."""
     mixer, _ = kind
     cache_entry: Dict[str, Any] = {}
@@ -462,7 +487,7 @@ def _sublayer_forward(x, sub, cfg, kind, *, enc_out, mode, cache_len):
         h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
         o, c = _attn_forward(
             h, sub["mixer"], cfg, causal=True, window=cfg.sliding_window,
-            make_cache=make_cache, cache_len=cache_len,
+            make_cache=make_cache, cache_len=cache_len, pos_offset=pos_offset,
         )
         x = x + o
         if make_cache:
@@ -470,15 +495,18 @@ def _sublayer_forward(x, sub, cfg, kind, *, enc_out, mode, cache_len):
     else:
         h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
         if make_cache:
-            o, (conv_tail, fstate) = L.ssm_block(h, sub["mixer"], cfg, return_state=True)
+            o, (conv_tail, fstate) = L.ssm_block(
+                h, sub["mixer"], cfg, return_state=True, pos_offset=pos_offset
+            )
             cache_entry["mixer"] = {"conv": conv_tail, "state": fstate}
         else:
-            o = L.ssm_block(h, sub["mixer"], cfg)
+            o = L.ssm_block(h, sub["mixer"], cfg, pos_offset=pos_offset)
         x = x + o
     if "xattn" in sub:
         h = L.rmsnorm(x, sub["xattn"]["ln"], cfg.norm_eps)
         o, c = _attn_forward(
-            h, sub["xattn"], cfg, causal=False, kv_x=enc_out, make_cache=make_cache
+            h, sub["xattn"], cfg, causal=False, kv_x=enc_out, make_cache=make_cache,
+            pos_offset=pos_offset,
         )
         x = x + o
         if make_cache:
@@ -487,12 +515,12 @@ def _sublayer_forward(x, sub, cfg, kind, *, enc_out, mode, cache_len):
     return x, aux, cache_entry
 
 
-def _sublayer_decode(x, sub, cache_sub, cfg, kind, pos):
+def _sublayer_decode(x, sub, cache_sub, cfg, kind, pos, pos_offset=None):
     mixer, _ = kind
     new_cache: Dict[str, Any] = {}
     if mixer == "attn":
         h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
-        o, c = _attn_decode(h, sub["mixer"], cfg, cache_sub["mixer"], pos)
+        o, c = _attn_decode(h, sub["mixer"], cfg, cache_sub["mixer"], pos, pos_offset)
         x = x + o
         new_cache["mixer"] = c
     else:
@@ -545,14 +573,33 @@ def _kinds_for(cfg):
 
 
 def forward(params, tokens, cfg: ModelConfig, *, mode: str = "train",
-            img_embeds=None, audio_frames=None, cache_len: int = 0):
-    """mode: 'train' -> (hidden, aux); 'prefill' -> (hidden_last, cache)."""
+            img_embeds=None, audio_frames=None, cache_len: int = 0,
+            pos_offset=None):
+    """mode: 'train' -> (hidden, aux); 'prefill' -> (hidden_last, cache).
+
+    pos_offset: optional [B] int32 left-pad amounts (bucketed serving): row b's
+    first pos_offset[b] token slots are padding. Their embeddings are zeroed
+    and they are masked out of attention/SSM state, so each row computes
+    exactly what it would at its true length (padding slots stay identically
+    zero through every layer).
+    """
     assert mode in ("train", "prefill")
+    if pos_offset is not None and cfg.n_img_tokens and img_embeds is not None:
+        raise ValueError(
+            "pos_offset (left-padded bucketing) is not supported with image "
+            "prefixes: the left-pad mask would zero the leading img_embeds "
+            "slots. Pad such batches on the right by length bucket instead."
+        )
     dt = _cdt(cfg)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
     if cfg.n_img_tokens and img_embeds is not None:
         n = cfg.n_img_tokens
         x = jnp.concatenate([img_embeds.astype(dt), x[:, n:]], axis=1)
+    if pos_offset is not None:
+        valid = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :] >= (
+            pos_offset[:, None].astype(jnp.int32)
+        )
+        x = x * valid[..., None].astype(dt)
     enc_out = None
     if cfg.enc_layers:
         enc_out = encode_audio(params, audio_frames, cfg)
@@ -563,7 +610,8 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str = "train",
     for i, kind in enumerate(pre_kinds):
         sub = params["prefix"][f"l{i}"]
         x, a, ce = _sublayer_forward(
-            x, sub, cfg, kind, enc_out=enc_out, mode=mode, cache_len=cache_len
+            x, sub, cfg, kind, enc_out=enc_out, mode=mode, cache_len=cache_len,
+            pos_offset=pos_offset,
         )
         aux = aux + a
         if mode == "prefill":
@@ -572,7 +620,8 @@ def forward(params, tokens, cfg: ModelConfig, *, mode: str = "train",
     def _make_sub(kind):
         def sub_fn(x, sub, enc):
             return _sublayer_forward(
-                x, sub, cfg, kind, enc_out=enc, mode=mode, cache_len=cache_len
+                x, sub, cfg, kind, enc_out=enc, mode=mode, cache_len=cache_len,
+                pos_offset=pos_offset,
             )
 
         if cfg.remat and mode == "train":
@@ -624,9 +673,11 @@ def logits_from_hidden(params, x, cfg):
     return logits[..., : cfg.vocab]  # strip sharding-pad vocab slots
 
 
-def decode(params, cache, tokens, pos, cfg: ModelConfig):
+def decode(params, cache, tokens, pos, cfg: ModelConfig, *, pos_offset=None):
     """One decode step. tokens: [B,1] int32; pos: scalar int32 (current
-    absolute position being written). Returns (logits [B,1,V], new_cache)."""
+    absolute *padded* position being written); pos_offset: optional [B] int32
+    left-pad amounts (row b's true position is pos - pos_offset[b]).
+    Returns (logits [B,1,V], new_cache)."""
     dt = _cdt(cfg)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
     pre_kinds, body_kinds = _kinds_for(cfg)
@@ -636,7 +687,8 @@ def decode(params, cache, tokens, pos, cfg: ModelConfig):
         new_prefix = {}
         for i, kind in enumerate(pre_kinds):
             x, nc = _sublayer_decode(
-                x, params["prefix"][f"l{i}"], cache["prefix"][f"l{i}"], cfg, kind, pos
+                x, params["prefix"][f"l{i}"], cache["prefix"][f"l{i}"], cfg, kind,
+                pos, pos_offset,
             )
             new_prefix[f"l{i}"] = nc
         new_cache["prefix"] = new_prefix
@@ -654,7 +706,9 @@ def decode(params, cache, tokens, pos, cfg: ModelConfig):
         )
         ncb = {}
         for li, kind in enumerate(body_kinds):
-            x, nc = _sublayer_decode(x, bp[f"l{li}"], cb[f"l{li}"], cfg, kind, pos)
+            x, nc = _sublayer_decode(
+                x, bp[f"l{li}"], cb[f"l{li}"], cfg, kind, pos, pos_offset
+            )
             ncb[f"l{li}"] = nc
         cbody = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, i, 0), cbody, ncb
@@ -669,15 +723,52 @@ def decode(params, cache, tokens, pos, cfg: ModelConfig):
     return logits_from_hidden(params, x, cfg), new_cache
 
 
-def prefill(params, tokens, cfg: ModelConfig, *, img_embeds=None, audio_frames=None):
-    """Full-sequence prefill. Returns (last-position logits [B,1,V], cache)."""
+def prefill(params, tokens, cfg: ModelConfig, *, img_embeds=None, audio_frames=None,
+            pos_offset=None, cache_len: Optional[int] = None):
+    """Full-sequence prefill. Returns (last-position logits [B,1,V], cache).
+
+    pos_offset: [B] left-pad amounts for ragged bucketed batches (see forward).
+    cache_len: total KV-cache slots to allocate; pass prompt_len + max_new_tokens
+    so the decode ring never wraps over live prompt slots. Defaults to the
+    prompt length (legacy behavior, headroom-free).
+    """
     x, cache = forward(
         params, tokens, cfg, mode="prefill",
         img_embeds=img_embeds, audio_frames=audio_frames,
-        cache_len=tokens.shape[1],
+        cache_len=cache_len if cache_len is not None else tokens.shape[1],
+        pos_offset=pos_offset,
     )
     logits = logits_from_hidden(params, x[:, -1:], cfg)
     return logits, cache
+
+
+def generate(params, cache, last_logits, pos0: int, cfg: ModelConfig, *,
+             steps: int, pos_offset=None):
+    """Greedy-decode `steps` tokens as one fused `lax.scan` (compile-once
+    serving hot path): no per-step host sync, no per-step dispatch, and —
+    when the caller jits with the cache donated — no per-step cache copies.
+
+    last_logits: [B,1,V] prefill output; pos0: first padded write position
+    (the padded prompt length). Returns (tokens [B, steps] int32, final cache);
+    tokens are bit-identical to argmax(last_logits) followed by steps-1
+    sequential decode() calls. The final cache is returned so a donated input
+    cache has an output to alias with (true in-place update, zero copies).
+    """
+    tok0 = jnp.argmax(last_logits, -1).astype(jnp.int32)  # [B,1]
+    if steps == 1:
+        return tok0, cache
+
+    def step(carry, _):
+        c, tok, pos = carry
+        logits, c = decode(params, c, tok, pos, cfg, pos_offset=pos_offset)
+        ntok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (c, ntok, pos + 1), ntok
+
+    (cache, _, _), toks = jax.lax.scan(
+        step, (cache, tok0, jnp.asarray(pos0, jnp.int32)), length=steps - 1
+    )
+    # toks: [steps-1, B, 1] -> [B, steps-1]
+    return jnp.concatenate([tok0, jnp.moveaxis(toks[..., 0], 0, 1)], axis=1), cache
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,25 @@
 """Real-execution serving engine (reduced models, CPU or a pod slice).
 
-Composes the same component classes the simulator uses — DPU/CPU preprocess,
-BucketedBatcher, SliceScheduler — but executes real jitted prefill/decode on
-mesh slices. This is the integration-test and quickstart path; the simulator
-covers pod-scale what-ifs.
+Compile-once hot path: prefill inputs are left-padded to power-of-two
+(batch, length) shape buckets and dispatched through `_prefill_cache`, a
+jitted-executable cache keyed on the padded shape; padded positions are
+masked out of attention and the KV cache (lm.forward pos_offset), so padding
+never changes a request's logits. Decode runs as a single fused jitted
+`lm.generate` — `max_new_tokens` steps inside one `lax.scan` with the KV
+cache donated — instead of a per-token Python loop. Steady-state serving on
+a stable bucket therefore traces exactly twice: one prefill bucket + one
+generate program (see benchmarks/bench_engine.py, BENCH_serve.json).
+
+Composes the DPU/CPU preprocess runtime and BucketedBatcher; SliceScheduler
+integration (multi-slice real execution) is future work tracked in ROADMAP.md.
+The legacy per-batch-shape / per-token path is kept behind EngineConfig
+(pad_buckets=False, fused_decode=False) as the benchmark baseline.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +37,24 @@ class EngineConfig:
     max_new_tokens: int = 8
     bucket_width: float = 64.0     # prompt-length buckets (tokens)
     preprocess: str = "none"       # none | dpu (audio/image frontends)
+    pad_buckets: bool = True       # pow2 (batch, len) shape buckets + masking
+    fused_decode: bool = True      # lax.scan lm.generate vs per-token loop
+    min_prompt_len: int = 8        # shortest padded prompt length
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
 
 
 class ServingEngine:
     """Single-slice engine: enqueue requests, run_until_idle() drains them
-    through preprocess -> dynamic batching -> prefill -> decode."""
+    through preprocess -> dynamic batching -> prefill -> decode.
+
+    `stats` tracks the compile-once invariant: `prefill_traces` /
+    `generate_traces` / `decode_step_traces` increment only while JAX is
+    tracing (Python side effects don't run on cached executables), and
+    `prefill_cache_hits` counts bucket reuse.
+    """
 
     def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
                  ec: EngineConfig = EngineConfig()):
@@ -42,11 +65,33 @@ class ServingEngine:
         self.batcher = BucketedBatcher(policy)
         self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
         self.completed: List[Request] = []
-        self._decode_jit = jax.jit(
-            lambda p, c, t, pos: lm.decode(p, c, t, pos, cfg)
-        )
-        self._prefill_cache: Dict[int, Any] = {}
+        self.batch_exec_s: List[float] = []
+        self.stats: Dict[str, int] = {
+            "batches": 0,
+            "prefill_compiles": 0,
+            "prefill_cache_hits": 0,
+            "prefill_traces": 0,
+            "generate_traces": 0,
+            "decode_step_traces": 0,
+        }
+        # (padded_batch, padded_len) -> jitted prefill executable
+        self._prefill_cache: Dict[Tuple[int, int], Any] = {}
 
+        def _generate(p, cache, logits, pos0, off):
+            self.stats["generate_traces"] += 1  # trace-time only
+            return lm.generate(p, cache, logits, pos0, cfg,
+                               steps=ec.max_new_tokens, pos_offset=off)
+
+        # donate the KV cache: the scan consumes it in place, no copies
+        self._generate_jit = jax.jit(_generate, donate_argnums=(1,))
+
+        def _decode_step(p, c, t, pos, off):
+            self.stats["decode_step_traces"] += 1  # trace-time only
+            return lm.decode(p, c, t, pos, cfg, pos_offset=off)
+
+        self._decode_jit = jax.jit(_decode_step)
+
+    # --- queueing ----------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.preprocessed_at = time.monotonic()
         self.batcher.enqueue(req)
@@ -56,35 +101,88 @@ class ServingEngine:
             now = time.monotonic()
             batches = self.batcher.poll(now)
             if not batches:
-                # force timeout flush
-                batches = self.batcher.poll(now + self.policy.time_queue + 1e-3)
+                # advance the logical clock to the earliest real flush
+                # deadline (no busy spin, and formed_at records the true
+                # flush time instead of a fabricated now + time_queue)
+                deadline = self.batcher.next_deadline()
+                batches = self.batcher.poll(deadline if deadline is not None else now)
             for b in batches:
                 self._execute(b)
         return self.completed
 
+    # --- hot path ----------------------------------------------------------
+    def bucket_shape(self, batch_size: int, max_len: int) -> Tuple[int, int]:
+        """Power-of-two (batch, length) shape bucket for a ragged batch."""
+        if not self.ec.pad_buckets:
+            return batch_size, max(self.ec.min_prompt_len, max_len)
+        return (
+            _next_pow2(batch_size),
+            max(self.ec.min_prompt_len, _next_pow2(max_len)),
+        )
+
+    def _pad_batch(self, batch: Batch):
+        """Left-pad prompts into the shape bucket. Returns (tokens [Bp, Lp],
+        pos_offset [Bp] or None, (Bp, Lp)). Rows beyond the real batch are
+        fully padded (offset == Lp) and their outputs discarded."""
+        lens = [max(1, int(r.length)) for r in batch.requests]
+        bp, lp = self.bucket_shape(len(batch.requests), max(lens))
+        toks = np.zeros((bp, lp), np.int32)
+        off = np.full(bp, lp, np.int32)
+        for i, r in enumerate(batch.requests):
+            n = lens[i]
+            rng = np.random.default_rng(r.rid)
+            if self.ec.pad_buckets:
+                toks[i, lp - n:] = rng.integers(0, self.cfg.vocab, n)
+                off[i] = lp - n
+            else:  # legacy: right-pad with zeros acting as real tokens
+                toks[i, :n] = rng.integers(0, self.cfg.vocab, n)
+        offset = jnp.asarray(off) if self.ec.pad_buckets else None
+        return jnp.asarray(toks), offset, (bp, lp)
+
+    def _get_prefill(self, bp: int, lp: int):
+        """Jitted-executable cache keyed on the padded shape bucket."""
+        key = (bp, lp)
+        fn = self._prefill_cache.get(key)
+        if fn is not None:
+            self.stats["prefill_cache_hits"] += 1
+            return fn
+        cache_len = lp + self.ec.max_new_tokens  # decode ring never wraps
+
+        def _prefill(p, toks, off, _cl=cache_len):
+            self.stats["prefill_traces"] += 1  # trace-time only
+            return lm.prefill(p, toks, self.cfg, pos_offset=off, cache_len=_cl)
+
+        fn = jax.jit(_prefill)
+        self._prefill_cache[key] = fn
+        self.stats["prefill_compiles"] += 1
+        return fn
+
     def _execute(self, batch: Batch) -> None:
         t0 = time.monotonic()
-        max_len = int(max(r.length for r in batch.requests))
-        max_len = max(8, max_len)
-        toks = np.zeros((len(batch.requests), max_len), np.int32)
-        for i, r in enumerate(batch.requests):
-            n = int(r.length)
-            rng = np.random.default_rng(r.rid)
-            toks[i, :n] = rng.integers(0, self.cfg.vocab, n)
-        logits, cache = lm.prefill(self.params, jnp.asarray(toks), self.cfg)
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        outs = [tok]
-        pos = max_len
-        for _ in range(self.ec.max_new_tokens - 1):
-            logits, cache = self._decode_jit(self.params, cache, tok, jnp.int32(pos))
+        toks, off, (bp, lp) = self._pad_batch(batch)
+        logits, cache = self._get_prefill(bp, lp)(self.params, toks, off)
+        if self.ec.fused_decode:
+            out, _ = self._generate_jit(self.params, cache, logits, jnp.int32(lp), off)
+            tokens = np.asarray(out)
+        else:
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            outs.append(tok)
-            pos += 1
+            outs = [tok]
+            pos = lp
+            for _ in range(self.ec.max_new_tokens - 1):
+                logits, cache = self._decode_jit(
+                    self.params, cache, tok, jnp.int32(pos), off
+                )
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                outs.append(tok)
+                pos += 1
+            tokens = np.concatenate([np.asarray(o) for o in outs], axis=1)
         done = time.monotonic()
+        self.stats["batches"] += 1
+        self.batch_exec_s.append(done - t0)
         for i, r in enumerate(batch.requests):
             r.dispatched_at = t0
             r.completed_at = done
-            r.payload = np.concatenate([np.asarray(o[i]) for o in outs])
+            r.payload = tokens[i]
             self.completed.append(r)
 
 

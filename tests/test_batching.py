@@ -2,6 +2,8 @@
 tests with hypothesis: no request lost or duplicated, caps respected)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,69 @@
+"""SliceScheduler hedging/completion semantics: regression guard before
+multi-slice real execution lands on the compile-once hot path."""
+from repro.core.batching.buckets import Batch, Request
+from repro.core.batching.scheduler import SliceScheduler
+
+
+def _batch(rid0=0, n=2):
+    reqs = [Request(rid=rid0 + i, arrival=0.0, length=8.0) for i in range(n)]
+    return Batch(requests=reqs, bucket_id=0, formed_at=0.0)
+
+
+def test_first_completion_cancels_hedge_twin():
+    s = SliceScheduler(3, hedge_factor=2.0)
+    b = _batch()
+    sid = s.dispatch(b, now=0.0, expected_s=1.0)
+    assert sid is not None
+    # past hedge_factor x expected -> straggler; twin gets the same batch
+    assert s.stragglers(now=3.0) == [sid]
+    twin = s.hedge(sid, now=3.0)
+    assert twin is not None and twin != sid
+    assert s.slices[twin].inflight is b
+    # first completion (the twin) wins and cancels the original in-flight copy
+    done = s.complete(twin, now=4.0)
+    assert done is b
+    assert s.slices[sid].inflight is None
+    assert s.slices[twin].inflight is None
+    assert all(r.completed_at == 4.0 for r in b.requests)
+
+
+def test_hedged_batch_never_double_completed():
+    s = SliceScheduler(2, hedge_factor=2.0)
+    b = _batch()
+    sid = s.dispatch(b, now=0.0, expected_s=1.0)
+    twin = s.hedge(sid, now=3.0)
+    first = s.complete(sid, now=3.5)
+    assert first is b
+    # the twin's copy was cancelled: completing it is a no-op
+    assert s.complete(twin, now=4.0) is None
+    assert s.slices[sid].completed == 1
+    assert s.slices[twin].completed == 0
+    assert all(r.completed_at == 3.5 for r in b.requests)
+
+
+def test_requeued_batch_not_double_completed():
+    s = SliceScheduler(2)
+    b = _batch()
+    sid = s.dispatch(b, now=0.0, expected_s=1.0)
+    # slice dies; its in-flight batch is re-queued exactly once
+    requeued = s.fail_slice(sid)
+    assert requeued is b
+    assert s.requeued == [b]
+    assert s.complete(sid, now=1.0) is None  # dead slice holds nothing
+    sid2 = s.dispatch(b, now=2.0, expected_s=1.0)
+    assert sid2 != sid
+    assert s.complete(sid2, now=3.0) is b
+    assert s.requeued == [b]  # re-queue list untouched by completion
+
+
+def test_hedge_needs_free_slice_and_marks_straggler():
+    s = SliceScheduler(1, hedge_factor=2.0)
+    b = _batch()
+    sid = s.dispatch(b, now=0.0, expected_s=1.0)
+    assert s.hedge(sid, now=5.0) is None  # no free twin available
+    s2 = SliceScheduler(2, hedge_factor=2.0)
+    sid = s2.dispatch(_batch(), now=0.0, expected_s=1.0)
+    s2.hedge(sid, now=3.0)
+    # an already-hedged straggler is not re-listed for hedging
+    assert sid not in s2.stragglers(now=10.0)
+    assert s2.hedges == 1
