@@ -1,6 +1,7 @@
-"""Serving hot-path benchmark: compile-once bucketed engine vs legacy path.
+"""Serving hot-path benchmark: compile-once engine paths vs the legacy path.
 
-Streams ragged same-bucket batches through the real-execution engine twice:
+Part 1 — compile-once (PR 1): streams ragged same-bucket batches through the
+real-execution engine twice:
 
   old  — legacy path (pad_buckets=False, fused_decode=False): per-batch
          exact-shape prefill (a retrace for every new ragged max length) and
@@ -9,15 +10,35 @@ Streams ragged same-bucket batches through the real-execution engine twice:
          the jitted-executable prefill cache + one fused lax.scan lm.generate
          with the KV cache donated.
 
-Measures tokens/s, p95 batch latency, and trace/compile counts, and writes
-BENCH_serve.json. Expected: the new path steady-state traces exactly twice
-(one prefill bucket + one generate) for the whole stream vs one-per-batch
-before, and >=2x decode tokens/s on the tinyllama config.
+Part 2 — continuous batching (PR 2): replays a Poisson arrival trace with
+heterogeneous per-request decode budgets (max_new_tokens) through
 
-    PYTHONPATH=src python benchmarks/bench_engine.py
+  rtc  — the run-to-completion engine above: a formed batch occupies the
+         model for the full max_new_tokens scan even after most rows finish,
+         and new arrivals wait it out (head-of-line blocking);
+  cb   — the continuous-batching engine: one fixed KV slot pool of
+         `max_slots` rows, serving as a loop of admit -> decode-segment
+         (`segment_len` steps per jitted scan) -> retire. Finished rows free
+         their slots between segments and queued prefills join mid-flight,
+         so the pool stays occupied and short requests never pay for long
+         neighbors.
+
+Continuous-batching knobs (EngineConfig): `max_slots` bounds in-flight
+requests == the prefill+admit batch width (pinned so admission never
+retraces); `segment_len` is the join/leave granularity — lower = admit
+sooner (latency), higher = fewer dispatches (throughput). Steady state
+traces exactly TWO programs: one prefill+admit bucket + one segment.
+
+Measures useful tokens/s (per-request budgets only — run-to-completion's
+overshoot doesn't count), p50/p99 request latency (completed - arrival), and
+trace counts; writes BENCH_serve.json (or --out). --smoke shrinks the
+workload for CI.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--out F]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -31,6 +52,13 @@ ARCH = "tinyllama-1.1b"
 MAX_NEW_TOKENS = 32     # SERVE_MODELS decode_steps for the text LM
 BATCHES = 8
 BATCH_SIZE = 8
+# continuous-batching trace
+MAX_SLOTS = 8
+SEGMENT_LEN = 8
+TRACE_N = 48
+MEAN_INTERARRIVAL_S = 0.012  # drives the pool to the knee (queueing visible)
+BUDGETS = (4, 8, 16, 32)        # heterogeneous output lengths
+PROMPT_RANGE = (17, 32)         # one (8, 32) prompt bucket
 
 
 def make_stream(n_batches: int, batch_size: int, seed: int = 0):
@@ -82,32 +110,194 @@ def run_path(engine: ServingEngine, stream) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Continuous batching vs run-to-completion under a Poisson arrival trace
+# ---------------------------------------------------------------------------
+
+
+def make_trace(n: int, mean_gap_s: float, seed: int = 7):
+    """Poisson arrivals, prompts in one bucket, heterogeneous decode budgets.
+    Returns (relative arrival times, request spec tuples)."""
+    rng = np.random.default_rng(seed)
+    rel = np.cumsum(rng.exponential(mean_gap_s, n))
+    spec = [
+        (
+            2000 + i,
+            int(rng.integers(PROMPT_RANGE[0], PROMPT_RANGE[1] + 1)),
+            int(rng.choice(BUDGETS)),
+        )
+        for i in range(n)
+    ]
+    return rel, spec
+
+
+def _fresh_requests(rel, spec, t0: float):
+    return [
+        Request(rid=rid, arrival=t0 + float(rel[i]), length=float(n),
+                max_new_tokens=b)
+        for i, (rid, n, b) in enumerate(spec)
+    ]
+
+
+def _warmup(engine: ServingEngine, seed: int = 99):
+    """Compile every executable the trace will need, outside the measured
+    window: rtc sees pow2 batch widths 1..BATCH_SIZE of the (.., 32) bucket;
+    cb sees its single admit bucket + segment program."""
+    rng = np.random.default_rng(seed)
+    sizes = [MAX_SLOTS]
+    if not engine.ec.continuous:
+        # every pow2 width up to pow2(TRACE_N): a backlog burst can form a
+        # batch as wide as the whole trace, and an unwarmed width would drop
+        # a multi-second compile into rtc's measured window
+        b = 1
+        while b < 2 * TRACE_N:
+            sizes.append(b)
+            b *= 2
+    rid = 900000
+    for sz in sizes:
+        reqs = [
+            Request(rid=(rid := rid + 1), arrival=0.0,
+                    length=float(rng.integers(*PROMPT_RANGE)),
+                    max_new_tokens=int(min(BUDGETS)))
+            for _ in range(sz)
+        ]
+        if engine.ec.continuous:
+            engine.submit_many(reqs)
+            engine.run_until_idle()
+        else:
+            engine._execute(Batch(requests=reqs, bucket_id=0, formed_at=0.0))
+    engine.completed.clear()
+    engine.batch_exec_s.clear()
+    engine.slot_occupancy.clear()
+
+
+def run_trace(engine: ServingEngine, rel, spec) -> dict:
+    """Wall-clock replay: submit each request when its arrival time passes,
+    step the engine in between, measure useful tokens/s + request latency."""
+    _warmup(engine)
+    before = dict(engine.stats)
+    traces_before = (before["prefill_traces"] + before["generate_traces"]
+                     + before["segment_traces"] + before["decode_step_traces"])
+    t0 = time.monotonic()
+    reqs = _fresh_requests(rel, spec, t0)
+    i = 0
+    while i < len(reqs) or engine.busy():
+        now = time.monotonic()
+        while i < len(reqs) and reqs[i].arrival <= now:
+            engine.submit(reqs[i])
+            i += 1
+        worked = engine.step()
+        if not worked:
+            if i < len(reqs):
+                time.sleep(min(max(reqs[i].arrival - time.monotonic(), 0.0), 0.002))
+            elif engine.busy():
+                dl = engine.batcher.next_deadline()
+                wait = 0.0 if dl is None else dl - time.monotonic()
+                time.sleep(min(max(wait, 0.0), 0.002))
+    makespan = time.monotonic() - t0
+    traces_after = (engine.stats["prefill_traces"]
+                    + engine.stats["generate_traces"]
+                    + engine.stats["segment_traces"]
+                    + engine.stats["decode_step_traces"])
+
+    done = engine.completed
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    useful = sum(len(r.payload) for r in done)
+    lat = np.sort([r.completed_at - r.arrival for r in done])
+    q = lambda p: float(lat[min(len(lat) - 1, int(np.ceil(p * len(lat))) - 1)])
+    out = {
+        "requests": len(done),
+        "makespan_s": round(makespan, 4),
+        "useful_tokens": useful,
+        "tokens_per_s": round(useful / makespan, 1),
+        "p50_latency_ms": round(1e3 * q(0.50), 2),
+        "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "trace_count_total": traces_after,
+        "trace_count_during_trace": traces_after - traces_before,
+    }
+    if engine.ec.continuous:
+        out["segments"] = engine.stats["segments"] - before["segments"]
+        out["admitted"] = engine.stats["admitted"] - before["admitted"]
+        out["retired"] = engine.stats["retired"] - before["retired"]
+        out["mean_slot_occupancy"] = round(engine.mean_slot_occupancy(), 3)
+    return out
+
+
+def bench_continuous(cfg, trace_n: int, mean_gap_s: float) -> dict:
+    rel, spec = make_trace(trace_n, mean_gap_s)
+
+    rtc = build_engine(cfg, ec=EngineConfig(max_new_tokens=MAX_NEW_TOKENS))
+    rtc_res = run_trace(rtc, rel, spec)
+
+    cb = build_engine(cfg, ec=EngineConfig(
+        max_new_tokens=MAX_NEW_TOKENS, continuous=True,
+        max_slots=MAX_SLOTS, segment_len=SEGMENT_LEN, max_prompt_len=32))
+    cb_res = run_trace(cb, rel, spec)
+
+    return {
+        "trace": {
+            "requests": trace_n,
+            "mean_interarrival_ms": round(1e3 * mean_gap_s, 1),
+            "budgets": list(BUDGETS),
+            "prompt_range": list(PROMPT_RANGE),
+            "max_slots": MAX_SLOTS,
+            "segment_len": SEGMENT_LEN,
+        },
+        "run_to_completion": rtc_res,
+        "continuous": cb_res,
+        "tokens_per_s_speedup": round(
+            cb_res["tokens_per_s"] / rtc_res["tokens_per_s"], 2),
+        "p99_latency_speedup": round(
+            rtc_res["p99_latency_ms"] / cb_res["p99_latency_ms"], 2),
+        "steady_state_traces": cb_res["trace_count_total"],
+        "compile_once": cb_res["trace_count_total"] == 2
+        and cb_res["trace_count_during_trace"] == 0,
+    }
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload for CI (same checks, ~3x faster)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    # smoke trims only the slow legacy (per-token loop) stream; the new-path
+    # stream and the continuous trace stay at full size so their tokens/s
+    # remain comparable to the committed reference (a shorter run
+    # over-weights warmup/tail drain and makes the CI floor noisy)
     cfg = reduced(ARCH)
-    stream = make_stream(BATCHES, BATCH_SIZE)
+    old_stream = make_stream(4 if args.smoke else BATCHES, BATCH_SIZE)
+    new_stream = make_stream(BATCHES, BATCH_SIZE)
 
     old_engine = build_engine(cfg, ec=EngineConfig(
         max_new_tokens=MAX_NEW_TOKENS, pad_buckets=False, fused_decode=False))
-    old = run_path(old_engine, stream)
+    old = run_path(old_engine, old_stream)
 
     new_engine = build_engine(cfg, ec=EngineConfig(max_new_tokens=MAX_NEW_TOKENS))
-    new = run_path(new_engine, stream)
+    new = run_path(new_engine, new_stream)
 
     speedup = new["tokens_per_s"] / old["tokens_per_s"]
     result = {
         "arch": f"{ARCH} (reduced)",
         "max_new_tokens": MAX_NEW_TOKENS,
         "batch_size": BATCH_SIZE,
+        "smoke": args.smoke,
         "old": old,
         "new": new,
         "tokens_per_s_speedup": round(speedup, 2),
         "compile_once": new["total_traces"] == 2,
+        "continuous_batching": bench_continuous(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
     }
-    with open("BENCH_serve.json", "w") as f:
+    with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result, indent=2))
-    print(f"\nspeedup: {speedup:.2f}x tokens/s; "
+    cbr = result["continuous_batching"]
+    print(f"\ncompile-once: {speedup:.2f}x tokens/s; "
           f"traces old={old['total_traces']} new={new['total_traces']}")
+    print(f"continuous:   {cbr['tokens_per_s_speedup']:.2f}x useful tokens/s, "
+          f"{cbr['p99_latency_speedup']:.2f}x p99 latency, "
+          f"traces={cbr['steady_state_traces']}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,14 @@ from repro.core.batching.knee import (  # noqa: F401
     kv_bytes_per_token,
     profile_knee,
 )
-from repro.core.batching.policy import BatchPolicy, derive_policy  # noqa: F401
+from repro.core.batching.policy import (  # noqa: F401
+    BatchPolicy,
+    derive_policy,
+    pick_segment_len,
+)
 from repro.core.batching.buckets import BucketedBatcher, Bucket  # noqa: F401
-from repro.core.batching.scheduler import SliceScheduler  # noqa: F401
+from repro.core.batching.scheduler import (  # noqa: F401
+    SliceScheduler,
+    SlotPlan,
+    SlotScheduler,
+)

@@ -22,9 +22,13 @@ class Request:
     arrival: float               # seconds (sim or wall clock)
     length: float                # audio seconds or token count
     payload: Any = None
+    max_new_tokens: Optional[int] = None  # per-request decode budget
     preprocessed_at: Optional[float] = None
     dispatched_at: Optional[float] = None
     completed_at: Optional[float] = None
+
+    def ready_at(self) -> float:
+        return self.preprocessed_at if self.preprocessed_at is not None else self.arrival
 
 
 @dataclass
@@ -50,8 +54,7 @@ class Bucket:
     def oldest_ready_time(self) -> Optional[float]:
         if not self.queue:
             return None
-        r = self.queue[0]
-        return r.preprocessed_at if r.preprocessed_at is not None else r.arrival
+        return self.queue[0].ready_at()
 
 
 class BucketedBatcher:

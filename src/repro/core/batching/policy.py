@@ -32,6 +32,30 @@ class BatchPolicy:
         return self.batch_max[nearest]
 
 
+def pick_segment_len(choices: Sequence[int], *, waiting: int, free_slots: int) -> int:
+    """Decode-segment length for continuous batching, against the knee.
+
+    Segment length is the join/leave granularity: queued requests can only be
+    admitted (and finished rows only retired) at segment boundaries, so S is
+    the same latency/throughput dial Batch_max turns at the knee — short
+    segments admit sooner (lower queueing latency), long segments amortize
+    host dispatch (higher tokens/s). The rule mirrors Time_queue's intent:
+
+      * requests waiting AND no free slot -> shortest S (drain the pool fast
+        so finished rows free slots for the queue);
+      * requests waiting but slots free   -> middle S (they join next
+        boundary anyway; don't give up all the fusion);
+      * idle queue                        -> longest S (pure throughput).
+    """
+    cs = sorted(set(int(c) for c in choices))
+    assert cs and cs[0] > 0, choices
+    if waiting and free_slots == 0:
+        return cs[0]
+    if waiting:
+        return cs[len(cs) // 2]
+    return cs[-1]
+
+
 def derive_policy(
     profiles: Dict[int, KneeProfile],
     n_slices: int,

@@ -1,19 +1,100 @@
-"""Batch -> slice dispatch with failure handling and straggler hedging.
+"""Batch/slot dispatch policies.
 
-The slice pool is the MIG analogue (core/slicing): V independent sub-mesh
-serving replicas. The scheduler keeps slices busy (least-loaded dispatch),
-evicts failed slices (their in-flight batches are re-queued), and hedges
-stragglers: if a slice exceeds `hedge_factor x` the expected execution time,
-the batch is speculatively re-dispatched to another free slice and the first
-completion wins (large-scale runnability requirement).
+`SliceScheduler`: batch -> slice dispatch with failure handling and straggler
+hedging. The slice pool is the MIG analogue (core/slicing): V independent
+sub-mesh serving replicas. The scheduler keeps slices busy (least-loaded
+dispatch), evicts failed slices (their in-flight batches are re-queued), and
+hedges stragglers: if a slice exceeds `hedge_factor x` the expected execution
+time, the batch is speculatively re-dispatched to another free slice and the
+first completion wins (large-scale runnability requirement).
+
+`SlotScheduler`: continuous-batching admission planner for the slot-pool
+engine. Pulls knee-formed batches from the BucketedBatcher as they come due,
+keeps an oldest-deadline-first backlog, and each engine iteration plans which
+requests join free KV slots and how long the next decode segment runs
+(policy.pick_segment_len). Admission groups stay bucketed + left-padded, so
+the prefill half of the engine remains one executable per prompt bucket.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.batching.buckets import Batch
+from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.policy import BatchPolicy, pick_segment_len
+
+
+@dataclass
+class SlotPlan:
+    """One engine iteration: admit these request groups into free slots (in
+    order), then run one decode segment of `segment_len` steps."""
+
+    admissions: List[List[Request]]
+    segment_len: int
+
+
+class SlotScheduler:
+    """Admission order + segment length for the continuous-batching engine.
+
+    The batcher still owns knee-driven batch *formation* (Batch_max /
+    Time_queue); this layer owns slot *admission*: due batches are drained
+    into a backlog ordered by ready time (EDF — the oldest request's flush
+    deadline expires first), and each plan() admits the `free_slots` oldest
+    requests as bucket-pure left-padded groups (one per power-of-two prompt
+    bucket, so short prompts never pay a long neighbor's padded prefill).
+    Requests that do not fit stay in the backlog and join at a later segment
+    boundary — that bounded wait (<= one segment once a slot frees) replaces
+    the run-to-completion path's head-of-line wait of up to max_new_tokens
+    steps.
+    """
+
+    def __init__(self, policy: BatchPolicy, *, max_slots: int,
+                 segment_len: int = 8, segment_lens: Sequence[int] = ()):
+        self.policy = policy
+        self.max_slots = max_slots
+        self.segment_len = segment_len
+        self.segment_lens = tuple(sorted(set(segment_lens))) or (segment_len,)
+        self._backlog: List[Request] = []
+
+    def backlog(self) -> int:
+        return len(self._backlog)
+
+    def pull(self, batcher: BucketedBatcher, now: float) -> None:
+        """Drain every batch the knee policy says is due at `now`."""
+        pulled = False
+        for b in batcher.poll(now):
+            self._backlog.extend(b.requests)
+            pulled = True
+        if pulled:
+            self._backlog.sort(key=Request.ready_at)
+
+    @staticmethod
+    def _lp_bucket(req: Request) -> int:
+        """Power-of-two prompt-length bucket (the engine's admit-executable
+        key); admission groups are kept bucket-pure so a short prompt never
+        pays a long neighbor's padded prefill."""
+        n = max(1, int(req.length))
+        return 1 << max(0, (n - 1).bit_length())
+
+    def plan(self, batcher: BucketedBatcher, now: float, *,
+             free_slots: int) -> SlotPlan:
+        self.pull(batcher, now)
+        free_slots = min(free_slots, self.max_slots)  # pool capacity bound
+        admissions: List[List[Request]] = []
+        if free_slots and self._backlog:
+            take = self._backlog[:free_slots]
+            del self._backlog[:free_slots]
+            groups: Dict[int, List[Request]] = {}
+            for r in take:  # bucket-pure groups, EDF order preserved
+                groups.setdefault(self._lp_bucket(r), []).append(r)
+            admissions.extend(groups.values())
+        waiting = len(self._backlog) + batcher.pending()
+        free_after = free_slots - sum(len(g) for g in admissions)
+        seg = pick_segment_len(
+            self.segment_lens, waiting=waiting, free_slots=free_after
+        )
+        return SlotPlan(admissions=admissions, segment_len=seg)
 
 
 @dataclass

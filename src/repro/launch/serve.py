@@ -2,6 +2,8 @@
 
 Local smoke: PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
                  --reduced --requests 32 --rate 50
+Continuous batching (slot pool + segmented decode): add --continuous
+                 [--max-slots 8 --segment-len 8]
 """
 from __future__ import annotations
 
@@ -15,6 +17,10 @@ def main():
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=50.0)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-pool continuous batching (in-flight join/leave)")
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--segment-len", type=int, default=8)
     args = ap.parse_args()
 
     import numpy as np
@@ -24,7 +30,11 @@ def main():
     from repro.serving.requests import WorkloadSpec, generate_requests
 
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
-    engine = build_engine(cfg, ec=EngineConfig(max_new_tokens=args.max_new))
+    engine = build_engine(cfg, ec=EngineConfig(
+        max_new_tokens=args.max_new, continuous=args.continuous,
+        max_slots=args.max_slots, segment_len=args.segment_len,
+        max_prompt_len=128,  # covers the workload's max_len=120 prompt bucket
+    ))
     reqs = generate_requests(
         WorkloadSpec(modality="text", rate_qps=args.rate, mean_len=48, max_len=120),
         args.requests,

@@ -74,6 +74,18 @@ def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def ring_slot_positions(pos: jax.Array, wc: int) -> jax.Array:
+    """Padded-coordinate position of the most recent write to each KV ring
+    slot: slot j holds position pos - ((pos - j) mod wc), the largest value
+    <= pos congruent to j (mod wc). Combined with a per-row pos_offset this
+    is the whole per-slot masking story for the serving slot pool: row b
+    treats ring slot j as true position ring_slot_positions(pos, wc)[j] -
+    pos_offset[b], and everything negative (left-pad slots, ring slots the
+    row has not written yet, other epochs' stale data) is masked invalid."""
+    j = jnp.arange(wc, dtype=jnp.int32)
+    return pos - jnp.mod(pos - j, wc)
+
+
 def _pair_mask(qpos: jax.Array, kpos: jax.Array, causal: bool, window: int) -> jax.Array:
     """[Sq, Skv] bool mask (or [B, Sq, Skv] when either pos is per-row [B, S]).
     Negative positions mark invalid slots: kpos < 0 excludes a cache slot,

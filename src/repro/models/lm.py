@@ -334,6 +334,90 @@ def cache_axes(cfg: ModelConfig, batch: int, cache_len: int):
 
 
 # ---------------------------------------------------------------------------
+# KV slot pool (continuous batching)
+#
+# The pool is one fixed-shape cache tree [max_slots, cache_len] shared by all
+# in-flight requests; requests join by having their prefill cache scattered
+# into a row slot and leave by simply being ignored (stale rows are masked by
+# pos_offset, overwritten on slot reuse). A single global scalar `clock` is
+# the shared padded write position: a request admitted at clock P with true
+# prompt length n gets pos_offset = P - n, its prompt KV lands on ring slots
+# (P - lp .. P - 1) mod cache_len, and every later decode step writes ring
+# slot clock % cache_len for all rows at once — so the decode executable
+# never changes shape as requests come and go.
+# ---------------------------------------------------------------------------
+
+
+def alloc_slot_pool(cfg: ModelConfig, max_slots: int, cache_len: int):
+    """Zero-initialized slot-pool cache tree (shape [max_slots, cache_len])."""
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        cache_specs(cfg, max_slots, cache_len),
+    )
+
+
+def _scatter_slot_tree(pool, pre, slot_ids, clock, lp: int, stacked: bool):
+    """Scatter prefill-cache rows into pool row slots. Attention k/v leaves
+    land on ring slots (clock - lp .. clock - 1) mod pool_ring; everything
+    else (ssm conv/state, cross-attn ck/cv) is a plain row copy. slot_ids
+    out of range (>= max_slots) mark padding rows and are dropped."""
+    out = {}
+    for name, pv in pool.items():
+        qv = pre[name]
+        if isinstance(pv, dict):
+            out[name] = _scatter_slot_tree(pv, qv, slot_ids, clock, lp, stacked)
+            continue
+        axis0 = 1 if stacked else 0  # body leaves carry a leading layer dim
+        if name in ("k", "v"):
+            wc = pv.shape[axis0 + 1]
+            assert qv.shape[axis0 + 1] == lp, (
+                "slot-pool admission needs the prefill ring to hold the whole "
+                "padded prompt (sliding_window must be 0 or >= prompt bucket)",
+                qv.shape, lp,
+            )
+            tgt = jnp.mod(clock - lp + jnp.arange(lp, dtype=jnp.int32), wc)
+            idx = (slot_ids[:, None], tgt[None, :])
+        else:
+            idx = (slot_ids,)
+        if stacked:
+            idx = (slice(None),) + idx
+        out[name] = pv.at[idx].set(qv.astype(pv.dtype), mode="drop")
+    return out
+
+
+def scatter_into_slots(pool_cache, prefill_cache, slot_ids, clock, lp: int):
+    """Admit a prefilled batch into pool row slots (see module comment).
+    prefill_cache rows i land in pool slot slot_ids[i]; rows whose slot id is
+    out of range (admission padding) are dropped."""
+    slot_ids = slot_ids.astype(jnp.int32)
+    clock = jnp.asarray(clock, jnp.int32)
+    out = {}
+    if "prefix" in pool_cache:
+        out["prefix"] = _scatter_slot_tree(
+            pool_cache["prefix"], prefill_cache["prefix"], slot_ids, clock, lp, False
+        )
+    out["body"] = _scatter_slot_tree(
+        pool_cache["body"], prefill_cache["body"], slot_ids, clock, lp, True
+    )
+    return out
+
+
+def prefill_into_slots(params, tokens, pool_cache, slot_ids, clock,
+                       cfg: ModelConfig, *, pos_offset=None):
+    """Fused admission: prefill a left-padded (batch, lp) prompt bucket and
+    scatter its KV/state into slot-pool rows, one executable per prompt
+    bucket (the compile-once prefill half of continuous batching).
+
+    Returns (first greedy tokens [B, 1] int32, new pool cache). The caller
+    sets each admitted slot's pos_offset to clock - true_prompt_len so decode
+    positions continue seamlessly from the prompt."""
+    lp = tokens.shape[1]
+    logits, pcache = prefill(params, tokens, cfg, pos_offset=pos_offset, cache_len=lp)
+    new_pool = scatter_into_slots(pool_cache, pcache, slot_ids, clock, lp)
+    return jnp.argmax(logits, -1).astype(jnp.int32), new_pool
+
+
+# ---------------------------------------------------------------------------
 # Forward pieces
 # ---------------------------------------------------------------------------
 
@@ -420,8 +504,7 @@ def _attn_decode(x, p, cfg, cache, pos, pos_offset=None):
     k1 = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
     v1 = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
     wc = cache["k"].shape[1]
-    j = jnp.arange(wc, dtype=jnp.int32)
-    slot_pos = pos - jnp.mod(pos - j, wc)  # padded-coordinate position per slot
+    slot_pos = L.ring_slot_positions(pos, wc)  # padded position per ring slot
     if pos_offset is None:
         qpos = pos[None].astype(jnp.int32)
         kpos = jnp.where(slot_pos >= 0, slot_pos, -1)
@@ -757,18 +840,38 @@ def generate(params, cache, last_logits, pos0: int, cfg: ModelConfig, *,
     tok0 = jnp.argmax(last_logits, -1).astype(jnp.int32)  # [B,1]
     if steps == 1:
         return tok0, cache
+    rest, cache = decode_segment(
+        params, cache, tok0, pos0, cfg, steps=steps - 1, pos_offset=pos_offset
+    )
+    return jnp.concatenate([tok0, rest], axis=1), cache
+
+
+def decode_segment(params, cache, tok, pos0, cfg: ModelConfig, *,
+                   steps: int, pos_offset=None):
+    """Segment mode of the fused generate scan (continuous batching): greedy-
+    decode `steps` tokens starting *after* the last emitted token `tok`
+    [B, 1], as one jitted lax.scan. Between segments the caller may retire
+    finished rows and admit new requests into free slots (prefill_into_slots)
+    — the segment executable itself never changes shape, so steady-state
+    serving stays at two traced programs (one prefill bucket + one segment).
+
+    pos0: the shared padded write position of the first decoded step (the
+    slot-pool clock); pos_offset: [B] per-slot offsets (true position =
+    padded position - offset). Returns (tokens [B, steps] int32, new cache);
+    chaining segments is bit-identical to one longer segment or to the
+    sequential decode() loop."""
 
     def step(carry, _):
-        c, tok, pos = carry
-        logits, c = decode(params, c, tok, pos, cfg, pos_offset=pos_offset)
+        c, t, pos = carry
+        logits, c = decode(params, c, t, pos, cfg, pos_offset=pos_offset)
         ntok = jnp.argmax(logits, -1).astype(jnp.int32)
         return (c, ntok, pos + 1), ntok
 
     (cache, _, _), toks = jax.lax.scan(
-        step, (cache, tok0, jnp.asarray(pos0, jnp.int32)), length=steps - 1
+        step, (cache, tok, jnp.asarray(pos0, jnp.int32)), length=steps
     )
-    # toks: [steps-1, B, 1] -> [B, steps-1]
-    return jnp.concatenate([tok0, jnp.moveaxis(toks[..., 0], 0, 1)], axis=1), cache
+    # toks: [steps, B, 1] -> [B, steps]
+    return jnp.moveaxis(toks[..., 0], 0, 1), cache
 
 
 # ---------------------------------------------------------------------------

@@ -4,16 +4,35 @@ Compile-once hot path: prefill inputs are left-padded to power-of-two
 (batch, length) shape buckets and dispatched through `_prefill_cache`, a
 jitted-executable cache keyed on the padded shape; padded positions are
 masked out of attention and the KV cache (lm.forward pos_offset), so padding
-never changes a request's logits. Decode runs as a single fused jitted
-`lm.generate` — `max_new_tokens` steps inside one `lax.scan` with the KV
-cache donated — instead of a per-token Python loop. Steady-state serving on
-a stable bucket therefore traces exactly twice: one prefill bucket + one
-generate program (see benchmarks/bench_engine.py, BENCH_serve.json).
+never changes a request's logits.
 
-Composes the DPU/CPU preprocess runtime and BucketedBatcher; SliceScheduler
-integration (multi-slice real execution) is future work tracked in ROADMAP.md.
-The legacy per-batch-shape / per-token path is kept behind EngineConfig
-(pad_buckets=False, fused_decode=False) as the benchmark baseline.
+Two decode regimes share that prefill discipline:
+
+* run-to-completion (`continuous=False`): each formed batch runs one fused
+  jitted `lm.generate` — `max_new_tokens` steps in one `lax.scan` with the KV
+  cache donated. Simple, but a batch occupies the model for the full scan
+  even after most rows finish, and new arrivals wait it out (head-of-line
+  blocking at the latency/throughput knee).
+
+* continuous batching (`continuous=True`): the KV cache is ONE fixed-shape
+  slot pool `[max_slots, pool_cache_len]` allocated up front; serving is a
+  loop of admit -> decode-segment -> retire. Admission prefills a left-padded
+  prompt bucket and scatters it into free row slots (`lm.prefill_into_slots`,
+  one executable per prompt bucket); decode runs `lm.decode_segment`
+  (`segment_len` steps in one jitted scan, pool donated); finished/EOS rows
+  free their slots between segments and queued requests join without waiting
+  for the pool to drain. A single scalar clock is the shared padded write
+  position; per-slot `pos_offset` maps it to each request's true position,
+  so a request's tokens are bit-identical to decoding it alone (see
+  tests/test_engine_hotpath.py). Steady-state serving traces exactly two
+  programs: one prefill bucket + one segment.
+
+Composes the DPU/CPU preprocess runtime (same-shape pending requests are
+preprocessed through one batched CU launch at submit), the BucketedBatcher
+(knee-driven batch formation), and the SlotScheduler (admission order +
+segment length). The legacy per-batch-shape / per-token path is kept behind
+EngineConfig (pad_buckets=False, fused_decode=False) as the benchmark
+baseline.
 """
 from __future__ import annotations
 
@@ -28,22 +47,40 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.batching.buckets import Batch, BucketedBatcher, Request
 from repro.core.batching.policy import BatchPolicy
+from repro.core.batching.scheduler import SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
 from repro.models import api, lm
 
 
 @dataclass
 class EngineConfig:
-    max_new_tokens: int = 8
+    max_new_tokens: int = 8        # decode budget cap (per-request budgets clamp to it)
     bucket_width: float = 64.0     # prompt-length buckets (tokens)
     preprocess: str = "none"       # none | dpu (audio/image frontends)
     pad_buckets: bool = True       # pow2 (batch, len) shape buckets + masking
     fused_decode: bool = True      # lax.scan lm.generate vs per-token loop
     min_prompt_len: int = 8        # shortest padded prompt length
+    # --- continuous batching (slot pool + segmented decode) ---
+    continuous: bool = False       # slot-pool admit/segment/retire loop
+    max_slots: int = 8             # KV slot-pool rows (in-flight requests)
+    segment_len: int = 8           # decode steps per jitted segment
+    segment_lens: Tuple[int, ...] = ()  # scheduler choices; () = fixed segment_len
+    max_prompt_len: int = 64       # largest padded prompt bucket the pool accepts
+    pool_cache_len: int = 0        # 0 -> max_prompt_len + max_new_tokens + max segment
+    eos_id: Optional[int] = None   # retire a row early when it emits this token
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
+
+
+@dataclass
+class _Slot:
+    """Host-side state of one occupied pool row."""
+
+    req: Request
+    budget: int
+    produced: List[int]
 
 
 class ServingEngine:
@@ -51,13 +88,18 @@ class ServingEngine:
     through preprocess -> dynamic batching -> prefill -> decode.
 
     `stats` tracks the compile-once invariant: `prefill_traces` /
-    `generate_traces` / `decode_step_traces` increment only while JAX is
-    tracing (Python side effects don't run on cached executables), and
-    `prefill_cache_hits` counts bucket reuse.
+    `generate_traces` / `segment_traces` / `decode_step_traces` increment
+    only while JAX is tracing (Python side effects don't run on cached
+    executables), and `prefill_cache_hits` counts bucket reuse. Continuous
+    batching adds `admitted` / `retired` / `segments` counters and
+    `slot_occupancy` (active-slot fraction per segment).
     """
 
     def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
-                 ec: EngineConfig = EngineConfig()):
+                 ec: Optional[EngineConfig] = None):
+        # mutable-default hazard: a shared EngineConfig() default instance
+        # would leak field mutations across engines — build a fresh one here.
+        ec = EngineConfig() if ec is None else ec
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -66,13 +108,19 @@ class ServingEngine:
         self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
         self.completed: List[Request] = []
         self.batch_exec_s: List[float] = []
+        self.slot_occupancy: List[float] = []
         self.stats: Dict[str, int] = {
             "batches": 0,
             "prefill_compiles": 0,
             "prefill_cache_hits": 0,
             "prefill_traces": 0,
             "generate_traces": 0,
+            "segment_traces": 0,
             "decode_step_traces": 0,
+            "admitted": 0,
+            "retired": 0,
+            "segments": 0,
+            "dpu_batches": 0,
         }
         # (padded_batch, padded_len) -> jitted prefill executable
         self._prefill_cache: Dict[Tuple[int, int], Any] = {}
@@ -91,23 +139,121 @@ class ServingEngine:
 
         self._decode_jit = jax.jit(_decode_step)
 
+        # --- continuous-batching state (slot pool) -------------------------
+        self.slot_scheduler: Optional[SlotScheduler] = None
+        if ec.continuous:
+            seg_max = max(ec.segment_lens or (ec.segment_len,))
+            self.pool_len = ec.pool_cache_len or (
+                ec.max_prompt_len + ec.max_new_tokens + seg_max
+            )
+            assert self.pool_len >= ec.max_prompt_len + ec.max_new_tokens, (
+                "pool_cache_len too small for max_prompt_len + max_new_tokens"
+            )
+            self.slot_scheduler = SlotScheduler(
+                policy, max_slots=ec.max_slots,
+                segment_len=ec.segment_len, segment_lens=ec.segment_lens,
+            )
+            self._pool = None                     # allocated on first admit
+            self._slots: List[Optional[_Slot]] = [None] * ec.max_slots
+            self._pool_off = np.zeros(ec.max_slots, np.int32)
+            self._tok = np.zeros((ec.max_slots, 1), np.int32)
+            # clock >= any padded prompt bucket, so admission ring targets
+            # (clock - lp .. clock - 1) never wrap on join; reset when idle.
+            self._clock = ec.max_prompt_len
+            # lp -> jitted prefill+admit executable
+            self._admit_cache: Dict[int, Any] = {}
+
+            def _segment(p, cache, tok, clock, off, steps):
+                self.stats["segment_traces"] += 1  # trace-time only
+                return lm.decode_segment(p, cache, tok, clock, cfg,
+                                         steps=steps, pos_offset=off)
+
+            self._segment_jit = jax.jit(
+                _segment, static_argnums=(5,), donate_argnums=(1,)
+            )
+
     # --- queueing ----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        req.preprocessed_at = time.monotonic()
-        self.batcher.enqueue(req)
+        self.submit_many([req])
+
+    def submit_many(self, reqs: List[Request]) -> None:
+        """Enqueue requests; with preprocess='dpu', pending requests carrying
+        raw inputs in `payload` are preprocessed as ONE batched CU pass
+        (DPU.process_batch groups same-shape requests into a single Pallas
+        launch per functional unit) instead of one launch per request."""
+        if self.ec.continuous:
+            # reject oversized prompts HERE, before anything is enqueued —
+            # raising at admission time would drop the whole already-popped
+            # admission group, valid requests included
+            for r in reqs:
+                lp = max(self.ec.min_prompt_len,
+                         _next_pow2(max(1, int(r.length))))
+                if lp > self.ec.max_prompt_len:
+                    raise ValueError(
+                        f"request {r.rid}: prompt bucket {lp} exceeds "
+                        f"max_prompt_len={self.ec.max_prompt_len}; raise "
+                        "EngineConfig.max_prompt_len"
+                    )
+        if self.dpu is not None:
+            idx = [i for i, r in enumerate(reqs) if r.payload is not None]
+            if idx:
+                outs = self.dpu.process_batch([reqs[i].payload for i in idx])
+                for i, y in zip(idx, outs):
+                    reqs[i].payload = y
+                self.stats["dpu_batches"] += 1
+        now = time.monotonic()
+        for r in reqs:
+            r.preprocessed_at = now
+            self.batcher.enqueue(r)
+
+    def busy(self) -> bool:
+        if self.batcher.pending():
+            return True
+        if self.ec.continuous:
+            return bool(self.slot_scheduler.backlog()) or any(
+                s is not None for s in self._slots
+            )
+        return False
+
+    def step(self, now: Optional[float] = None) -> bool:
+        """One engine iteration; returns True if any work was done.
+
+        Run-to-completion: execute every batch due at `now`. Continuous:
+        admit due requests into free slots, run one decode segment, retire
+        finished rows."""
+        now = time.monotonic() if now is None else now
+        if not self.ec.continuous:
+            batches = self.batcher.poll(now)
+            for b in batches:
+                self._execute(b)
+            return bool(batches)
+
+        plan = self.slot_scheduler.plan(
+            self.batcher, now, free_slots=self._free_slots()
+        )
+        progressed = False
+        for group in plan.admissions:
+            self._admit(group)
+            progressed = True
+        if any(s is not None for s in self._slots):
+            self._decode_segment(plan.segment_len)
+            progressed = True
+        elif not self.slot_scheduler.backlog() and not self.batcher.pending():
+            # pool drained: rewind the clock so ring positions stay small
+            # (keeps admissions wrap-free => bit-exact vs isolated decode)
+            self._clock = self.ec.max_prompt_len
+            self._pool_off[:] = 0
+        return progressed
 
     def run_until_idle(self) -> List[Request]:
-        while self.batcher.pending():
-            now = time.monotonic()
-            batches = self.batcher.poll(now)
-            if not batches:
+        while self.busy():
+            progressed = self.step()
+            if not progressed:
                 # advance the logical clock to the earliest real flush
                 # deadline (no busy spin, and formed_at records the true
                 # flush time instead of a fabricated now + time_queue)
                 deadline = self.batcher.next_deadline()
-                batches = self.batcher.poll(deadline if deadline is not None else now)
-            for b in batches:
-                self._execute(b)
+                self.step(deadline if deadline is not None else time.monotonic())
         return self.completed
 
     # --- hot path ----------------------------------------------------------
@@ -120,24 +266,42 @@ class ServingEngine:
             max(self.ec.min_prompt_len, _next_pow2(max_len)),
         )
 
+    def _prompt_tokens(self, req: Request, n: int) -> np.ndarray:
+        """Synthetic prompt (deterministic per request id) — the benchmark
+        workload; real tokenized prompts would ride in req.payload."""
+        rng = np.random.default_rng(req.rid)
+        return rng.integers(0, self.cfg.vocab, n)
+
+    def _budget(self, req: Request) -> int:
+        b = self.ec.max_new_tokens if req.max_new_tokens is None else req.max_new_tokens
+        return max(1, min(b, self.ec.max_new_tokens))
+
+    def _left_pad_prompts(self, reqs: List[Request], lens: List[int],
+                          bp: int, lp: int):
+        """Shared left-pad fill for prefill and slot admission: returns
+        (tokens [bp, lp], pos_offset [bp]); rows beyond len(reqs) stay fully
+        padded (offset == lp)."""
+        toks = np.zeros((bp, lp), np.int32)
+        off = np.full(bp, lp, np.int32)
+        for i, r in enumerate(reqs):
+            n = lens[i]
+            toks[i, lp - n:] = self._prompt_tokens(r, n)
+            off[i] = lp - n
+        return toks, off
+
     def _pad_batch(self, batch: Batch):
         """Left-pad prompts into the shape bucket. Returns (tokens [Bp, Lp],
         pos_offset [Bp] or None, (Bp, Lp)). Rows beyond the real batch are
         fully padded (offset == Lp) and their outputs discarded."""
         lens = [max(1, int(r.length)) for r in batch.requests]
         bp, lp = self.bucket_shape(len(batch.requests), max(lens))
+        if self.ec.pad_buckets:
+            toks, off = self._left_pad_prompts(batch.requests, lens, bp, lp)
+            return jnp.asarray(toks), jnp.asarray(off), (bp, lp)
         toks = np.zeros((bp, lp), np.int32)
-        off = np.full(bp, lp, np.int32)
-        for i, r in enumerate(batch.requests):
-            n = lens[i]
-            rng = np.random.default_rng(r.rid)
-            if self.ec.pad_buckets:
-                toks[i, lp - n:] = rng.integers(0, self.cfg.vocab, n)
-                off[i] = lp - n
-            else:  # legacy: right-pad with zeros acting as real tokens
-                toks[i, :n] = rng.integers(0, self.cfg.vocab, n)
-        offset = jnp.asarray(off) if self.ec.pad_buckets else None
-        return jnp.asarray(toks), offset, (bp, lp)
+        for i, r in enumerate(batch.requests):  # legacy: right-pad with zeros
+            toks[i, :lens[i]] = self._prompt_tokens(r, lens[i])
+        return jnp.asarray(toks), None, (bp, lp)
 
     def _get_prefill(self, bp: int, lp: int):
         """Jitted-executable cache keyed on the padded shape bucket."""
@@ -182,14 +346,151 @@ class ServingEngine:
         for i, r in enumerate(batch.requests):
             r.dispatched_at = t0
             r.completed_at = done
-            r.payload = tokens[i]
+            # run-to-completion decodes the full scan regardless; honor the
+            # per-request budget by truncation (the wasted steps are the cost
+            # continuous batching removes)
+            r.payload = self._truncate(tokens[i], self._budget(r))
             self.completed.append(r)
+
+    def _truncate(self, tokens, budget: int) -> np.ndarray:
+        out = np.asarray(tokens[:budget], np.int32)
+        if self.ec.eos_id is not None:
+            hits = np.flatnonzero(out == self.ec.eos_id)
+            if hits.size:
+                out = out[: hits[0] + 1]
+        return out
+
+    # --- continuous batching (slot pool + segmented decode) ----------------
+    def _free_slots(self) -> int:
+        return sum(1 for s in self._slots if s is None)
+
+    def _ensure_pool(self) -> None:
+        if self._pool is None:
+            self._pool = lm.alloc_slot_pool(
+                self.cfg, self.ec.max_slots, self.pool_len
+            )
+
+    def _get_admit(self, lp: int):
+        """Jitted prefill+admit executable, one per padded prompt length.
+        Admission batch width is pinned to max_slots so the program never
+        retraces as group sizes vary (compile-once over the whole stream)."""
+        fn = self._admit_cache.get(lp)
+        if fn is not None:
+            self.stats["prefill_cache_hits"] += 1
+            return fn
+
+        def _admit(p, toks, off, pool, slot_ids, clock):
+            self.stats["prefill_traces"] += 1  # trace-time only
+            return lm.prefill_into_slots(
+                p, toks, pool, slot_ids, clock, self.cfg, pos_offset=off
+            )
+
+        fn = jax.jit(_admit, donate_argnums=(3,))
+        self._admit_cache[lp] = fn
+        self.stats["prefill_compiles"] += 1
+        return fn
+
+    def _admit(self, reqs: List[Request]) -> None:
+        """Prefill a left-padded admission group and join it into free slots."""
+        self._ensure_pool()
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        assert len(reqs) <= len(free), (len(reqs), len(free))
+        lens = [max(1, int(r.length)) for r in reqs]
+        lp = max(self.ec.min_prompt_len, _next_pow2(max(lens)))
+        assert lp <= self.ec.max_prompt_len, lp  # enforced at submit time
+        assert self._clock >= lp  # clock starts at max_prompt_len, only grows
+        bp = self.ec.max_slots
+        toks, off = self._left_pad_prompts(reqs, lens, bp, lp)
+        sids = np.full(bp, bp, np.int32)  # out-of-range rows -> dropped
+        sids[: len(reqs)] = free[: len(reqs)]
+        tok0, self._pool = self._get_admit(lp)(
+            self.params, jnp.asarray(toks), jnp.asarray(off), self._pool,
+            jnp.asarray(sids), jnp.int32(self._clock),
+        )
+        tok0 = np.asarray(tok0)
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            s = free[i]
+            self._pool_off[s] = self._clock - lens[i]
+            self._tok[s] = tok0[i]
+            self._slots[s] = _Slot(req=r, budget=self._budget(r),
+                                   produced=[int(tok0[i, 0])])
+            r.dispatched_at = now
+        self.stats["admitted"] += len(reqs)
+        self._retire_finished(now)  # budget-1 / instant-EOS requests
+
+    def _decode_segment(self, steps: int) -> None:
+        """One fused segment over the whole pool; finished rows retire after."""
+        t0 = time.monotonic()
+        toks, self._pool = self._segment_jit(
+            self.params, self._pool, jnp.asarray(self._tok),
+            jnp.int32(self._clock), jnp.asarray(self._pool_off), int(steps),
+        )
+        toks = np.asarray(toks)
+        self._clock += steps
+        if self._clock >= self.ec.max_prompt_len + 8 * self.pool_len:
+            self._rebase_clock()
+        self._tok = toks[:, -1:].astype(np.int32).copy()
+        done = time.monotonic()
+        self.batch_exec_s.append(done - t0)
+        self.stats["segments"] += 1
+        n_active = self.ec.max_slots - self._free_slots()
+        self.slot_occupancy.append(n_active / self.ec.max_slots)
+        for s, st in enumerate(self._slots):
+            if st is None:
+                continue
+            take = min(steps, st.budget - len(st.produced))
+            if take > 0:
+                st.produced.extend(int(t) for t in toks[s, :take])
+        self._retire_finished(done)
+
+    def _rebase_clock(self) -> None:
+        """Shift the clock and every slot offset down by a multiple of the
+        ring length. slot_pos/qpos/kpos and the ring write index are all
+        invariant under pos -> pos - k*ring (offsets shifted alike), so
+        in-flight rows are bit-unaffected — and int32 positions stay bounded
+        under sustained (never-idle) serving."""
+        k = (self._clock - self.ec.max_prompt_len) // self.pool_len
+        if k <= 0:
+            return
+        self._clock -= k * self.pool_len
+        self._pool_off -= np.int32(k * self.pool_len)
+        for s, st in enumerate(self._slots):
+            if st is None:
+                self._pool_off[s] = 0  # keep free-row offsets bounded too
+
+    def _retire_finished(self, now: float) -> None:
+        eos = self.ec.eos_id
+        for s, st in enumerate(self._slots):
+            if st is None:
+                continue
+            done = len(st.produced) >= st.budget or (
+                eos is not None and eos in st.produced
+            )
+            if not done:
+                continue
+            r = st.req
+            # same budget-clamp + first-eos cut as the run-to-completion path
+            r.payload = self._truncate(np.asarray(st.produced, np.int32),
+                                       st.budget)
+            r.completed_at = now
+            self.completed.append(r)
+            # free the slot; its stale KV stays masked for the next occupant
+            # (pos_offset is rewritten at the next admission)
+            self._slots[s] = None
+            self.stats["retired"] += 1
+
+    def mean_slot_occupancy(self) -> float:
+        if not self.slot_occupancy:
+            return 0.0
+        return float(np.mean(self.slot_occupancy))
 
 
 def build_engine(cfg: ModelConfig, *, seed: int = 0,
-                 ec: EngineConfig = EngineConfig()) -> ServingEngine:
+                 ec: Optional[EngineConfig] = None) -> ServingEngine:
     from repro.core.batching import analytical_knee, derive_policy, kv_bytes_per_token
 
+    ec = EngineConfig() if ec is None else ec
     params = api.init_params(cfg, jax.random.PRNGKey(seed), dtype=cfg.dtype)
     n_active = cfg.active_param_count()
     profiles = {

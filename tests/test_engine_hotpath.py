@@ -1,6 +1,7 @@
 """Compile-once serving hot path: padded-bucket prefill identity, fused
-lax.scan decode bit-identity, jitted-executable cache behavior, and batched
-DPU preprocessing equivalence."""
+lax.scan decode bit-identity, jitted-executable cache behavior, continuous
+batching (slot pool + segmented join/leave) identity, and batched DPU
+preprocessing wiring."""
 import numpy as np
 import pytest
 
@@ -8,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import reduced
+from repro.core.batching import analytical_knee, derive_policy
 from repro.core.batching.buckets import Batch, Request
 from repro.models import lm
 from repro.serving.engine import EngineConfig, ServingEngine, build_engine
@@ -196,6 +198,222 @@ def test_run_until_idle_uses_real_flush_deadline(tiny):
     done = engine.run_until_idle()
     assert len(done) == 2
     assert all(r.payload is not None and len(r.payload) == 2 for r in done)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: slot pool + segmented decode with in-flight join/leave
+# ---------------------------------------------------------------------------
+
+
+def _isolated_ref(cfg, params, rid, n, steps):
+    """Reference: the request decoded alone via lm.prefill + sequential
+    lm.decode (no padding, no pool, no segments)."""
+    prompt = np.random.default_rng(rid).integers(0, cfg.vocab, n).astype(np.int32)
+    logits, cache = lm.prefill(params, jnp.asarray(prompt)[None], cfg,
+                               cache_len=n + steps)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [np.asarray(tok[0])]
+    for t in range(steps - 1):
+        logits, cache = lm.decode(params, cache, tok, jnp.int32(n + t), cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(np.asarray(tok[0]))
+    return np.concatenate(outs)
+
+
+def _cheap_policy():
+    return derive_policy({0: analytical_knee(1_000_000, chips=1)},
+                         n_slices=1, bucket_width=64.0)
+
+
+def test_continuous_join_leave_bit_identical(tiny):
+    """The masking/pos_offset proof: a request decoded via segmented
+    join/leave in the slot pool is bit-identical to the same request decoded
+    alone via lm.decode — including requests that JOIN while another is
+    mid-flight and LEAVE (retire) while others keep decoding."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=12, max_prompt_len=32)
+    engine = build_engine(cfg, ec=ec)
+    r1 = Request(rid=1, arrival=0.0, length=9.0, max_new_tokens=12)
+    r2 = Request(rid=2, arrival=0.0, length=23.0, max_new_tokens=5)
+    r3 = Request(rid=3, arrival=0.0, length=14.0, max_new_tokens=9)
+    engine._admit([r1])
+    engine._decode_segment(4)          # r1 decodes alone
+    engine._admit([r2, r3])            # join while r1 is mid-flight
+    for _ in range(3):
+        engine._decode_segment(4)      # r2 leaves first, then r3, then r1
+    done = {r.rid: r for r in engine.completed}
+    assert set(done) == {1, 2, 3}
+    for r in done.values():
+        assert len(r.payload) == r.max_new_tokens
+        ref = _isolated_ref(cfg, engine.params, r.rid, int(r.length),
+                            len(r.payload))
+        np.testing.assert_array_equal(r.payload, ref)
+
+
+def test_continuous_run_until_idle_matches_isolated(tiny):
+    """End-to-end: heterogeneous budgets through submit/run_until_idle, with
+    more requests than slots (slot reuse), stay bit-identical to isolated
+    decode and honor per-request budgets."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=12, max_prompt_len=32)
+    engine = build_engine(cfg, ec=ec)
+    spec = [(9, 12), (23, 5), (14, 8), (17, 12), (11, 3), (20, 7)]
+    for i, (n, b) in enumerate(spec):
+        engine.submit(Request(rid=i, arrival=0.0, length=float(n),
+                              max_new_tokens=b))
+    done = engine.run_until_idle()
+    assert len(done) == len(spec)
+    for r in done:
+        assert len(r.payload) == r.max_new_tokens
+        ref = _isolated_ref(cfg, engine.params, r.rid, int(r.length),
+                            len(r.payload))
+        np.testing.assert_array_equal(r.payload, ref)
+
+
+def test_continuous_join_leave_bit_identical_ssm():
+    """Slot-pool admission also covers SSM caches (conv tail + state row
+    copies): mamba2 join/leave matches isolated decode bit-for-bit."""
+    cfg = reduced("mamba2-370m")
+    ec = EngineConfig(continuous=True, max_slots=2, segment_len=4,
+                      max_new_tokens=6, max_prompt_len=16)
+    engine = build_engine(cfg, ec=ec)
+    r1 = Request(rid=11, arrival=0.0, length=6.0, max_new_tokens=6)
+    r2 = Request(rid=12, arrival=0.0, length=11.0, max_new_tokens=4)
+    engine._admit([r1])
+    engine._decode_segment(4)
+    engine._admit([r2])                # joins while r1 is mid-flight
+    engine._decode_segment(4)
+    done = {r.rid: r for r in engine.completed}
+    assert set(done) == {11, 12}
+    for r in done.values():
+        ref = _isolated_ref(cfg, engine.params, r.rid, int(r.length),
+                            len(r.payload))
+        np.testing.assert_array_equal(r.payload, ref)
+
+
+def test_continuous_steady_state_traces(tiny):
+    """Steady-state continuous serving traces exactly TWO programs — one
+    prefill+admit bucket and one segment. Joins, leaves, slot reuse, clock
+    growth across waves: none of it retraces."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=8, max_prompt_len=32)
+    engine = build_engine(cfg, ec=ec)
+    n = 0
+    for wave in range(3):
+        for i, (l, b) in enumerate([(17, 8), (25, 3), (30, 6), (21, 8), (19, 5)]):
+            engine.submit(Request(rid=100 * wave + i, arrival=0.0,
+                                  length=float(l), max_new_tokens=b))
+            n += 1
+        engine.run_until_idle()
+    assert len(engine.completed) == n
+    assert engine.stats["prefill_traces"] == 1
+    assert engine.stats["segment_traces"] == 1
+    assert engine.stats["generate_traces"] == 0
+    assert engine.stats["decode_step_traces"] == 0
+    assert engine.stats["admitted"] == engine.stats["retired"] == n
+    assert engine.stats["segments"] > 0
+    assert 0.0 < engine.mean_slot_occupancy() <= 1.0
+
+
+def test_continuous_eos_retires_early(tiny):
+    """A row emitting eos_id frees its slot before its budget is spent and
+    its payload is truncated at the first eos."""
+    cfg, params = tiny
+    base = dict(continuous=True, max_slots=2, segment_len=4,
+                max_new_tokens=8, max_prompt_len=32)
+    e1 = build_engine(cfg, ec=EngineConfig(**base))
+    e1.submit(Request(rid=7, arrival=0.0, length=12.0))
+    (full,) = e1.run_until_idle()
+    assert len(full.payload) == 8
+    eos = int(full.payload[2])
+    exp_len = int(np.flatnonzero(full.payload == eos)[0]) + 1
+    e2 = build_engine(cfg, ec=EngineConfig(eos_id=eos, **base))
+    e2.submit(Request(rid=7, arrival=0.0, length=12.0))
+    (r,) = e2.run_until_idle()
+    assert int(r.payload[-1]) == eos
+    assert len(r.payload) == exp_len < 8
+    np.testing.assert_array_equal(r.payload, full.payload[:exp_len])
+
+
+def test_continuous_rejects_oversized_prompt_at_submit(tiny):
+    """Oversized prompts must fail at submit — before they are enqueued —
+    so an admission group is never lost mid-flight to a late ValueError."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=2, segment_len=4,
+                      max_new_tokens=4, max_prompt_len=32)
+    engine = ServingEngine(cfg, params, _cheap_policy(), ec)
+    with pytest.raises(ValueError, match="max_prompt_len"):
+        engine.submit(Request(rid=1, arrival=0.0, length=33.0))
+    assert engine.batcher.pending() == 0  # nothing half-enqueued
+
+
+def test_continuous_clock_rebase_is_bit_invariant(tiny):
+    """Sustained serving rebases the clock (pos -> pos - k*ring for every
+    slot) so int32 positions stay bounded; in-flight and future requests
+    must be bit-unaffected. Simulate a long-lived engine by shifting the
+    clock+offsets up by k*ring (the exact state a long run would reach),
+    then serve across the rebase threshold."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=8, max_prompt_len=32)
+    engine = build_engine(cfg, ec=ec)
+    r1 = Request(rid=41, arrival=0.0, length=9.0, max_new_tokens=8)
+    engine._admit([r1])
+    engine._decode_segment(4)      # r1 mid-flight
+    shift = 9 * engine.pool_len    # past the rebase threshold
+    engine._clock += shift
+    engine._pool_off += np.int32(shift)
+    engine._decode_segment(4)      # triggers _rebase_clock with r1 live
+    assert engine._clock < engine.ec.max_prompt_len + 8 * engine.pool_len
+    r2 = Request(rid=42, arrival=0.0, length=14.0, max_new_tokens=6)
+    engine._admit([r2])            # joins post-rebase
+    engine._decode_segment(4)
+    engine._decode_segment(4)
+    done = {r.rid: r for r in engine.completed}
+    assert set(done) == {41, 42}
+    for r in done.values():
+        ref = _isolated_ref(cfg, engine.params, r.rid, int(r.length),
+                            len(r.payload))
+        np.testing.assert_array_equal(r.payload, ref)
+
+
+def test_engine_config_default_not_shared(tiny):
+    """Regression: engines built without an explicit EngineConfig must not
+    share one default instance (mutating one engine's config leaked into
+    every other engine)."""
+    cfg, params = tiny
+    policy = _cheap_policy()
+    e1 = ServingEngine(cfg, params, policy)
+    e1.ec.max_new_tokens = 99
+    e2 = ServingEngine(cfg, params, policy)
+    assert e1.ec is not e2.ec
+    assert e2.ec.max_new_tokens == EngineConfig().max_new_tokens
+
+
+def test_engine_submit_batches_dpu_preprocess(tiny):
+    """preprocess='dpu': pending requests carrying raw inputs are
+    preprocessed as one DPU.process_batch pass at submit (same-shape groups
+    share a CU launch), matching the per-request pipeline output."""
+    from repro.data import preprocess_cpu as pp
+
+    cfg, params = tiny
+    engine = ServingEngine(cfg, params, _cheap_policy(),
+                           EngineConfig(preprocess="dpu"))
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(48000).astype(np.float32) for _ in range(3)]
+    xs.append(rng.standard_normal(32000).astype(np.float32))  # odd shape out
+    reqs = [Request(rid=i, arrival=0.0, length=3.0, payload=x)
+            for i, x in enumerate(xs)]
+    engine.submit_many(reqs)
+    assert engine.stats["dpu_batches"] == 1
+    assert engine.dpu.processed == len(xs)
+    assert engine.batcher.pending() == len(xs)
+    for r, x in zip(reqs, xs):
+        np.testing.assert_allclose(r.payload, pp.audio_pipeline(x),
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_engine_payloads_unaffected_by_batch_composition(tiny):

@@ -1,7 +1,9 @@
-"""SliceScheduler hedging/completion semantics: regression guard before
-multi-slice real execution lands on the compile-once hot path."""
-from repro.core.batching.buckets import Batch, Request
-from repro.core.batching.scheduler import SliceScheduler
+"""Scheduler-layer semantics: SliceScheduler hedging/completion (regression
+guard before multi-slice real execution lands on the compile-once hot path)
+and SlotScheduler continuous-batching admission planning."""
+from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.policy import BatchPolicy, pick_segment_len
+from repro.core.batching.scheduler import SliceScheduler, SlotScheduler
 
 
 def _batch(rid0=0, n=2):
@@ -67,3 +69,67 @@ def test_hedge_needs_free_slice_and_marks_straggler():
     # an already-hedged straggler is not re-listed for hedging
     assert sid not in s2.stragglers(now=10.0)
     assert s2.hedges == 1
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching slot scheduler (admission order + segment length)
+# ---------------------------------------------------------------------------
+
+
+def _policy(bmax_by_bucket, tq=0.05):
+    return BatchPolicy(
+        batch_max=bmax_by_bucket, time_queue=tq, time_knee=tq * 4,
+        n_slices=4, bucket_width=2.5,
+    )
+
+
+def test_pick_segment_len_rules():
+    cs = (4, 8, 16)
+    # waiting queue + full pool -> drain fast (shortest)
+    assert pick_segment_len(cs, waiting=3, free_slots=0) == 4
+    # waiting but slots free -> middle ground
+    assert pick_segment_len(cs, waiting=3, free_slots=2) == 8
+    # idle queue -> pure throughput (longest)
+    assert pick_segment_len(cs, waiting=0, free_slots=4) == 16
+    # a single choice is always returned
+    assert pick_segment_len((8,), waiting=5, free_slots=0) == 8
+
+
+def test_slot_scheduler_admits_oldest_first_and_respects_free_slots():
+    pol = _policy({0: 4}, tq=0.05)
+    batcher = BucketedBatcher(pol)
+    sched = SlotScheduler(pol, max_slots=4, segment_len=8,
+                          segment_lens=(4, 8, 16))
+    for i in range(6):
+        batcher.enqueue(Request(rid=i, arrival=float(i), length=1.0))
+    plan = sched.plan(batcher, now=100.0, free_slots=2)  # everything is due
+    assert [r.rid for g in plan.admissions for r in g] == [0, 1]
+    assert sched.backlog() == 4
+    assert plan.segment_len == 4  # backlog waiting, pool now full
+    plan2 = sched.plan(batcher, now=100.0, free_slots=0)
+    assert plan2.admissions == []
+    assert sched.backlog() == 4
+    assert plan2.segment_len == 4
+    # drain the backlog -> slots free, nothing waiting -> longest segment
+    plan3 = sched.plan(batcher, now=100.0, free_slots=4)
+    assert [r.rid for g in plan3.admissions for r in g] == [2, 3, 4, 5]
+    plan4 = sched.plan(batcher, now=100.0, free_slots=4)
+    assert plan4.admissions == [] and plan4.segment_len == 16
+
+
+def test_slot_scheduler_admission_groups_are_bucket_pure():
+    """Mixed prompt lengths split into one admission group per pow2 prompt
+    bucket (EDF order preserved across groups), so a short prompt never
+    pays a long neighbor's padded prefill."""
+    pol = _policy({0: 8}, tq=0.05)
+    batcher = BucketedBatcher(pol, merge_adjacent=False)
+    sched = SlotScheduler(pol, max_slots=8, segment_len=8)
+    for rid, ln in [(0, 7.0), (1, 100.0), (2, 5.0), (3, 120.0)]:
+        batcher.enqueue(Request(rid=rid, arrival=float(rid), length=ln))
+    plan = sched.plan(batcher, now=100.0, free_slots=4)
+    assert sorted(len(g) for g in plan.admissions) == [2, 2]
+    for g in plan.admissions:
+        assert len({SlotScheduler._lp_bucket(r) for r in g}) == 1
+        # EDF order preserved within each group
+        assert [r.rid for r in g] == sorted(r.rid for r in g)
+    assert {r.rid for g in plan.admissions for r in g} == {0, 1, 2, 3}
