@@ -29,6 +29,16 @@ retraces); `segment_len` is the join/leave granularity — lower = admit
 sooner (latency), higher = fewer dispatches (throughput). Steady state
 traces exactly TWO programs: one prefill+admit bucket + one segment.
 
+Part 3 — multi-slice (PR 3): replays the same style of Poisson trace through
+`MultiSliceEngine` at several partition-menu points (fine / medium / full —
+the paper's MIG design points, logical replicas sharing the device set on a
+single-device host), one continuous-batching engine per slice behind ONE
+shared admission queue, with SliceScheduler straggler hedging live. Records
+per-slice slot occupancy, useful tokens/s, p50/p99 latency, hedge counts,
+and the per-slice compile-once invariant (2 traces per slice in steady
+state). On one shared CPU device the replicas serialize, so the sweep
+measures scheduling behaviour, not slice parallelism.
+
 Measures useful tokens/s (per-request budgets only — run-to-completion's
 overshoot doesn't count), p50/p99 request latency (completed - arrival), and
 trace counts; writes BENCH_serve.json (or --out). --smoke shrinks the
@@ -47,6 +57,7 @@ import numpy as np
 from repro.configs import reduced
 from repro.core.batching.buckets import Batch, Request
 from repro.serving.engine import EngineConfig, ServingEngine, build_engine
+from repro.serving.multislice import MultiSliceEngine, build_multislice_engine
 
 ARCH = "tinyllama-1.1b"
 MAX_NEW_TOKENS = 32     # SERVE_MODELS decode_steps for the text LM
@@ -171,13 +182,11 @@ def _warmup(engine: ServingEngine, seed: int = 99):
     engine.slot_occupancy.clear()
 
 
-def run_trace(engine: ServingEngine, rel, spec) -> dict:
-    """Wall-clock replay: submit each request when its arrival time passes,
-    step the engine in between, measure useful tokens/s + request latency."""
-    _warmup(engine)
-    before = dict(engine.stats)
-    traces_before = (before["prefill_traces"] + before["generate_traces"]
-                     + before["segment_traces"] + before["decode_step_traces"])
+def _replay(engine, rel, spec):
+    """Wall-clock Poisson replay, shared by the single- and multi-slice
+    sections (both engines expose submit/step/busy/batcher): submit each
+    request when its arrival time passes, step the engine in between.
+    Returns (makespan_s, requests)."""
     t0 = time.monotonic()
     reqs = _fresh_requests(rel, spec, t0)
     i = 0
@@ -194,7 +203,22 @@ def run_trace(engine: ServingEngine, rel, spec) -> dict:
                 dl = engine.batcher.next_deadline()
                 wait = 0.0 if dl is None else dl - time.monotonic()
                 time.sleep(min(max(wait, 0.0), 0.002))
-    makespan = time.monotonic() - t0
+    return time.monotonic() - t0, reqs
+
+
+def _latency_quantile(done):
+    lat = np.sort([r.completed_at - r.arrival for r in done])
+    return lambda p: float(lat[min(len(lat) - 1, int(np.ceil(p * len(lat))) - 1)])
+
+
+def run_trace(engine: ServingEngine, rel, spec) -> dict:
+    """Replay the trace through one engine; measure useful tokens/s +
+    request latency + trace counts."""
+    _warmup(engine)
+    before = dict(engine.stats)
+    traces_before = (before["prefill_traces"] + before["generate_traces"]
+                     + before["segment_traces"] + before["decode_step_traces"])
+    makespan, reqs = _replay(engine, rel, spec)
     traces_after = (engine.stats["prefill_traces"]
                     + engine.stats["generate_traces"]
                     + engine.stats["segment_traces"]
@@ -203,8 +227,7 @@ def run_trace(engine: ServingEngine, rel, spec) -> dict:
     done = engine.completed
     assert len(done) == len(reqs), (len(done), len(reqs))
     useful = sum(len(r.payload) for r in done)
-    lat = np.sort([r.completed_at - r.arrival for r in done])
-    q = lambda p: float(lat[min(len(lat) - 1, int(np.ceil(p * len(lat))) - 1)])
+    q = _latency_quantile(done)
     out = {
         "requests": len(done),
         "makespan_s": round(makespan, 4),
@@ -255,6 +278,110 @@ def bench_continuous(cfg, trace_n: int, mean_gap_s: float) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Multi-slice serving across the partition menu
+# ---------------------------------------------------------------------------
+
+# logical menu points: paper's fine / medium / full MIG design points scaled
+# to the local host (replicated engines when devices < slices)
+MULTI_SLICE_POINTS = (("fine", 4), ("medium", 2), ("full", 1))
+
+
+def _warmup_multi(ms: MultiSliceEngine, seed: int = 123):
+    """One full admission batch per slice (min budget), so every slice
+    engine compiles its admit bucket + segment program outside the measured
+    window, then reset per-request metrics."""
+    rng = np.random.default_rng(seed)
+    rid = 980000
+    reqs = [
+        Request(rid=(rid := rid + 1), arrival=0.0,
+                length=float(rng.integers(*PROMPT_RANGE)),
+                max_new_tokens=int(min(BUDGETS)))
+        for _ in range(len(ms.engines) * MAX_SLOTS)
+    ]
+    ms.submit_many(reqs)
+    ms.run_until_idle()
+    ms.reset_metrics()
+
+
+def run_trace_multi(ms: MultiSliceEngine, rel, spec) -> dict:
+    """Replay the trace through the multi-slice engine (same protocol as
+    run_trace), with per-slice accounting."""
+    _warmup_multi(ms)
+    traces_before = ms.trace_counts()
+    hedges_before = ms.hedges
+    stats_before = ms.slice_stats()
+    dispatched_before = ms.stats["dispatched"]
+    makespan, reqs = _replay(ms, rel, spec)
+    traces_after = ms.trace_counts()
+
+    done = ms.completed
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    useful = sum(len(r.payload) for r in done)
+    q = _latency_quantile(done)
+    stats = ms.slice_stats()
+    per_slice = {  # counters diffed to the measured window (warmup excluded)
+        str(sid): {
+            "admitted": stats[sid]["admitted"] - stats_before[sid]["admitted"],
+            "segments": stats[sid]["segments"] - stats_before[sid]["segments"],
+            "completed_batches": stats[sid]["completed_batches"]
+            - stats_before[sid]["completed_batches"],
+            "mean_slot_occupancy": stats[sid]["mean_slot_occupancy"],
+            "steady_state_traces": traces_after[sid],
+        }
+        for sid in sorted(traces_after)
+    }
+    return {
+        "spec": ms.pod.spec.name,
+        "n_slices": len(ms.engines),
+        "replicated": ms.replicated,
+        "requests": len(done),
+        "makespan_s": round(makespan, 4),
+        "useful_tokens": useful,
+        "tokens_per_s": round(useful / makespan, 1),
+        "p50_latency_ms": round(1e3 * q(0.50), 2),
+        "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "hedges": ms.hedges - hedges_before,
+        "dispatched_batches": ms.stats["dispatched"] - dispatched_before,
+        "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
+        "trace_count_during_trace": sum(traces_after.values())
+        - sum(traces_before.values()),
+        "per_slice": per_slice,
+    }
+
+
+def bench_multi_slice(cfg, trace_n: int, mean_gap_s: float) -> dict:
+    rel, spec = make_trace(trace_n, mean_gap_s, seed=11)
+    points = {}
+    params = None  # init once; every menu point re-slices the same model
+    for name, n_slices in MULTI_SLICE_POINTS:
+        ms = build_multislice_engine(
+            cfg, n_slices=n_slices, params=params, ec=EngineConfig(
+                max_new_tokens=MAX_NEW_TOKENS, continuous=True,
+                max_slots=MAX_SLOTS, segment_len=SEGMENT_LEN,
+                max_prompt_len=32))
+        params = ms.params
+        points[name] = run_trace_multi(ms, rel, spec)
+    return {
+        "trace": {
+            "requests": trace_n,
+            "mean_interarrival_ms": round(1e3 * mean_gap_s, 1),
+            "budgets": list(BUDGETS),
+            "prompt_range": list(PROMPT_RANGE),
+            "max_slots": MAX_SLOTS,
+            "segment_len": SEGMENT_LEN,
+            "menu_points": {name: n for name, n in MULTI_SLICE_POINTS},
+        },
+        "points": points,
+        "compile_once_per_slice": all(
+            p["trace_count_during_trace"] == 0
+            and all(s["steady_state_traces"] == 2
+                    for s in p["per_slice"].values())
+            for p in points.values()
+        ),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -288,6 +415,7 @@ def main():
         "tokens_per_s_speedup": round(speedup, 2),
         "compile_once": new["total_traces"] == 2,
         "continuous_batching": bench_continuous(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
+        "multi_slice": bench_multi_slice(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -298,6 +426,14 @@ def main():
     print(f"continuous:   {cbr['tokens_per_s_speedup']:.2f}x useful tokens/s, "
           f"{cbr['p99_latency_speedup']:.2f}x p99 latency, "
           f"traces={cbr['steady_state_traces']}")
+    msr = result["multi_slice"]
+    for name, p in msr["points"].items():
+        print(f"multi[{name:6s}] {p['spec']:8s}: "
+              f"{p['tokens_per_s']:.1f} useful tokens/s, "
+              f"p99={p['p99_latency_ms']:.1f}ms, "
+              f"occupancy={p['mean_slot_occupancy']:.3f}, "
+              f"hedges={p['hedges']}, "
+              f"traces/slice=2x{p['n_slices']}")
 
 
 if __name__ == "__main__":

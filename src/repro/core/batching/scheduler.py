@@ -77,6 +77,27 @@ class SlotScheduler:
         n = max(1, int(req.length))
         return 1 << max(0, (n - 1).bit_length())
 
+    def cancel(self, rids) -> int:
+        """Drop backlogged requests by rid (hedge-twin cancellation or an
+        elastic re-slice pulling queued work back); returns how many left."""
+        rids = set(rids)
+        kept = [r for r in self._backlog if r.rid not in rids]
+        n = len(self._backlog) - len(kept)
+        self._backlog = kept
+        return n
+
+    def drain(self) -> List[Request]:
+        """Take the whole backlog (requests already pulled out of the
+        batcher but not yet admitted) — an elastic re-slice must carry these
+        across the scheduler rebuild or they would be lost."""
+        out, self._backlog = self._backlog, []
+        return out
+
+    def requeue(self, reqs: Sequence[Request]) -> None:
+        """Return requests to the backlog, restoring EDF order."""
+        self._backlog.extend(reqs)
+        self._backlog.sort(key=Request.ready_at)
+
     def plan(self, batcher: BucketedBatcher, now: float, *,
              free_slots: int) -> SlotPlan:
         self.pull(batcher, now)
@@ -116,13 +137,43 @@ class SliceScheduler:
         self.requeued: List[Batch] = []
         self.hedges = 0
 
+    @staticmethod
+    def _reset(s: SliceState) -> None:
+        """Clear dispatch-tracking state once a slice stops holding a batch
+        (complete / cancel / fail / drop) so stragglers() and free_slices()
+        never act on stale expected_s / dispatched_at / busy_until."""
+        s.inflight = None
+        s.hedged = False
+        s.expected_s = 0.0
+        s.dispatched_at = 0.0
+        s.busy_until = 0.0
+
+    def _holders(self, batch: Batch, *, exclude: int = -1) -> List[SliceState]:
+        """Every healthy slice currently running `batch` (hedge twins run the
+        same Batch object, so identity is the dedupe key)."""
+        return [
+            s for s in self.slices.values()
+            if s.slice_id != exclude and s.healthy and s.inflight is batch
+        ]
+
     # --- slice lifecycle ---------------------------------------------------
     def fail_slice(self, slice_id: int) -> Optional[Batch]:
+        """Evict a slice. Its in-flight batch is re-queued ONLY if no healthy
+        hedge twin is still running the same batch — otherwise requeueing
+        would duplicate execution (and completion) of the surviving copy."""
         s = self.slices[slice_id]
         s.healthy = False
-        b, s.inflight = s.inflight, None
-        if b is not None:
-            self.requeued.append(b)
+        b = s.inflight
+        self._reset(s)
+        if b is None:
+            return None
+        survivors = self._holders(b, exclude=slice_id)
+        if survivors:
+            # the batch lives on with a single holder again: re-arm hedging
+            for other in survivors:
+                other.hedged = False
+            return None
+        self.requeued.append(b)
         return b
 
     def recover_slice(self, slice_id: int) -> None:
@@ -130,23 +181,36 @@ class SliceScheduler:
 
     def resize(self, n_slices: int) -> List[Batch]:
         """Elastic re-slice (MIG reconfiguration analogue): drop or add
-        slices; in-flight work on dropped slices is re-queued."""
+        slices; in-flight work on dropped slices is re-queued exactly once —
+        a hedged batch whose two holders are both dropped is deduped, and a
+        batch whose other holder survives is not requeued at all."""
         dropped: List[Batch] = []
         for sid in [s for s in self.slices if s >= n_slices]:
             st = self.slices.pop(sid)
             if st.inflight is not None:
                 dropped.append(st.inflight)
+            self._reset(st)
         for sid in range(n_slices):
             self.slices.setdefault(sid, SliceState(sid))
-        self.requeued.extend(dropped)
-        return dropped
+        requeue: List[Batch] = []
+        for b in dropped:
+            if any(u is b for u in requeue):
+                continue  # both hedge holders dropped -> one copy
+            survivors = self._holders(b)
+            if survivors:  # still running on a surviving slice
+                for other in survivors:
+                    other.hedged = False
+                continue
+            requeue.append(b)
+        self.requeued.extend(requeue)
+        return requeue
 
     # --- dispatch ------------------------------------------------------------
     def free_slices(self, now: float) -> List[int]:
         return [
             s.slice_id
             for s in self.slices.values()
-            if s.healthy and s.inflight is None
+            if s.healthy and s.inflight is None and s.busy_until <= now
         ]
 
     def dispatch(self, batch: Batch, now: float, expected_s: float) -> Optional[int]:
@@ -158,6 +222,7 @@ class SliceScheduler:
         s.inflight = batch
         s.dispatched_at = now
         s.expected_s = expected_s
+        s.busy_until = now + max(0.0, expected_s)
         s.hedged = False
         for r in batch.requests:
             r.dispatched_at = now
@@ -165,16 +230,19 @@ class SliceScheduler:
 
     def complete(self, slice_id: int, now: float) -> Optional[Batch]:
         s = self.slices[slice_id]
-        b, s.inflight = s.inflight, None
+        b = s.inflight
         if b is None:
             return None
+        self._reset(s)
         s.completed += 1
         for r in b.requests:
             r.completed_at = now
-        # cancel any hedge twin still in flight for the same batch
+        # cancel any hedge twin still in flight for the same batch; a stale
+        # hedged/expected_s/dispatched_at on the twin would make it look
+        # busy/straggling forever, so its state is fully reset
         for other in self.slices.values():
             if other.slice_id != slice_id and other.inflight is b:
-                other.inflight = None
+                self._reset(other)
         return b
 
     def stragglers(self, now: float) -> List[int]:
@@ -203,6 +271,11 @@ class SliceScheduler:
         twin.inflight = s.inflight
         twin.dispatched_at = now
         twin.expected_s = s.expected_s
+        twin.busy_until = now + max(0.0, s.expected_s)
+        # the twin is itself part of a hedge pair: without this flag
+        # stragglers() would flag it and re-hedge the same batch onto a
+        # third slice (and so on), multiplying speculative copies
+        twin.hedged = True
         s.hedged = True
         self.hedges += 1
         return twin.slice_id

@@ -1,6 +1,9 @@
 from repro.core.slicing.mig import (  # noqa: F401
+    PodSlice,
     SliceSpec,
     SlicedPod,
     PARTITION_MENU,
+    menu_for_pod,
     partition_pod,
+    slice_name,
 )

@@ -28,6 +28,19 @@ class SliceSpec:
     chips_per_slice: int
     n_slices: int
 
+    def stranded(self, pod_chips: int) -> int:
+        """Chips this partitioning leaves unused on a `pod_chips` pod (MIG:
+        2g.10gb(3x) strands one GPC on an A100)."""
+        return pod_chips - self.n_slices * self.chips_per_slice
+
+
+def slice_name(chips_per_slice: int, n_slices: int) -> str:
+    """Canonical menu-entry name, shared by `menu_for_pod` and
+    `partition_pod` so the same partitioning is never labelled two ways.
+    Slices smaller than the 16-chip unit (single-host / CPU-CI pods) round
+    up to "1s" rather than the nonsensical "0s"."""
+    return f"{max(1, chips_per_slice // 16)}s({n_slices}x)"
+
 
 PARTITION_MENU: Dict[str, Tuple[int, ...]] = {
     # pod chips -> allowed chips_per_slice values
@@ -40,7 +53,12 @@ def menu_for_pod(pod_chips: int) -> List[SliceSpec]:
     for cps in PARTITION_MENU["default"]:
         if cps <= pod_chips:
             n = pod_chips // cps
-            out.append(SliceSpec(f"{cps//16}s({n}x)", cps, n))
+            out.append(SliceSpec(slice_name(cps, n), cps, n))
+    if not out and pod_chips >= 1:
+        # pod smaller than the 16-chip menu unit (dev host / CPU CI): the
+        # only partitioning is one whole-pod slice — matching what
+        # partition_pod(devices, pod_chips) produces
+        out.append(SliceSpec(slice_name(pod_chips, 1), pod_chips, 1))
     return out
 
 
@@ -89,5 +107,5 @@ def partition_pod(devices: Sequence, chips_per_slice: int) -> SlicedPod:
     slices = [
         PodSlice(i, arr[i * cps : (i + 1) * cps]) for i in range(n_slices)
     ]
-    spec = SliceSpec(f"{max(1, cps // 16)}s({n_slices}x)", cps, n_slices)
+    spec = SliceSpec(slice_name(cps, n_slices), cps, n_slices)
     return SlicedPod(spec=spec, slices=slices, stranded_chips=stranded)

@@ -37,8 +37,9 @@ baseline.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +73,37 @@ class EngineConfig:
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
+
+
+def enqueue_requests(reqs: List[Request], *, ec: EngineConfig,
+                     dpu: Optional[DPU], batcher: BucketedBatcher,
+                     stats: Dict[str, int], validate_prompts: bool) -> None:
+    """Shared admission contract for ServingEngine and MultiSliceEngine:
+    reject oversized prompts BEFORE anything is enqueued (raising at
+    admission time would drop the whole already-popped admission group,
+    valid requests included), run ONE batched DPU preprocessing pass over
+    the submission (DPU.process_batch groups same-shape requests into a
+    single Pallas launch per functional unit), then enqueue."""
+    if validate_prompts:
+        for r in reqs:
+            lp = max(ec.min_prompt_len, _next_pow2(max(1, int(r.length))))
+            if lp > ec.max_prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt bucket {lp} exceeds "
+                    f"max_prompt_len={ec.max_prompt_len}; raise "
+                    "EngineConfig.max_prompt_len"
+                )
+    if dpu is not None:
+        idx = [i for i, r in enumerate(reqs) if r.payload is not None]
+        if idx:
+            outs = dpu.process_batch([reqs[i].payload for i in idx])
+            for i, y in zip(idx, outs):
+                reqs[i].payload = y
+            stats["dpu_batches"] += 1
+    now = time.monotonic()
+    for r in reqs:
+        r.preprocessed_at = now
+        batcher.enqueue(r)
 
 
 @dataclass
@@ -179,32 +211,36 @@ class ServingEngine:
     def submit_many(self, reqs: List[Request]) -> None:
         """Enqueue requests; with preprocess='dpu', pending requests carrying
         raw inputs in `payload` are preprocessed as ONE batched CU pass
-        (DPU.process_batch groups same-shape requests into a single Pallas
-        launch per functional unit) instead of one launch per request."""
+        instead of one launch per request. Prompt buckets are validated only
+        on the slot-pool path (run-to-completion sizes its cache per
+        batch)."""
+        enqueue_requests(reqs, ec=self.ec, dpu=self.dpu,
+                         batcher=self.batcher, stats=self.stats,
+                         validate_prompts=self.ec.continuous)
+
+    def cancel(self, rids: Iterable[int]) -> int:
+        """Abandon requests by rid wherever they are: queued in the batcher,
+        backlogged in the slot scheduler, occupying a pool slot mid-decode,
+        or already finished but not yet harvested (`completed`). Used by the
+        multi-slice engine to kill a hedge twin's copies once the other slice
+        wins, and to drain a slice for an elastic re-slice. A cancelled
+        slot's stale KV stays masked (pos_offset is rewritten on the next
+        admission), exactly like a normal retire. Returns the number of
+        live (not-yet-completed) requests removed."""
+        rids = set(rids)
+        n = 0
+        for bucket in self.batcher.buckets.values():
+            kept = [r for r in bucket.queue if r.rid not in rids]
+            n += len(bucket.queue) - len(kept)
+            bucket.queue = deque(kept)
         if self.ec.continuous:
-            # reject oversized prompts HERE, before anything is enqueued —
-            # raising at admission time would drop the whole already-popped
-            # admission group, valid requests included
-            for r in reqs:
-                lp = max(self.ec.min_prompt_len,
-                         _next_pow2(max(1, int(r.length))))
-                if lp > self.ec.max_prompt_len:
-                    raise ValueError(
-                        f"request {r.rid}: prompt bucket {lp} exceeds "
-                        f"max_prompt_len={self.ec.max_prompt_len}; raise "
-                        "EngineConfig.max_prompt_len"
-                    )
-        if self.dpu is not None:
-            idx = [i for i, r in enumerate(reqs) if r.payload is not None]
-            if idx:
-                outs = self.dpu.process_batch([reqs[i].payload for i in idx])
-                for i, y in zip(idx, outs):
-                    reqs[i].payload = y
-                self.stats["dpu_batches"] += 1
-        now = time.monotonic()
-        for r in reqs:
-            r.preprocessed_at = now
-            self.batcher.enqueue(r)
+            n += self.slot_scheduler.cancel(rids)
+            for s, st in enumerate(self._slots):
+                if st is not None and st.req.rid in rids:
+                    self._slots[s] = None
+                    n += 1
+        self.completed = [r for r in self.completed if r.rid not in rids]
+        return n
 
     def busy(self) -> bool:
         if self.batcher.pending():

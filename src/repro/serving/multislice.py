@@ -1,0 +1,493 @@
+"""Multi-slice real execution: the paper's system shape on the real engine.
+
+PREBA's core claim is that a MIG GPU reconfigured into many small slices,
+each running its own inference replica behind a shared dynamic batcher,
+beats one monolithic GPU. This module composes the three pieces that so far
+only met in the simulator:
+
+  core/slicing/mig.partition_pod   -> V disjoint sub-meshes (PodSlice)
+  serving/engine.ServingEngine     -> one compile-once, continuous-batching
+                                      engine PER slice (own KV slot pool,
+                                      own prefill-executable cache, params
+                                      placed on that slice's mesh when the
+                                      host has enough devices; replicated
+                                      single-device engines otherwise — the
+                                      CPU-CI fallback)
+  core/batching SliceScheduler     -> batch -> slice dispatch with straggler
+                                      hedging and failure/resize requeue,
+                                      now driving REAL batches
+
+Admission is ONE shared queue: `submit_many` runs one batched
+`DPU.process_batch` preprocessing pass, the shared `BucketedBatcher` forms
+knee-driven batches, and the shared `SlotScheduler` keeps an EDF backlog and
+releases bucket-pure admission groups sized to the free slices' slot
+capacity. Groups are chunked to `max_slots`, wrapped as `Batch`es, and
+dispatched to free slices (least-loaded). Each global `step()` advances
+every busy slice engine by one admit -> decode-segment -> retire iteration,
+so a dispatched batch is genuinely in flight across steps:
+
+* straggler hedging — a slice past `hedge_factor x` the expected batch time
+  gets its batch re-dispatched (cloned requests) to a free slice; the first
+  slice whose engine retires every request wins, the twin's copies are
+  cancelled mid-flight (`ServingEngine.cancel`), and per-request results are
+  recorded exactly once (outputs are bit-identical either way: prompts are
+  deterministic per rid and decode is greedy).
+* `fail_slice` — evicts a slice; its batch is requeued unless a hedge twin
+  is still running it (the surviving copy completes alone).
+* `resize` — elastic MIG reconfiguration mid-trace: cancel in-flight work,
+  re-partition the pod to a different menu entry, rebuild the per-slice
+  engines, and requeue every in-flight batch exactly once (hedge twins
+  deduped). Completed requests are unaffected; re-run requests produce the
+  same tokens (deterministic), so a resize loses nothing.
+
+One slice runs one dispatched batch at a time (the SliceScheduler
+invariant hedging needs); continuous batching still pays off *within* a
+batch — heterogeneous-budget rows retire early and free their slots. On a
+single shared device (CPU CI) the replicas serialize, so the sweep measures
+scheduling behaviour, not slice parallelism; on a real pod each engine owns
+a disjoint sub-mesh.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, replace as dc_replace
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.policy import BatchPolicy
+from repro.core.batching.scheduler import SliceScheduler, SlotScheduler
+from repro.core.dpu.runtime import DPU, DpuConfig
+from repro.core.slicing.mig import (
+    PodSlice, SlicedPod, SliceSpec, partition_pod, slice_name,
+)
+from repro.serving.engine import (
+    EngineConfig, ServingEngine, enqueue_requests,
+)
+
+
+def _slice_pod(devices: Sequence, n_slices: int):
+    """Partition `devices` into `n_slices` sub-meshes. When the host has
+    fewer devices than slices (CPU CI), fall back to `n_slices` logical
+    replicas that share the whole device set. Returns (pod, replicated)."""
+    devs = np.asarray(devices, dtype=object).reshape(-1)
+    n_slices = max(1, int(n_slices))
+    if devs.size >= n_slices:
+        pod = partition_pod(devs, devs.size // n_slices)
+        if len(pod.slices) > n_slices:
+            # keep exactly n_slices; whole spare slices count as stranded
+            extra = sum(s.devices.size for s in pod.slices[n_slices:])
+            cps = pod.spec.chips_per_slice
+            pod = SlicedPod(
+                spec=SliceSpec(slice_name(cps, n_slices), cps, n_slices),
+                slices=pod.slices[:n_slices],
+                stranded_chips=pod.stranded_chips + extra,
+            )
+        return pod, False
+    slices = [PodSlice(i, devs.copy()) for i in range(n_slices)]
+    spec = SliceSpec(slice_name(devs.size, n_slices), int(devs.size), n_slices)
+    return SlicedPod(spec=spec, slices=slices, stranded_chips=0), True
+
+
+@dataclass
+class _Dispatch:
+    """One slice's copy of an in-flight batch. `batch.requests` are always
+    the ORIGINAL request objects; a hedge twin executes clones (`reqs`) so
+    the two engines never race on the same Request fields."""
+
+    batch: Batch
+    reqs: List[Request]
+    primary: bool
+
+
+class MultiSliceEngine:
+    """V per-slice continuous-batching engines behind one admission queue,
+    scheduled by `SliceScheduler` (hedging, failure, elastic resize)."""
+
+    def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
+                 ec: Optional[EngineConfig] = None, *, n_slices: int,
+                 devices: Optional[Sequence] = None,
+                 hedge_factor: float = 3.0):
+        import jax
+
+        ec = EngineConfig() if ec is None else ec
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.ec = ec
+        self.hedge_factor = hedge_factor
+        self._devices = list(jax.devices() if devices is None else devices)
+        self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
+        self.batcher = BucketedBatcher(policy)
+        self.completed: List[Request] = []
+        self._done_rids: Set[int] = set()
+        self._pending: List[Batch] = []
+        self.stats: Dict[str, int] = {
+            "dispatched": 0, "hedge_wins": 0, "cancelled": 0,
+            "requeued": 0, "resizes": 0, "dpu_batches": 0,
+        }
+        self._hedges_base = 0
+        self._seg_ema: Optional[float] = None
+        self._exec_seen: Dict[int, int] = {}
+        # --- test/chaos injection knobs ---
+        # slices listed here skip their engine step (a hung device): the
+        # straggler detector must hedge their work onto a healthy twin
+        self.stalled_slices: Set[int] = set()
+        # override the per-batch expected execution time used for straggler
+        # detection (None = (segments+1) * EMA of measured segment times)
+        self.fixed_expected_s: Optional[float] = None
+        self._build(n_slices)
+
+    # --- construction / elastic re-slice -----------------------------------
+    def _build(self, n_slices: int) -> None:
+        self.pod, self.replicated = _slice_pod(self._devices, n_slices)
+        self.sched = SliceScheduler(len(self.pod.slices),
+                                    hedge_factor=self.hedge_factor)
+        # global admission capacity = every slice's slot pool
+        self.slot_scheduler = SlotScheduler(
+            self.policy, max_slots=len(self.pod.slices) * self.ec.max_slots,
+            segment_len=self.ec.segment_len, segment_lens=self.ec.segment_lens,
+        )
+        self.engines: Dict[int, ServingEngine] = {
+            ps.slice_id: self._make_engine(ps) for ps in self.pod.slices
+        }
+        self._inflight: Dict[int, _Dispatch] = {}
+        self._exec_seen = {}
+
+    def _make_engine(self, ps: PodSlice) -> ServingEngine:
+        # per-slice engines are always continuous (own slot pool + prefill
+        # cache); preprocessing already happened once at the shared queue,
+        # and batch formation too — their internal batcher is a pass-through
+        ec_s = dc_replace(self.ec, continuous=True, preprocess="none")
+        pol = dc_replace(self.policy, time_queue=0.0)
+        return ServingEngine(self.cfg, self._params_for(ps), pol, ec_s)
+
+    def _params_for(self, ps: PodSlice):
+        """Replicate params onto the slice's mesh when it owns real devices;
+        logical replicas (CPU CI) share one param tree — no copies."""
+        import jax
+
+        if self.replicated or ps.devices.size <= 1:
+            return self.params
+        try:
+            mesh = ps.make_mesh()
+            sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()
+            )
+            return jax.device_put(self.params, sharding)
+        except Exception:
+            return self.params  # mesh/backends that can't place: share
+
+    @property
+    def hedges(self) -> int:
+        return self._hedges_base + self.sched.hedges
+
+    def resize(self, n_slices: Optional[int] = None, *,
+               chips_per_slice: Optional[int] = None) -> int:
+        """Elastic re-slice mid-trace (MIG reconfiguration): cancel in-flight
+        work, re-partition to a different menu entry, rebuild the per-slice
+        engines, and requeue every in-flight batch exactly once. Returns the
+        number of requeued batches."""
+        assert (n_slices is None) != (chips_per_slice is None), (
+            "pass exactly one of n_slices / chips_per_slice"
+        )
+        if n_slices is None:
+            n_slices = max(1, len(self._devices) // max(1, chips_per_slice))
+        # unique in-flight batches (hedge twins share the Batch object)
+        carry: List[Batch] = []
+        for disp in self._inflight.values():
+            if not any(b is disp.batch for b in carry):
+                carry.append(disp.batch)
+        for sid, disp in self._inflight.items():
+            self.stats["cancelled"] += self.engines[sid].cancel(
+                r.rid for r in disp.reqs
+            )
+        for b in self.sched.requeued:
+            if not any(u is b for u in carry):
+                carry.append(b)
+        carry.extend(self._pending)
+        self._pending = []
+        # the shared admission backlog holds requests already pulled out of
+        # the batcher but not yet formed into a batch — carry them across
+        # the scheduler rebuild or they would simply vanish
+        backlog = self.slot_scheduler.drain()
+        self._hedges_base += self.sched.hedges
+        self._build(n_slices)
+        self._pending = carry
+        self.slot_scheduler.requeue(backlog)
+        self.stats["resizes"] += 1
+        self.stats["requeued"] += len(carry)
+        return len(carry)
+
+    def fail_slice(self, slice_id: int) -> Optional[Batch]:
+        """Evict a slice (fault injection / real device loss): cancel its
+        engine's work; the scheduler requeues the batch unless a hedge twin
+        still runs it."""
+        requeued = self.sched.fail_slice(slice_id)
+        self.pod.fail(slice_id)
+        disp = self._inflight.pop(slice_id, None)
+        if disp is not None:
+            self.stats["cancelled"] += self.engines[slice_id].cancel(
+                r.rid for r in disp.reqs
+            )
+        return requeued
+
+    def recover_slice(self, slice_id: int) -> None:
+        self.sched.recover_slice(slice_id)
+        self.pod.recover(slice_id)
+
+    # --- shared admission queue --------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.submit_many([req])
+
+    def submit_many(self, reqs: List[Request]) -> None:
+        """One batched DPU preprocessing pass for the whole submission, then
+        enqueue into the shared batcher (same contract as ServingEngine)."""
+        enqueue_requests(reqs, ec=self.ec, dpu=self.dpu,
+                         batcher=self.batcher, stats=self.stats,
+                         validate_prompts=True)
+
+    def busy(self) -> bool:
+        return bool(
+            self.batcher.pending() or self.slot_scheduler.backlog()
+            or self._pending or self.sched.requeued or self._inflight
+        )
+
+    # --- serve loop ---------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> bool:
+        """One global iteration: form due admission groups, dispatch to free
+        slices, advance every busy slice engine one segment, harvest
+        completions, and hedge stragglers. Returns True if anything moved."""
+        now = time.monotonic() if now is None else now
+        progressed = self._form(now)
+        progressed |= self._dispatch(now)
+        progressed |= self._advance(now)
+        self._check_hedges(now)
+        return progressed
+
+    def run_until_idle(self) -> List[Request]:
+        while self.busy():
+            if not any(s.healthy for s in self.sched.slices.values()):
+                raise RuntimeError("work pending but every slice has failed")
+            if not self.step():
+                deadline = self.batcher.next_deadline()
+                self.step(deadline if deadline is not None
+                          else time.monotonic())
+        return self.completed
+
+    def _form(self, now: float) -> bool:
+        """Pull due batches through the shared SlotScheduler (EDF backlog,
+        bucket-pure groups) sized to the free slices' slot capacity, and
+        chunk them into one dispatchable Batch per slice-pool load."""
+        n_free = len(self.sched.free_slices(now))
+        capacity = max(0, n_free - len(self._pending)) * self.ec.max_slots
+        plan = self.slot_scheduler.plan(self.batcher, now,
+                                        free_slots=capacity)
+        formed = False
+        for group in plan.admissions:
+            for i in range(0, len(group), self.ec.max_slots):
+                chunk = group[i:i + self.ec.max_slots]
+                self._pending.append(Batch(
+                    requests=chunk,
+                    bucket_id=self.batcher.bucket_of(chunk[0].length),
+                    formed_at=now,
+                ))
+                formed = True
+        return formed
+
+    def _dispatch(self, now: float) -> bool:
+        did = False
+        # requeued work (failure / resize) goes first — it is the oldest
+        while self.sched.requeued and self.sched.free_slices(now):
+            b = self.sched.requeued.pop(0)
+            if self._dispatch_batch(b, now) is None:
+                self.sched.requeued.insert(0, b)
+                break
+            did = True
+        while self._pending and self.sched.free_slices(now):
+            b = self._pending[0]
+            if self._dispatch_batch(b, now) is None:
+                break
+            self._pending.pop(0)
+            did = True
+        return did
+
+    def _dispatch_batch(self, b: Batch, now: float) -> Optional[int]:
+        sid = self.sched.dispatch(b, now, expected_s=self._expected_s(b))
+        if sid is None:
+            return None
+        self.engines[sid].submit_many(list(b.requests))
+        self._inflight[sid] = _Dispatch(batch=b, reqs=list(b.requests),
+                                        primary=True)
+        self.stats["dispatched"] += 1
+        return sid
+
+    def _expected_s(self, b: Batch) -> float:
+        if self.fixed_expected_s is not None:
+            return self.fixed_expected_s
+        if self._seg_ema is None:
+            return 0.0  # uncalibrated: hedging off until a segment is timed
+        cap = self.ec.max_new_tokens
+        budget = max(
+            cap if r.max_new_tokens is None else min(r.max_new_tokens, cap)
+            for r in b.requests
+        )
+        segs = math.ceil(budget / max(1, self.ec.segment_len))
+        return (segs + 1) * self._seg_ema  # +1 ~ admission prefill
+
+    def _advance(self, now: float) -> bool:
+        did = False
+        for sid in list(self._inflight):
+            disp = self._inflight.get(sid)
+            if disp is None:  # finished/cancelled earlier this pass
+                continue
+            if sid in self.stalled_slices:
+                continue  # hung device: no progress; hedging covers it
+            engine = self.engines[sid]
+            if engine.busy():
+                did |= engine.step(now)
+            self._update_ema(sid, engine)
+            if self._harvest(sid, disp):
+                self._finish(sid, disp, now)
+                did = True
+        return did
+
+    def _update_ema(self, sid: int, engine: ServingEngine) -> None:
+        seen = self._exec_seen.get(sid, 0)
+        fresh = engine.batch_exec_s[seen:]
+        self._exec_seen[sid] = seen + len(fresh)
+        for x in fresh:
+            self._seg_ema = (x if self._seg_ema is None
+                             else 0.7 * self._seg_ema + 0.3 * x)
+
+    def _harvest(self, sid: int, disp: _Dispatch) -> bool:
+        """Record newly finished requests (first completion wins per rid —
+        originals for the primary, clones mapped back for a twin). Returns
+        True once every request of the dispatched batch is done HERE."""
+        done = {r.rid: r for r in self.engines[sid].completed}
+        for orig in disp.batch.requests:
+            res = done.get(orig.rid)
+            if res is None or orig.rid in self._done_rids:
+                continue
+            if res is not orig:  # hedge twin ran a clone: copy results back
+                orig.payload = res.payload
+                orig.dispatched_at = res.dispatched_at
+                orig.completed_at = res.completed_at
+            self._done_rids.add(orig.rid)
+            self.completed.append(orig)
+        return all(r.rid in done for r in disp.batch.requests)
+
+    def _finish(self, sid: int, disp: _Dispatch, now: float) -> None:
+        """First full completion wins: scheduler-complete this slice, cancel
+        the hedge twin's in-flight copies (if any) on the losing engine."""
+        # sched.complete stamps completed_at = now on every request (its
+        # simulator contract); here the engine's per-request retire times —
+        # which _harvest already placed on the originals — are the truth
+        times = [(r, r.completed_at) for r in disp.batch.requests]
+        b = self.sched.complete(sid, now)
+        assert b is disp.batch, (sid, b)
+        for r, t in times:
+            r.completed_at = t
+        rids = {r.rid for r in disp.batch.requests}
+        self.engines[sid].completed = [
+            r for r in self.engines[sid].completed if r.rid not in rids
+        ]
+        del self._inflight[sid]
+        if not disp.primary:
+            self.stats["hedge_wins"] += 1
+        for osid, od in list(self._inflight.items()):
+            if od.batch is disp.batch:
+                self.stats["cancelled"] += self.engines[osid].cancel(rids)
+                del self._inflight[osid]
+
+    def _check_hedges(self, now: float) -> None:
+        for sid in self.sched.stragglers(now):
+            disp = self._inflight.get(sid)
+            if disp is None:
+                continue
+            twin_sid = self.sched.hedge(sid, now)
+            if twin_sid is None:
+                continue  # no free slice: stays un-hedged, retried next step
+            clones = [dc_replace(r) for r in disp.batch.requests]
+            self.engines[twin_sid].submit_many(clones)
+            self._inflight[twin_sid] = _Dispatch(
+                batch=disp.batch, reqs=clones, primary=False
+            )
+
+    # --- reporting ----------------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Clear per-request results and timing samples (not trace/compile
+        counters) — the benchmark calls this between warmup and the
+        measured trace."""
+        self.completed = []
+        self._done_rids = set()
+        for e in self.engines.values():
+            e.completed.clear()
+            e.batch_exec_s.clear()
+            e.slot_occupancy.clear()
+        self._exec_seen = {sid: 0 for sid in self.engines}
+
+    def trace_counts(self) -> Dict[int, int]:
+        """Per-slice jit trace totals (compile-once invariant: 2 per slice
+        in steady state — one prefill+admit bucket + one segment)."""
+        return {
+            sid: (e.stats["prefill_traces"] + e.stats["generate_traces"]
+                  + e.stats["segment_traces"] + e.stats["decode_step_traces"])
+            for sid, e in self.engines.items()
+        }
+
+    def slice_stats(self) -> Dict[int, Dict[str, Any]]:
+        out: Dict[int, Dict[str, Any]] = {}
+        for sid, e in self.engines.items():
+            st = self.sched.slices.get(sid)
+            out[sid] = {
+                "admitted": e.stats["admitted"],
+                "retired": e.stats["retired"],
+                "segments": e.stats["segments"],
+                "mean_slot_occupancy": round(e.mean_slot_occupancy(), 3),
+                "completed_batches": st.completed if st is not None else 0,
+                "healthy": st.healthy if st is not None else False,
+            }
+        return out
+
+    def mean_slot_occupancy(self) -> float:
+        xs = [x for e in self.engines.values() for x in e.slot_occupancy]
+        return float(np.mean(xs)) if xs else 0.0
+
+
+def build_multislice_engine(
+    cfg: ModelConfig, *, n_slices: int, seed: int = 0,
+    ec: Optional[EngineConfig] = None, hedge_factor: float = 3.0,
+    devices: Optional[Sequence] = None, params=None,
+) -> MultiSliceEngine:
+    """Mirror of engine.build_engine for the multi-slice system: same param
+    init (bit-identical outputs vs a single engine), knee-derived policy
+    with V = n_slices (Time_queue = Time_knee / V). Pass `params` to reuse
+    an already-initialized tree (a partition-menu sweep re-slices the same
+    model)."""
+    import jax
+
+    from repro.core.batching import (
+        analytical_knee, derive_policy, kv_bytes_per_token,
+    )
+    from repro.models import api
+
+    ec = EngineConfig() if ec is None else ec
+    if params is None:
+        params = api.init_params(cfg, jax.random.PRNGKey(seed),
+                                 dtype=cfg.dtype)
+    n_active = cfg.active_param_count()
+    profiles = {
+        b: analytical_knee(
+            n_active, chips=1, context_len=int((b + 0.5) * ec.bucket_width),
+            kv_bytes_per_token=kv_bytes_per_token(cfg),
+        )
+        for b in range(8)
+    }
+    policy = derive_policy(profiles, n_slices=n_slices,
+                           bucket_width=ec.bucket_width)
+    return MultiSliceEngine(cfg, params, policy, ec, n_slices=n_slices,
+                            devices=devices, hedge_factor=hedge_factor)

@@ -1,0 +1,196 @@
+"""MultiSliceEngine proof tests: the paper's system shape (one continuous-
+batching engine per MIG-analogue slice behind a shared admission queue) on
+real reduced-model execution.
+
+The invariants proved here are the multi-slice analogues of the PR 1/2
+hot-path proofs: per-request outputs are bit-identical to a single-slice
+engine no matter how batches are routed, a hedged batch completes exactly
+once (first slice to finish wins, the twin is cancelled mid-flight), and an
+elastic resize() mid-trace loses no requests.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import reduced
+from repro.core.batching.buckets import Request
+from repro.core.batching.policy import BatchPolicy
+from repro.models import api
+from repro.serving.engine import EngineConfig, build_engine
+from repro.serving.multislice import MultiSliceEngine, build_multislice_engine
+
+# canonical request set: every test serves (a prefix of) these; prompts are
+# deterministic per rid, so payloads depend only on (rid, length, budget)
+LENS = [17.0 + i for i in range(9)]          # one (.., 32) prompt bucket
+BUDGETS = [3, 5, 8, 2, 7, 4, 6, 1, 8]
+
+
+def _ec():
+    return EngineConfig(max_new_tokens=8, continuous=True, max_slots=4,
+                        segment_len=4, max_prompt_len=32)
+
+
+def _fresh(k=9):
+    return _pick(range(k))
+
+
+def _pick(idxs):
+    return [
+        Request(rid=7000 + i, arrival=0.0, length=LENS[i],
+                max_new_tokens=BUDGETS[i])
+        for i in idxs
+    ]
+
+
+def _policy(n_slices):
+    # immediate flush: formation timing is not under test here
+    return BatchPolicy(batch_max={0: 4}, time_queue=0.0, time_knee=0.1,
+                       n_slices=n_slices, bucket_width=64.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced("tinyllama-1.1b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=cfg.dtype)
+    # reference payloads from the single-slice continuous engine (same seed)
+    single = build_engine(cfg, ec=_ec())
+    single.submit_many(_fresh())
+    single.run_until_idle()
+    ref = {r.rid: np.asarray(r.payload) for r in single.completed}
+    assert len(ref) == 9
+    return cfg, params, ref
+
+
+def _check_done(done, ref, k):
+    assert len(done) == k
+    assert len({r.rid for r in done}) == k  # exactly once each
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.payload), ref[r.rid])
+        # the engine's retire timestamps survive scheduler bookkeeping
+        # (sched.complete must not clobber completed_at with step-start
+        # time, which would run backwards for budget-1 requests)
+        assert r.completed_at >= r.dispatched_at > 0.0
+
+
+def test_outputs_bit_identical_to_single_slice_engine(setup):
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2)
+    ms.submit_many(_fresh())
+    done = ms.run_until_idle()
+    _check_done(done, ref, 9)
+    # the work really spread across slices, each with its own slot pool
+    st = ms.slice_stats()
+    assert sum(1 for v in st.values() if v["admitted"] > 0) == 2
+    assert all(0.0 < v["mean_slot_occupancy"] <= 1.0 for v in st.values())
+
+
+def test_hedged_batch_completes_exactly_once_twin_wins(setup):
+    """A stalled slice (hung device) is detected as a straggler; its batch
+    is re-dispatched to a free twin, the twin's completion wins, and the
+    stalled engine's copies are cancelled — every request exactly once."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+                          hedge_factor=1.5)
+    ms.fixed_expected_s = 1e-4   # deterministic straggler detection
+    ms.submit_many(_fresh(2))
+    ms.step()                    # form + dispatch to one slice
+    (sid,) = ms._inflight
+    ms.stalled_slices.add(sid)   # that slice never advances again
+    done = ms.run_until_idle()
+    _check_done(done, ref, 2)
+    assert ms.hedges == 1
+    assert ms.stats["hedge_wins"] == 1
+    assert ms.stats["cancelled"] >= 1       # stalled copies were killed
+    assert not ms.engines[sid].busy()       # nothing left in the slice
+    assert ms._inflight == {}
+
+
+def test_hedge_original_wins_and_twin_is_cancelled(setup):
+    """With an absurdly small expected time every dispatch hedges, but the
+    original (ahead by several segments) finishes first: the twin's clones
+    are cancelled and nothing completes twice."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+                          hedge_factor=0.5)
+    ms.fixed_expected_s = 1e-6
+    reqs = _pick([2, 8])  # budget 8: needs several segments, so the batch
+    ms.submit_many(reqs)  # is still in flight when the straggler check runs
+    done = ms.run_until_idle()
+    _check_done(done, ref, 2)
+    assert ms.hedges >= 1
+    assert ms.stats["hedge_wins"] == 0      # original won every time
+    assert ms.stats["cancelled"] >= 1
+    for e in ms.engines.values():
+        assert not e.busy()
+
+
+def test_resize_mid_trace_loses_no_requests(setup):
+    """Elastic re-slice to a different menu entry mid-trace: in-flight work
+    is requeued (exactly once), the shared admission backlog survives the
+    scheduler rebuild, engines are rebuilt, and every request completes
+    with the same tokens as an undisturbed run."""
+    cfg, params, ref = setup
+    # 9 requests > 2 slices x 4 slots: some stay in the shared admission
+    # backlog at resize time, which a rebuild must not lose
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2)
+    ms.submit_many(_fresh())
+    ms.step()                                # dispatch + first segments
+    assert ms._inflight                      # genuinely mid-trace
+    assert ms.slot_scheduler.backlog() >= 1  # over-capacity work waiting
+    requeued = ms.resize(n_slices=3)
+    assert requeued >= 1
+    assert ms.slot_scheduler.backlog() >= 1  # backlog carried across rebuild
+    assert len(ms.engines) == 3 and ms.pod.spec.n_slices == 3
+    done = ms.run_until_idle()
+    _check_done(done, ref, 9)
+    assert ms.stats["resizes"] == 1
+
+
+def test_resize_by_menu_entry_on_partitioned_devices(setup):
+    """With enough (fake) devices the pod really partitions: resize by
+    chips_per_slice walks the partition menu, and the engines fall back to
+    shared params when the fake devices can't host a mesh."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(4), _ec(), n_slices=4,
+                          devices=list(range(64)))
+    assert not ms.replicated
+    assert ms.pod.spec.name == "1s(4x)"      # 64 chips / 4 = 16-chip slices
+    ms.submit_many(_fresh())
+    ms.step()
+    ms.resize(chips_per_slice=32)
+    assert ms.pod.spec.name == "2s(2x)" and len(ms.engines) == 2
+    done = ms.run_until_idle()
+    _check_done(done, ref, 9)
+
+
+def test_fail_slice_requeues_and_recovers(setup):
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2)
+    ms.submit_many(_fresh(2))
+    ms.step()
+    (sid,) = ms._inflight
+    assert ms.fail_slice(sid) is not None    # sole holder -> requeued
+    done = ms.run_until_idle()
+    _check_done(done, ref, 2)
+    assert not ms.sched.slices[sid].healthy
+    ms.recover_slice(sid)
+    assert ms.sched.slices[sid].healthy
+
+
+def test_build_multislice_engine_compile_once_per_slice():
+    """The builder mirrors build_engine (same seed/params); after warmup
+    each slice engine traces exactly two programs (admit bucket + segment)
+    and serving more requests retraces nothing."""
+    cfg = reduced("tinyllama-1.1b")
+    ec = _ec()
+    ms = build_multislice_engine(cfg, n_slices=2, ec=ec)
+    ms.submit_many(_fresh())
+    ms.run_until_idle()
+    counts = ms.trace_counts()
+    assert all(c <= 2 for c in counts.values()), counts
+    before = dict(counts)
+    ms.submit_many([Request(rid=7100 + i, arrival=0.0, length=LENS[i],
+                            max_new_tokens=BUDGETS[i]) for i in range(4)])
+    ms.run_until_idle()
+    assert ms.trace_counts() == before       # steady state: no retraces

@@ -71,6 +71,106 @@ def test_hedge_needs_free_slice_and_marks_straggler():
     assert s2.hedges == 1
 
 
+def test_hedge_marks_twin_hedged_so_it_is_never_rehedged():
+    """Regression: the twin used to inherit expected_s/dispatched_at but not
+    hedged=True, so stragglers() could flag the twin and re-hedge the same
+    batch onto a third slice, multiplying speculative copies."""
+    s = SliceScheduler(3, hedge_factor=2.0)
+    b = _batch()
+    sid = s.dispatch(b, now=0.0, expected_s=1.0)
+    twin = s.hedge(sid, now=3.0)
+    assert s.slices[twin].hedged is True
+    # far past any expected time: NEITHER holder is re-listed
+    assert s.stragglers(now=1000.0) == []
+    assert s.hedges == 1
+
+
+def test_fail_slice_skips_requeue_when_other_holder_survives():
+    """Regression: failing one holder of a hedged pair used to requeue the
+    batch even though the other slice was still healthily running it,
+    duplicating execution and completion."""
+    # twin dies, original survives
+    s = SliceScheduler(2, hedge_factor=2.0)
+    b = _batch()
+    sid = s.dispatch(b, 0.0, 1.0)
+    twin = s.hedge(sid, 3.0)
+    assert s.fail_slice(twin) is None
+    assert s.requeued == []
+    assert s.slices[sid].hedged is False  # single holder again: re-armed
+    assert s.complete(sid, 4.0) is b
+    # original dies, twin survives
+    s2 = SliceScheduler(2, hedge_factor=2.0)
+    b2 = _batch(rid0=10)
+    sid2 = s2.dispatch(b2, 0.0, 1.0)
+    twin2 = s2.hedge(sid2, 3.0)
+    assert s2.fail_slice(sid2) is None
+    assert s2.requeued == []
+    assert s2.complete(twin2, 4.0) is b2
+    # an unhedged holder still requeues exactly once
+    s3 = SliceScheduler(2)
+    b3 = _batch(rid0=20)
+    sid3 = s3.dispatch(b3, 0.0, 1.0)
+    assert s3.fail_slice(sid3) is b3
+    assert s3.requeued == [b3]
+
+
+def test_resize_dedupes_dropped_twins_and_keeps_survivors():
+    """Regression: resize used to requeue each dropped holder's copy, so a
+    hedged batch whose two holders were both dropped came back twice, and
+    one whose other holder survived came back while still running."""
+    # both holders dropped -> requeued exactly once
+    s = SliceScheduler(4, hedge_factor=2.0)
+    s.slices[0].healthy = False
+    s.slices[1].healthy = False
+    b = _batch()
+    sid = s.dispatch(b, 0.0, 1.0)
+    twin = s.hedge(sid, 3.0)
+    assert {sid, twin} == {2, 3}
+    assert s.resize(2) == [b]
+    assert s.requeued == [b]
+    # other holder survives -> nothing requeued, survivor re-armed
+    s2 = SliceScheduler(3, hedge_factor=2.0)
+    b2 = _batch(rid0=10)
+    sid2 = s2.dispatch(b2, 0.0, 1.0)   # -> slice 0
+    s2.hedge(sid2, 3.0)                # -> slice 1
+    assert s2.resize(1) == []
+    assert s2.requeued == []
+    assert s2.slices[0].inflight is b2
+    assert s2.slices[0].hedged is False
+
+
+def test_complete_resets_twin_state_and_free_slices_honors_busy_until():
+    """Regression: complete() used to cancel the twin's inflight but leave
+    hedged/expected_s/dispatched_at stale, and free_slices(now) ignored
+    busy_until entirely."""
+    s = SliceScheduler(2, hedge_factor=2.0)
+    b = _batch()
+    sid = s.dispatch(b, now=0.0, expected_s=1.0)
+    assert s.slices[sid].busy_until == 1.0  # dispatch reserves the slice
+    twin = s.hedge(sid, now=3.0)
+    assert s.complete(sid, now=3.5) is b
+    ts = s.slices[twin]
+    assert ts.inflight is None and ts.hedged is False
+    assert ts.expected_s == 0.0 and ts.dispatched_at == 0.0
+    assert ts.busy_until == 0.0
+    # an idle slice reserved until t=10 is not handed out before then
+    s.slices[sid].busy_until = 10.0
+    assert s.free_slices(5.0) == [twin]
+    assert sorted(s.free_slices(11.0)) == [sid, twin]
+
+
+def test_slot_scheduler_cancel_drops_backlogged_rids():
+    pol = _policy({0: 4}, tq=0.05)
+    batcher = BucketedBatcher(pol)
+    sched = SlotScheduler(pol, max_slots=4, segment_len=8)
+    for i in range(4):
+        batcher.enqueue(Request(rid=i, arrival=float(i), length=1.0))
+    sched.pull(batcher, now=100.0)
+    assert sched.cancel({1, 3, 99}) == 2
+    plan = sched.plan(batcher, now=100.0, free_slots=4)
+    assert [r.rid for g in plan.admissions for r in g] == [0, 2]
+
+
 # ---------------------------------------------------------------------------
 # Continuous-batching slot scheduler (admission order + segment length)
 # ---------------------------------------------------------------------------

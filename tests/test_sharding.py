@@ -116,3 +116,41 @@ def test_slicing_partition_menu():
     assert len(pod.healthy_slices()) == 15
     pod2 = partition_pod(devs, 96)  # strands 64 chips like MIG's 2g.10gb
     assert pod2.stranded_chips == 64
+
+
+def test_menu_and_partition_agree_on_names_and_stranded_chips():
+    """Regression: menu_for_pod used to label entries `f"{cps//16}s"` while
+    partition_pod used `max(1, cps//16)`, so the same partitioning could be
+    named two ways (and "0s(...)" below 16 chips). Both now share
+    slice_name, and stranded-chip accounting matches for non-dividing
+    pod sizes."""
+    from repro.core.slicing import menu_for_pod, partition_pod, slice_name
+
+    devs = list(range(100))  # 100 = 6*16 + 4: no menu entry divides it
+    menu = menu_for_pod(100)
+    assert [m.name for m in menu] == ["1s(6x)", "2s(3x)", "4s(1x)"]
+    for spec in menu:
+        pod = partition_pod(devs, spec.chips_per_slice)
+        assert pod.spec == spec  # same name, cps, n_slices
+        assert pod.spec.name == slice_name(spec.chips_per_slice,
+                                           spec.n_slices)
+        assert pod.stranded_chips == spec.stranded(100)
+        assert pod.stranded_chips == 100 - spec.n_slices * spec.chips_per_slice
+    assert [m.stranded(100) for m in menu] == [4, 4, 36]
+
+
+def test_menu_sub16_chip_pod_never_labelled_zero():
+    from repro.core.slicing import menu_for_pod, partition_pod
+
+    # a pod below the 16-chip menu unit (dev host / CPU CI) still gets a
+    # non-empty menu: one whole-pod slice, named like partition_pod names it
+    menu = menu_for_pod(8)
+    assert len(menu) == 1
+    assert menu[0].chips_per_slice == 8 and menu[0].n_slices == 1
+    assert not menu[0].name.startswith("0s")
+    pod = partition_pod(list(range(8)), 8)
+    assert pod.spec == menu[0]
+    # sub-16 chips_per_slice on a non-dividing pod: naming + stranding hold
+    pod2 = partition_pod(list(range(10)), 4)
+    assert pod2.spec.name == "1s(2x)"
+    assert pod2.spec.chips_per_slice == 4 and pod2.stranded_chips == 2
