@@ -39,6 +39,15 @@ and the per-slice compile-once invariant (2 traces per slice in steady
 state). On one shared CPU device the replicas serialize, so the sweep
 measures scheduling behaviour, not slice parallelism.
 
+Part 4 — preprocess overlap (PR 4): the same style of Poisson trace, but
+every request carries a REAL tokenized prompt plus a raw audio payload, so
+preprocessing is actual work on the serving path. CPU-inline preprocessing
+(synchronous DPU.process_batch inside submit_many — the paper's
+preprocessing wall) is compared against the stage-pipelined runtime
+(serving/runtime.py) with a decoupled DpuService overlapping preprocessing
+with decode; outputs must be bit-identical, and per-stage queue-depth /
+occupancy telemetry is recorded.
+
 Measures useful tokens/s (per-request budgets only — run-to-completion's
 overshoot doesn't count), p50/p99 request latency (completed - arrival), and
 trace counts; writes BENCH_serve.json (or --out). --smoke shrinks the
@@ -56,8 +65,10 @@ import numpy as np
 
 from repro.configs import reduced
 from repro.core.batching.buckets import Batch, Request
+from repro.core.dpu.service import DpuService, DpuServiceConfig
 from repro.serving.engine import EngineConfig, ServingEngine, build_engine
 from repro.serving.multislice import MultiSliceEngine, build_multislice_engine
+from repro.serving.runtime import PipelinedRuntime, RuntimeConfig
 
 ARCH = "tinyllama-1.1b"
 MAX_NEW_TOKENS = 32     # SERVE_MODELS decode_steps for the text LM
@@ -382,6 +393,199 @@ def bench_multi_slice(cfg, trace_n: int, mean_gap_s: float) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Part 4 — decoupled DPU preprocessing vs CPU-inline (preprocess overlap)
+# ---------------------------------------------------------------------------
+#
+# The paper's headline: inline preprocessing starves the slices — every
+# submit stalls the serve loop for a full preprocessing pass — while a
+# decoupled DPU service runs preprocessing CONCURRENTLY with decode. Both
+# paths replay the same Poisson trace of requests that carry REAL tokenized
+# prompts (Request.prompt) plus a raw audio payload (the preprocessing
+# work), through the same 2-slice continuous-batching pool:
+#
+#   inline    — MultiSliceEngine(preprocess="dpu"): DPU.process_batch runs
+#               synchronously inside submit_many, blocking arrivals and
+#               decode for the full pass;
+#   pipelined — PipelinedRuntime + DpuService (wall clock): bounded-queue
+#               stages, preprocessing on the service worker overlapping the
+#               decode loop, admission pulling from the preprocess-complete
+#               double buffer.
+#
+# Outputs must be bit-identical per request (the runtime changes when work
+# happens, never what is computed); the section records per-stage queue
+# depth / occupancy telemetry and the per-slice compile-once invariant.
+
+PREPROCESS_SAMPLES = 192000   # 12 s audio @16k: a real preprocessing wall
+OVERLAP_SLICES = 2
+
+
+def _overlap_requests(cfg, rel, spec, t0: float):
+    """Fresh request objects for one replay path: deterministic per-rid
+    tokenized prompt + audio payload (payloads are consumed by
+    preprocessing, then overwritten by decode outputs, so each path needs
+    its own copies)."""
+    out = []
+    for i, (rid, n, b) in enumerate(spec):
+        rng = np.random.default_rng(rid)
+        out.append(Request(
+            rid=rid, arrival=t0 + float(rel[i]), length=float(n),
+            max_new_tokens=b,
+            prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+            payload=rng.standard_normal(PREPROCESS_SAMPLES).astype(np.float32),
+        ))
+    return out
+
+
+def _replay_overlap(engine, cfg, rel, spec):
+    """Wall-clock Poisson replay (same protocol as _replay) over the
+    payload-carrying request factory."""
+    t0 = time.monotonic()
+    reqs = _overlap_requests(cfg, rel, spec, t0)
+    i = 0
+    while i < len(reqs) or engine.busy():
+        now = time.monotonic()
+        while i < len(reqs) and reqs[i].arrival <= now:
+            engine.submit(reqs[i])
+            i += 1
+        worked = engine.step()
+        if not worked:
+            if i < len(reqs):
+                time.sleep(min(max(reqs[i].arrival - time.monotonic(), 0.0), 0.002))
+            elif engine.busy():
+                time.sleep(0.002)
+    return time.monotonic() - t0, reqs
+
+
+def _overlap_metrics(done, reqs, makespan, traces_before, traces_after):
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    useful = sum(len(r.payload) for r in done)
+    q = _latency_quantile(done)
+    return {
+        "requests": len(done),
+        "makespan_s": round(makespan, 4),
+        "useful_tokens": useful,
+        "tokens_per_s": round(useful / makespan, 1),
+        "p50_latency_ms": round(1e3 * q(0.50), 2),
+        "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "trace_count_during_trace": sum(traces_after.values())
+        - sum(traces_before.values()),
+        "per_slice_traces": {str(k): v for k, v in traces_after.items()},
+    }
+
+
+def bench_preprocess_overlap(cfg, trace_n: int, mean_gap_s: float) -> dict:
+    rel, spec = make_trace(trace_n, mean_gap_s, seed=23)
+    ec = EngineConfig(
+        max_new_tokens=MAX_NEW_TOKENS, continuous=True, max_slots=MAX_SLOTS,
+        segment_len=SEGMENT_LEN, max_prompt_len=32)
+
+    # --- inline: synchronous DPU pass inside submit_many -------------------
+    from dataclasses import replace as dc_replace
+
+    inline = build_multislice_engine(
+        cfg, n_slices=OVERLAP_SLICES, ec=dc_replace(ec, preprocess="dpu"))
+    _warmup_multi(inline)
+    # warm the preprocessing path too (numpy constants lru_cache etc.)
+    w = _overlap_requests(cfg, [0.0], [(970001, 20, int(min(BUDGETS)))], 0.0)
+    inline.submit_many(w)
+    inline.run_until_idle()
+    inline.reset_metrics()
+    tb = inline.trace_counts()
+    makespan, reqs = _replay_overlap(inline, cfg, rel, spec)
+    inline_res = _overlap_metrics(
+        inline.completed, reqs, makespan, tb, inline.trace_counts())
+    inline_out = {r.rid: np.asarray(r.payload) for r in inline.completed}
+
+    # --- pipelined: decoupled DPU service (batched Pallas CU launches,
+    # pow2-bucketed stacks), wall clock ------------------------------------
+    from repro.core.dpu.runtime import DpuConfig
+
+    engine = build_multislice_engine(
+        cfg, n_slices=OVERLAP_SLICES, params=inline.params, ec=ec)
+    service = DpuService(DpuServiceConfig(
+        clock="wall", dpu=DpuConfig(backend="dpu")))
+    rt = PipelinedRuntime(engine, service, RuntimeConfig(
+        clock="wall", max_ingest=4 * trace_n, max_backlog=4 * trace_n))
+    _warmup_multi(engine)
+    # compile every pow2 fused-launch stack shape the trace can launch
+    wx = np.zeros(PREPROCESS_SAMPLES, np.float32)
+    m = 1
+    while m <= service.cfg.max_group:
+        service._process_group(
+            [Request(rid=0, arrival=0.0, length=1.0, payload=wx)] * m)
+        m *= 2
+    w = _overlap_requests(cfg, [0.0], [(970002, 20, int(min(BUDGETS)))], 0.0)
+    rt.submit(w)
+    rt.run_until_idle()
+    # preprocessing numerics spot-check: decode consumes Request.prompt, so
+    # the served tokens (the bit_identical gate below) cannot see the
+    # features — verify directly that the two front-ends agree on a real
+    # payload within kernel tolerance (numpy CPU pipeline vs the service's
+    # fused Pallas CU launch)
+    probe = np.random.default_rng(5).standard_normal(
+        PREPROCESS_SAMPLES).astype(np.float32)
+    want = inline.dpu.process(probe.copy())
+    got = service._process_group(
+        [Request(rid=1, arrival=0.0, length=1.0, payload=probe.copy())])[0]
+    pre_ok = bool(np.allclose(np.asarray(got), np.asarray(want),
+                              rtol=2e-2, atol=2e-2))
+    engine.reset_metrics()
+    rt.reset_metrics()  # also zeroes service.stats: warmup work excluded
+    tb = engine.trace_counts()
+    makespan, reqs = _replay_overlap(rt, cfg, rel, spec)
+    rt.close()
+    pipe_res = _overlap_metrics(
+        engine.completed, reqs, makespan, tb, engine.trace_counts())
+    pipe_res["stage_queue_depth"] = rt.stage_summary()
+    pipe_res["stage_occupancy"] = rt.stage_occupancy()
+    pipe_res["shed"] = len(rt.shed)
+    pipe_res["service"] = {
+        "groups": service.stats["groups"],
+        "processed": service.stats["processed"],
+        "max_pending_depth": service.stats["max_pending_depth"],
+        "max_ready_depth": service.stats["max_ready_depth"],
+    }
+    pipe_out = {r.rid: np.asarray(r.payload) for r in engine.completed}
+
+    bit_identical = set(inline_out) == set(pipe_out) and all(
+        np.array_equal(inline_out[rid], pipe_out[rid]) for rid in inline_out
+    )
+    return {
+        "trace": {
+            "requests": trace_n,
+            "mean_interarrival_ms": round(1e3 * mean_gap_s, 1),
+            "budgets": list(BUDGETS),
+            "prompt_range": list(PROMPT_RANGE),
+            "payload_samples": PREPROCESS_SAMPLES,
+            "n_slices": OVERLAP_SLICES,
+            "max_slots": MAX_SLOTS,
+            "segment_len": SEGMENT_LEN,
+            # the paper's comparison: host-CPU kernels run inline at submit
+            # vs the DPU's batched Pallas CUs decoupled behind the service
+            "inline_backend": "cpu",
+            "pipelined_backend": "dpu",
+        },
+        "inline": inline_res,
+        "pipelined": pipe_res,
+        "tokens_per_s_speedup": round(
+            pipe_res["tokens_per_s"] / inline_res["tokens_per_s"], 2),
+        "p99_latency_speedup": round(
+            inline_res["p99_latency_ms"] / pipe_res["p99_latency_ms"], 2),
+        # served tokens identical per request across the two paths (decode
+        # is driven by Request.prompt; preprocessing numerics are checked
+        # separately since the backends only agree to kernel tolerance)
+        "bit_identical": bit_identical,
+        "preprocess_numerics_ok": pre_ok,
+        "compile_once_per_slice": (
+            inline_res["trace_count_during_trace"] == 0
+            and pipe_res["trace_count_during_trace"] == 0
+            and all(v == 2 for v in inline_res["per_slice_traces"].values())
+            and all(v == 2 for v in pipe_res["per_slice_traces"].values())
+        ),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -416,6 +620,8 @@ def main():
         "compile_once": new["total_traces"] == 2,
         "continuous_batching": bench_continuous(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
         "multi_slice": bench_multi_slice(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
+        "preprocess_overlap": bench_preprocess_overlap(
+            cfg, TRACE_N, MEAN_INTERARRIVAL_S),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -434,6 +640,12 @@ def main():
               f"occupancy={p['mean_slot_occupancy']:.3f}, "
               f"hedges={p['hedges']}, "
               f"traces/slice=2x{p['n_slices']}")
+    po = result["preprocess_overlap"]
+    print(f"overlap:      {po['tokens_per_s_speedup']:.2f}x useful tokens/s, "
+          f"{po['p99_latency_speedup']:.2f}x p99 latency "
+          f"(decoupled DPU vs CPU-inline), "
+          f"bit_identical={po['bit_identical']}, "
+          f"compile_once={po['compile_once_per_slice']}")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,15 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 from repro.core.batching.policy import BatchPolicy
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (for n >= 1): THE shape-bucket formula,
+    shared by prompt buckets (serving/engine), bucket-pure admission groups
+    (core/batching/scheduler), and DPU launch stacks (core/dpu/service) so
+    the compile-once shape discipline can never silently diverge between
+    layers."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
 @dataclass
 class Request:
     rid: int
@@ -23,6 +32,11 @@ class Request:
     length: float                # audio seconds or token count
     payload: Any = None
     max_new_tokens: Optional[int] = None  # per-request decode budget
+    # Real tokenized prompt: an int token array of exactly max(1, int(length))
+    # ids. None falls back to the deterministic per-rid synthetic generator
+    # (the benchmark workload). Carried end-to-end through the slot pool;
+    # hedge clones share the (read-only) array.
+    prompt: Any = None
     preprocessed_at: Optional[float] = None
     dispatched_at: Optional[float] = None
     completed_at: Optional[float] = None

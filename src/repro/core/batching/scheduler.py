@@ -21,7 +21,7 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.buckets import Batch, BucketedBatcher, Request, next_pow2
 from repro.core.batching.policy import BatchPolicy, pick_segment_len
 
 
@@ -60,6 +60,24 @@ class SlotScheduler:
     def backlog(self) -> int:
         return len(self._backlog)
 
+    def depth(self) -> int:
+        """Admission queue depth (backlogged requests not yet in a slot) —
+        the stage-pipelined runtime's backpressure signal: when depth
+        reaches RuntimeConfig.max_backlog, admission stops pulling from the
+        preprocess-complete queue and the stall propagates upstream to
+        ingest. Alias of backlog() so the two can never diverge."""
+        return self.backlog()
+
+    def offer(self, reqs: Sequence[Request]) -> None:
+        """Admission intake from the stage-pipelined runtime's preprocess-
+        complete queue (serving/runtime.py): requests whose preprocessing
+        already finished join the EDF backlog directly. Batch *formation*
+        already happened upstream (the DpuService drains same-shape groups
+        and stamps preprocessed_at), so the batcher's knee timer is not paid
+        a second time; plan() still emits bucket-pure left-padded admission
+        groups, so the engine's compile-once invariant is untouched."""
+        self.requeue(reqs)
+
     def pull(self, batcher: BucketedBatcher, now: float) -> None:
         """Drain every batch the knee policy says is due at `now`."""
         pulled = False
@@ -74,8 +92,7 @@ class SlotScheduler:
         """Power-of-two prompt-length bucket (the engine's admit-executable
         key); admission groups are kept bucket-pure so a short prompt never
         pays a long neighbor's padded prefill."""
-        n = max(1, int(req.length))
-        return 1 << max(0, (n - 1).bit_length())
+        return next_pow2(max(1, int(req.length)))
 
     def cancel(self, rids) -> int:
         """Drop backlogged requests by rid (hedge-twin cancellation or an

@@ -30,11 +30,26 @@ class DpuConfig:
     split_audio_cus: bool = True    # False = Fig.12(b) strawman (ablation)
 
 
-def _shape_key(x: Any) -> Any:
-    """Same-shape grouping key for batched preprocessing."""
+def group_key(x: Any) -> Any:
+    """THE grouping key for batched preprocessing (process_batch and the
+    DpuService drain loop both use it — keep them in sync):
+
+    * array payloads group by `.shape` (a same-shape stack is one kernel
+      launch per functional unit);
+    * dict payloads (e.g. JPEG {"coeffs", "qtable"}) group by the sorted
+      (field name, field shape) items, so two requests land in one group
+      iff every field is shape-compatible for stacking;
+    * payloads with no `.shape` (scalars in the simulator) group together.
+
+    Grouping NEVER changes result order: DPU.process_batch scatters each
+    group's outputs back to the input indices, so out[i] always corresponds
+    to xs[i] (regression-tested in tests/test_dpu.py)."""
     if isinstance(x, dict):
         return tuple(sorted((k, getattr(v, "shape", None)) for k, v in x.items()))
     return getattr(x, "shape", None)
+
+
+_shape_key = group_key  # backward-compatible alias
 
 
 class _CuPool:
@@ -82,12 +97,18 @@ class DPU:
         return x
 
     def process_batch(self, xs: List[Any]) -> List[Any]:
-        """Preprocess a stack of requests; same-shape runs go through the CU
-        batch path (one kernel launch per FU per stack) instead of one launch
-        per request. Order of the results matches the input order."""
+        """Preprocess a stack of requests; same-shape groups (key:
+        `group_key`) go through the CU batch path (one kernel launch per FU
+        per stack) instead of one launch per request.
+
+        Ordering contract: out[i] is ALWAYS the preprocessed xs[i] — groups
+        are formed over input indices and each group's outputs are scattered
+        back to those indices, so mixed-shape submissions never permute
+        results (tests/test_dpu.py::test_process_batch_preserves_input_order
+        guards this)."""
         groups: Dict[Any, List[int]] = {}
         for i, x in enumerate(xs):
-            groups.setdefault(_shape_key(x), []).append(i)
+            groups.setdefault(group_key(x), []).append(i)
         out: List[Any] = [None] * len(xs)
         for idxs in groups.values():
             ys = [xs[i] for i in idxs]

@@ -96,6 +96,18 @@ def audio_resample_batch(x: jax.Array, up: int, down: int,
     return audio_resample_batch_pallas(xp, h, down, interpret=_interpret())[:, :n_out]
 
 
+@functools.partial(jax.jit, static_argnames=("up", "down"))
+def audio_pipeline_batch(x: jax.Array, up: int = 1, down: int = 3) -> jax.Array:
+    """Whole audio front-end — resample -> mel -> normalize — for a
+    same-length stack [N, L] as ONE jitted program (the DPU service's fused
+    CU launch): a single XLA call per request group, so the service worker
+    holds the GIL only at dispatch, not per functional unit, and decode on
+    the event-loop thread genuinely overlaps preprocessing."""
+    y = audio_resample_batch(x, up, down)
+    feats = mel_spectrogram_batch(y)
+    return audio_normalize_batch(feats)
+
+
 # --- image ------------------------------------------------------------------
 
 

@@ -75,13 +75,14 @@ def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
 
 
 def ring_slot_positions(pos: jax.Array, wc: int) -> jax.Array:
-    """Padded-coordinate position of the most recent write to each KV ring
-    slot: slot j holds position pos - ((pos - j) mod wc), the largest value
-    <= pos congruent to j (mod wc). Combined with a per-row pos_offset this
-    is the whole per-slot masking story for the serving slot pool: row b
-    treats ring slot j as true position ring_slot_positions(pos, wc)[j] -
-    pos_offset[b], and everything negative (left-pad slots, ring slots the
-    row has not written yet, other epochs' stale data) is masked invalid."""
+    """Position of the most recent write to each KV ring slot: slot j holds
+    position pos - ((pos - j) mod wc), the largest value <= pos congruent to
+    j (mod wc); negative values (slots not yet written, or other epochs'
+    stale data) are masked invalid. Used by the shared-position decode ring
+    (lm._attn_decode, pos_offset=None); slot-pool rows use the same formula
+    per row in TRUE coordinates (qpos - mod(qpos - j, wc)) — each row's
+    cache is true-position indexed, so slot t of a live row is its own token
+    at position t and the layout is independent of the admission clock."""
     j = jnp.arange(wc, dtype=jnp.int32)
     return pos - jnp.mod(pos - j, wc)
 

@@ -338,13 +338,19 @@ def cache_axes(cfg: ModelConfig, batch: int, cache_len: int):
 #
 # The pool is one fixed-shape cache tree [max_slots, cache_len] shared by all
 # in-flight requests; requests join by having their prefill cache scattered
-# into a row slot and leave by simply being ignored (stale rows are masked by
-# pos_offset, overwritten on slot reuse). A single global scalar `clock` is
-# the shared padded write position: a request admitted at clock P with true
-# prompt length n gets pos_offset = P - n, its prompt KV lands on ring slots
-# (P - lp .. P - 1) mod cache_len, and every later decode step writes ring
-# slot clock % cache_len for all rows at once — so the decode executable
-# never changes shape as requests come and go.
+# into a row slot and leave by simply being ignored (stale rows are masked,
+# overwritten on slot reuse). A single global scalar `clock` is the shared
+# padded write position: a request admitted at clock P with true prompt
+# length n gets pos_offset = P - n, and each row's cache is TRUE-POSITION
+# indexed — its prompt KV lands on ring slots 0..n-1, and every decode step
+# writes row b's slot (clock - pos_offset[b]) mod cache_len (a per-row
+# scatter of one shared fixed-shape op) — so the decode executable never
+# changes shape as requests come and go, and a row's KV layout is exactly
+# the layout of an isolated per-request cache no matter WHEN it joined.
+# Clock-independent layout is what makes outputs bit-identical across
+# compositions/timings (see _attn_decode); a row's live span never exceeds
+# the ring (cache_len >= max_prompt + max_new + segment), so slot t of a
+# live row is always its own token at true position t.
 # ---------------------------------------------------------------------------
 
 
@@ -356,16 +362,20 @@ def alloc_slot_pool(cfg: ModelConfig, max_slots: int, cache_len: int):
     )
 
 
-def _scatter_slot_tree(pool, pre, slot_ids, clock, lp: int, stacked: bool):
-    """Scatter prefill-cache rows into pool row slots. Attention k/v leaves
-    land on ring slots (clock - lp .. clock - 1) mod pool_ring; everything
-    else (ssm conv/state, cross-attn ck/cv) is a plain row copy. slot_ids
-    out of range (>= max_slots) mark padding rows and are dropped."""
+def _scatter_slot_tree(pool, pre, slot_ids, lp: int, stacked: bool):
+    """Scatter prefill-cache rows into pool row slots. The prefill cache is
+    TRUE-POSITION indexed (left-padded rows are shifted at cache build, see
+    _attn_forward), so attention k/v leaves land on pool ring slots 0..lp-1
+    directly — slot t of a row always holds its token at true position t,
+    and decode continues writing slot (clock - offset) mod ring (see
+    _attn_decode). Everything else (ssm conv/state, cross-attn ck/cv) is a
+    plain row copy. slot_ids out of range (>= max_slots) mark padding rows
+    and are dropped."""
     out = {}
     for name, pv in pool.items():
         qv = pre[name]
         if isinstance(pv, dict):
-            out[name] = _scatter_slot_tree(pv, qv, slot_ids, clock, lp, stacked)
+            out[name] = _scatter_slot_tree(pv, qv, slot_ids, lp, stacked)
             continue
         axis0 = 1 if stacked else 0  # body leaves carry a leading layer dim
         if name in ("k", "v"):
@@ -375,7 +385,7 @@ def _scatter_slot_tree(pool, pre, slot_ids, clock, lp: int, stacked: bool):
                 "padded prompt (sliding_window must be 0 or >= prompt bucket)",
                 qv.shape, lp,
             )
-            tgt = jnp.mod(clock - lp + jnp.arange(lp, dtype=jnp.int32), wc)
+            tgt = jnp.mod(jnp.arange(lp, dtype=jnp.int32), wc)
             idx = (slot_ids[:, None], tgt[None, :])
         else:
             idx = (slot_ids,)
@@ -390,14 +400,14 @@ def scatter_into_slots(pool_cache, prefill_cache, slot_ids, clock, lp: int):
     prefill_cache rows i land in pool slot slot_ids[i]; rows whose slot id is
     out of range (admission padding) are dropped."""
     slot_ids = slot_ids.astype(jnp.int32)
-    clock = jnp.asarray(clock, jnp.int32)
+    del clock  # placement is true-position indexed; clock no longer matters
     out = {}
     if "prefix" in pool_cache:
         out["prefix"] = _scatter_slot_tree(
-            pool_cache["prefix"], prefill_cache["prefix"], slot_ids, clock, lp, False
+            pool_cache["prefix"], prefill_cache["prefix"], slot_ids, lp, False
         )
     out["body"] = _scatter_slot_tree(
-        pool_cache["body"], prefill_cache["body"], slot_ids, clock, lp, True
+        pool_cache["body"], prefill_cache["body"], slot_ids, lp, True
     )
     return out
 
@@ -476,7 +486,34 @@ def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=N
                 # j - wc < 0 => masked invalid until decode writes them)
                 ck = jnp.pad(k, ((0, 0), (0, wc - S), (0, 0), (0, 0))).astype(dt)
                 cv = jnp.pad(v, ((0, 0), (0, wc - S), (0, 0), (0, 0))).astype(dt)
+                if pos_offset is not None:
+                    # TRUE-POSITION cache layout for left-padded rows: shift
+                    # each row left by its pad amount so cache slot t holds
+                    # the token at true position t (slot >= true length stays
+                    # zero). Decode then reads/writes the same axis layout as
+                    # an unpadded per-request cache — the alignment behind
+                    # the engine's bit-identity invariant (see _attn_decode).
+                    gi = (jnp.arange(wc, dtype=jnp.int32)[None, :]
+                          + pos_offset[:, None].astype(jnp.int32))
+                    keep = (gi < wc)[..., None, None]
+                    gi = jnp.minimum(gi, wc - 1)
+
+                    def _shift(a):
+                        g = jnp.take_along_axis(
+                            a,
+                            jnp.broadcast_to(gi[..., None, None], a.shape),
+                            axis=1,
+                        )
+                        return jnp.where(keep, g, jnp.zeros((), a.dtype))
+
+                    ck, cv = _shift(ck), _shift(cv)
             else:
+                if pos_offset is not None:
+                    raise ValueError(
+                        "pos_offset with a sliding-window ring smaller than "
+                        "the padded prompt is unsupported (size the ring to "
+                        "cover the prompt bucket)"
+                    )
                 slots = jnp.arange(S - wc, S, dtype=jnp.int32) % wc
                 ck = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(k[:, S - wc :])
                 cv = jnp.zeros((B, wc, k.shape[2], hd), dt).at[:, slots].set(v[:, S - wc :])
@@ -494,9 +531,22 @@ def _rope4(q, pos, theta):
 def _attn_decode(x, p, cfg, cache, pos, pos_offset=None):
     """Single-token attention. x: [B,1,D]; cache: {'k','v'} ring buffers.
 
-    `pos` is the scalar *padded* write position (shared ring slot); with
-    pos_offset [B], rope/masking use per-row true positions pos - offset, so a
-    left-padded ragged batch decodes exactly like per-row unpadded decode.
+    `pos` is the scalar *padded* write position; with pos_offset [B] the
+    cache is TRUE-POSITION indexed per row: row b's step writes ring slot
+    (pos - offset_b) mod wc, so slot t always holds the row's token at true
+    position t (within the live window), exactly like an unpadded
+    per-request cache. That axis alignment — not just the masking — is what
+    makes slot-pool / padded decode bit-identical to isolated decode: XLA's
+    blocked reductions pair softmax/PV summands by axis placement, so a
+    clock-rotated layout (the old shared-ring-slot scheme) wobbled logits in
+    the last ulp whenever a row's window wrapped the ring boundary, and
+    occasionally flipped an argmax (regression: tests/test_engine_hotpath
+    .py::test_continuous_admission_near_ring_wrap_is_bit_identical).
+    Validity needs no slot bookkeeping: within [0, qpos] every slot is the
+    row's own most recent write (a row's live span never exceeds wc, by pool
+    sizing), and anything past qpos — stale epochs, admission-pad zeros,
+    unwritten slots — is cut by the causal mask, while window rings keep the
+    exact wrapped-position semantics via per-row ring_slot_positions.
     """
     dt = x.dtype
     B = x.shape[0]
@@ -504,20 +554,34 @@ def _attn_decode(x, p, cfg, cache, pos, pos_offset=None):
     k1 = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
     v1 = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
     wc = cache["k"].shape[1]
-    slot_pos = L.ring_slot_positions(pos, wc)  # padded position per ring slot
+    wc_idx = jnp.arange(wc, dtype=jnp.int32)
     if pos_offset is None:
         qpos = pos[None].astype(jnp.int32)
+        slot_pos = L.ring_slot_positions(pos, wc)
         kpos = jnp.where(slot_pos >= 0, slot_pos, -1)
     else:
         off = pos_offset.astype(jnp.int32)
         qpos = (pos - off)[:, None]                      # [B,1] true positions
-        kpos = slot_pos[None, :] - off[:, None]          # [B,wc]
-        kpos = jnp.where(kpos >= 0, kpos, -1)            # pad slots -> invalid
+        # per-row true-position ring: slot t holds the most recent true
+        # position <= qpos congruent to t (mod wc); negatives are invalid
+        kpos = qpos - jnp.mod(qpos - wc_idx[None, :], wc)  # [B, wc]
+        kpos = jnp.where(kpos >= 0, kpos, -1)
     q = _rope4(q, qpos, cfg.rope_theta)
     k1 = L.apply_rope(k1, qpos, cfg.rope_theta)
-    idx = (pos % wc).astype(jnp.int32)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), idx, 1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), idx, 1)
+    if pos_offset is None:
+        idx = (pos % wc).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k1.astype(cache["k"].dtype), idx, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v1.astype(cache["v"].dtype), idx, 1)
+    else:
+        # per-row slot write as a dense select (not a scatter): XLA keeps
+        # the donated cache update in-place inside the segment scan, where a
+        # gather/scatter would copy the pool every step
+        widx = jnp.mod(pos - off, wc).astype(jnp.int32)  # [B] per-row slots
+        hit = (wc_idx[None, :] == widx[:, None])[:, :, None, None]
+        ck = jnp.where(hit, k1.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(hit, v1.astype(cache["v"].dtype), cache["v"])
     kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
     o = L.attention_dense(
         q.reshape(B, 1, kh * g, hd), ck, cv, qpos, kpos, causal=True, window=0

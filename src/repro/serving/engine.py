@@ -46,7 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.buckets import (
+    Batch, BucketedBatcher, Request, next_pow2,
+)
 from repro.core.batching.policy import BatchPolicy
 from repro.core.batching.scheduler import SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
@@ -71,28 +73,47 @@ class EngineConfig:
     eos_id: Optional[int] = None   # retire a row early when it emits this token
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, (n - 1).bit_length())
+_next_pow2 = next_pow2  # shared shape-bucket formula (buckets.next_pow2)
 
 
-def enqueue_requests(reqs: List[Request], *, ec: EngineConfig,
-                     dpu: Optional[DPU], batcher: BucketedBatcher,
-                     stats: Dict[str, int], validate_prompts: bool) -> None:
-    """Shared admission contract for ServingEngine and MultiSliceEngine:
-    reject oversized prompts BEFORE anything is enqueued (raising at
-    admission time would drop the whole already-popped admission group,
-    valid requests included), run ONE batched DPU preprocessing pass over
-    the submission (DPU.process_batch groups same-shape requests into a
-    single Pallas launch per functional unit), then enqueue."""
-    if validate_prompts:
-        for r in reqs:
-            lp = max(ec.min_prompt_len, _next_pow2(max(1, int(r.length))))
+def validate_requests(reqs: List[Request], ec: EngineConfig,
+                      *, check_bucket: bool) -> None:
+    """Front-door request validation, shared by every intake path (eager
+    submit_many AND the stage-pipelined runtime): a malformed request must
+    fail BEFORE anything is enqueued — raising at admission time would drop
+    the whole already-popped admission group, valid requests included.
+
+    * a real tokenized prompt (Request.prompt) must carry exactly
+      max(1, int(length)) ids — length drives bucket choice and cache
+      sizing, so a mismatch would silently corrupt positions;
+    * on the slot-pool path the padded prompt bucket must fit
+      max_prompt_len (run-to-completion sizes its cache per batch)."""
+    for r in reqs:
+        n = max(1, int(r.length))
+        if r.prompt is not None and len(r.prompt) != n:
+            raise ValueError(
+                f"request {r.rid}: prompt carries {len(r.prompt)} tokens "
+                f"but length={r.length} implies {n}"
+            )
+        if check_bucket:
+            lp = max(ec.min_prompt_len, _next_pow2(n))
             if lp > ec.max_prompt_len:
                 raise ValueError(
                     f"request {r.rid}: prompt bucket {lp} exceeds "
                     f"max_prompt_len={ec.max_prompt_len}; raise "
                     "EngineConfig.max_prompt_len"
                 )
+
+
+def enqueue_requests(reqs: List[Request], *, ec: EngineConfig,
+                     dpu: Optional[DPU], batcher: BucketedBatcher,
+                     stats: Dict[str, int], validate_prompts: bool) -> None:
+    """Shared admission contract for ServingEngine and MultiSliceEngine:
+    validate every request up front (see validate_requests), run ONE batched
+    DPU preprocessing pass over the submission (DPU.process_batch groups
+    same-shape requests into a single Pallas launch per functional unit),
+    then enqueue."""
+    validate_requests(reqs, ec, check_bucket=validate_prompts)
     if dpu is not None:
         idx = [i for i, r in enumerate(reqs) if r.payload is not None]
         if idx:
@@ -189,8 +210,11 @@ class ServingEngine:
             self._slots: List[Optional[_Slot]] = [None] * ec.max_slots
             self._pool_off = np.zeros(ec.max_slots, np.int32)
             self._tok = np.zeros((ec.max_slots, 1), np.int32)
-            # clock >= any padded prompt bucket, so admission ring targets
-            # (clock - lp .. clock - 1) never wrap on join; reset when idle.
+            # clock >= any padded prompt bucket keeps pos_offset
+            # (= clock - prompt_len) non-negative; reset when idle. Ring
+            # placement itself is clock-independent (true-position indexed
+            # per row, lm._attn_decode), so outputs never depend on WHEN a
+            # request is admitted.
             self._clock = ec.max_prompt_len
             # lp -> jitted prefill+admit executable
             self._admit_cache: Dict[int, Any] = {}
@@ -217,6 +241,25 @@ class ServingEngine:
         enqueue_requests(reqs, ec=self.ec, dpu=self.dpu,
                          batcher=self.batcher, stats=self.stats,
                          validate_prompts=self.ec.continuous)
+
+    def offer(self, reqs: List[Request]) -> None:
+        """Stage-pipelined admission intake (serving/runtime.py): requests
+        whose preprocessing already completed join the SlotScheduler's EDF
+        backlog directly — the preprocess-complete queue replaces
+        submit_many's eager inline DPU pass. The runtime validates at its
+        front door (validate_requests), and plan() still forms bucket-pure
+        left-padded groups, so the compile-once invariant holds."""
+        if not self.ec.continuous:
+            raise ValueError("pipelined admission requires continuous=True")
+        self.slot_scheduler.offer(reqs)
+
+    def admission_depth(self) -> int:
+        """Requests waiting for a KV slot (batcher + scheduler backlog) —
+        the pipelined runtime's backpressure signal for this stage."""
+        d = self.batcher.pending()
+        if self.ec.continuous:
+            d += self.slot_scheduler.depth()
+        return d
 
     def cancel(self, rids: Iterable[int]) -> int:
         """Abandon requests by rid wherever they are: queued in the batcher,
@@ -275,8 +318,8 @@ class ServingEngine:
             self._decode_segment(plan.segment_len)
             progressed = True
         elif not self.slot_scheduler.backlog() and not self.batcher.pending():
-            # pool drained: rewind the clock so ring positions stay small
-            # (keeps admissions wrap-free => bit-exact vs isolated decode)
+            # pool drained: rewind the clock so int32 positions stay small
+            # (placement is clock-independent; this is pure hygiene)
             self._clock = self.ec.max_prompt_len
             self._pool_off[:] = 0
         return progressed
@@ -303,8 +346,12 @@ class ServingEngine:
         )
 
     def _prompt_tokens(self, req: Request, n: int) -> np.ndarray:
-        """Synthetic prompt (deterministic per request id) — the benchmark
-        workload; real tokenized prompts would ride in req.payload."""
+        """Prompt tokens for a request: the explicit token array when the
+        request carries one (req.prompt — real tokenized workloads, length
+        validated at the front door), else the deterministic per-rid
+        synthetic generator (the benchmark workload)."""
+        if req.prompt is not None:
+            return np.asarray(req.prompt, np.int32)
         rng = np.random.default_rng(req.rid)
         return rng.integers(0, self.cfg.vocab, n)
 
@@ -520,6 +567,15 @@ class ServingEngine:
         if not self.slot_occupancy:
             return 0.0
         return float(np.mean(self.slot_occupancy))
+
+    def slots_in_use(self) -> int:
+        """Occupied KV pool rows right now (pipelined-runtime telemetry)."""
+        if not self.ec.continuous:
+            return 0
+        return self.ec.max_slots - self._free_slots()
+
+    def slot_capacity(self) -> int:
+        return self.ec.max_slots if self.ec.continuous else 0
 
 
 def build_engine(cfg: ModelConfig, *, seed: int = 0,

@@ -250,6 +250,23 @@ class MultiSliceEngine:
                          batcher=self.batcher, stats=self.stats,
                          validate_prompts=True)
 
+    def offer(self, reqs: List[Request]) -> None:
+        """Stage-pipelined admission intake (serving/runtime.py): already-
+        preprocessed requests join the shared SlotScheduler's EDF backlog
+        directly; _form() chunks them into bucket-pure per-slice batches as
+        usual, so dispatch/hedging semantics are unchanged."""
+        self.slot_scheduler.offer(reqs)
+
+    def admission_depth(self) -> int:
+        """Requests waiting for slice capacity (batcher + shared backlog +
+        formed-but-undispatched batches + failure/resize requeues) — the
+        pipelined runtime's backpressure signal for this stage; omitting
+        requeued batches would let the runtime offer past max_backlog after
+        a slice failure."""
+        return (self.batcher.pending() + self.slot_scheduler.depth()
+                + sum(b.size for b in self._pending)
+                + sum(b.size for b in self.sched.requeued))
+
     def busy(self) -> bool:
         return bool(
             self.batcher.pending() or self.slot_scheduler.backlog()
@@ -319,7 +336,13 @@ class MultiSliceEngine:
         sid = self.sched.dispatch(b, now, expected_s=self._expected_s(b))
         if sid is None:
             return None
-        self.engines[sid].submit_many(list(b.requests))
+        # offer(), not submit_many(): the batch is already formed, validated
+        # and preprocessed at the shared queue — re-submitting would re-run
+        # batch formation against the slice's (pass-through) batcher and
+        # overwrite preprocessed_at with a wall timestamp, which breaks
+        # virtual-clock driving (the pipelined runtime) and skews latency
+        # accounting. Dispatch hands it straight to slot admission.
+        self.engines[sid].offer(list(b.requests))
         self._inflight[sid] = _Dispatch(batch=b, reqs=list(b.requests),
                                         primary=True)
         self.stats["dispatched"] += 1
@@ -412,7 +435,7 @@ class MultiSliceEngine:
             if twin_sid is None:
                 continue  # no free slice: stays un-hedged, retried next step
             clones = [dc_replace(r) for r in disp.batch.requests]
-            self.engines[twin_sid].submit_many(clones)
+            self.engines[twin_sid].offer(clones)
             self._inflight[twin_sid] = _Dispatch(
                 batch=disp.batch, reqs=clones, primary=False
             )
@@ -456,6 +479,13 @@ class MultiSliceEngine:
     def mean_slot_occupancy(self) -> float:
         xs = [x for e in self.engines.values() for x in e.slot_occupancy]
         return float(np.mean(xs)) if xs else 0.0
+
+    def slots_in_use(self) -> int:
+        """Occupied KV pool rows across every slice (runtime telemetry)."""
+        return sum(e.slots_in_use() for e in self.engines.values())
+
+    def slot_capacity(self) -> int:
+        return sum(e.slot_capacity() for e in self.engines.values())
 
 
 def build_multislice_engine(

@@ -20,10 +20,17 @@ class WorkloadSpec:
     sigma: float = 0.6             # lognormal shape (LibriSpeech-ish)
     max_len: float = 30.0
     fixed_len: float = 1.0         # for image (one unit)
+    vocab: int = 0                 # text: >0 attaches real token arrays
+    payload_samples: int = 0       # >0 attaches raw audio payloads (DPU work)
     seed: int = 0
 
 
 def generate_requests(spec: WorkloadSpec, n: int) -> List[Request]:
+    """Poisson request stream. Text workloads with `vocab` set carry REAL
+    tokenized prompts (Request.prompt, exactly int(length) ids) end-to-end
+    through the slot pool instead of relying on the engine's per-rid
+    synthetic generator; `payload_samples` additionally attaches raw audio
+    payloads so the preprocessing stage has actual DPU work."""
     rng = np.random.default_rng(spec.seed)
     gaps = rng.exponential(1.0 / spec.rate_qps, size=n)
     arrivals = np.cumsum(gaps)
@@ -33,7 +40,19 @@ def generate_requests(spec: WorkloadSpec, n: int) -> List[Request]:
         mu = math.log(spec.mean_len) - spec.sigma**2 / 2
         lengths = np.minimum(rng.lognormal(mu, spec.sigma, size=n), spec.max_len)
         lengths = np.maximum(lengths, 0.5)
-    return [
-        Request(rid=i, arrival=float(arrivals[i]), length=float(lengths[i]))
-        for i in range(n)
-    ]
+    if spec.modality == "text" and spec.vocab > 0:
+        # prompt length is the unit of `length` for text — round to ints so
+        # the token array matches max(1, int(length)) exactly
+        lengths = np.maximum(1, np.round(lengths)).astype(np.int64)
+    out = []
+    for i in range(n):
+        prompt = None
+        payload = None
+        if spec.modality == "text" and spec.vocab > 0:
+            prompt = rng.integers(0, spec.vocab, int(lengths[i])).astype(np.int32)
+        if spec.payload_samples > 0:
+            payload = rng.standard_normal(spec.payload_samples).astype(np.float32)
+        out.append(Request(rid=i, arrival=float(arrivals[i]),
+                           length=float(lengths[i]), prompt=prompt,
+                           payload=payload))
+    return out

@@ -1,0 +1,379 @@
+"""Stage-pipelined serving runtime: decoupled preprocessing over the real
+engines (PREBA's system shape, end to end).
+
+    client ──► ingest ──► preprocess ──► admission ──► decode ──► emit
+               (shed)     (DpuService)   (SlotScheduler  (per-slice
+                                          EDF backlog)    engines)
+
+The paper's headline is that CPU-inline preprocessing starves the MIG
+slices: every submit stalls the decode loop for a full preprocessing pass.
+This runtime removes that stall. Each stage owns a bounded queue and a
+`step()` driver; one cooperative event loop advances every stage once per
+iteration, downstream first, so a decode segment never waits on
+preprocessing (and vice versa — the DpuService hands finished requests to
+admission through a double buffer it fills while admission drains).
+
+Queues and backpressure invariants (see also ROADMAP "Serving
+architecture"):
+
+  ingest      bounded by RuntimeConfig.max_ingest; overflow is SHED at the
+              front door (stats["shed_backpressure"]), never dropped
+              silently mid-pipeline.
+  preprocess  DpuService input queue (max_pending) + in-flight cap tied to
+              the ready buffer: a stalled admission stage stops launches.
+  ready       double-buffered (2 x max_ready) preprocess-complete queue;
+              `poll()` surfaces requests in completion order.
+  admission   SlotScheduler EDF backlog bounded by max_backlog; admission
+              pulls from the ready queue ONLY while it has headroom, so a
+              full slot pool propagates all the way back to ingest.
+  decode      the engines' own fixed slot pools (the hard resource).
+
+Backpressure chain: slots full -> backlog fills -> ready fills -> service
+stops launching -> pending fills -> ingest fills -> front door sheds. No
+queue is unbounded, and every request is either completed, still queued, or
+recorded in `self.shed` — nothing vanishes.
+
+SLO-aware shedding: with RuntimeConfig.slo_s set, a request whose modeled
+preprocessing completion (`DpuService.estimate_s`, the CU cost model)
+already overruns `arrival + slo_s` is shed immediately — the paper's
+front-door admission control: work that cannot meet its deadline must not
+occupy the DPU or a KV slot.
+
+Clocks: `clock="virtual"` is deterministic (tests/simulation drive `now`
+explicitly; idle gaps jump to the next modeled event). `clock="wall"` is
+real serving (launch/serve.py --pipelined): the DpuService worker overlaps
+preprocessing with decode on the wall clock.
+
+Bit-identity: the runtime changes only WHEN work happens, never what is
+computed — per-request outputs are bit-identical to the synchronous
+`submit_many` + `run_until_idle` path (tests/test_runtime.py), including
+for the surviving requests of a run that shed under backpressure.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Union
+
+from repro.core.batching.buckets import Request
+from repro.core.dpu.service import DpuService
+from repro.serving.engine import ServingEngine, validate_requests
+from repro.serving.multislice import MultiSliceEngine
+
+Engine = Union[ServingEngine, MultiSliceEngine]
+
+
+class _StageStat:
+    """Streaming mean/max accumulator for per-step queue-depth telemetry —
+    O(1) memory however long the serving loop runs (a wall-clock server
+    steps thousands of times per second; keeping raw samples would grow
+    without bound)."""
+
+    __slots__ = ("n", "total", "peak")
+
+    def __init__(self):
+        self.n = 0
+        self.total = 0.0
+        self.peak = 0
+
+    def add(self, x) -> None:
+        self.n += 1
+        self.total += x
+        if x > self.peak:
+            self.peak = x
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def reset(self) -> None:
+        self.n, self.total, self.peak = 0, 0.0, 0
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    max_ingest: int = 64            # front-door queue bound (overflow sheds)
+    max_backlog: int = 64           # admission backlog bound
+    slo_s: float = float("inf")     # front-door latency SLO (inf = no shed)
+    clock: str = "virtual"          # virtual (tests/sim) | wall (serving)
+
+
+class PipelinedRuntime:
+    """Cooperative five-stage pipeline over a continuous-batching engine
+    (single- or multi-slice) and an optional DpuService."""
+
+    def __init__(self, engine: Engine, service: Optional[DpuService] = None,
+                 rc: Optional[RuntimeConfig] = None):
+        rc = RuntimeConfig() if rc is None else rc
+        if rc.clock not in ("virtual", "wall"):
+            raise ValueError(f"unknown clock mode {rc.clock!r}")
+        if isinstance(engine, ServingEngine) and not engine.ec.continuous:
+            raise ValueError("pipelined runtime requires continuous=True")
+        if service is not None and service.cfg.clock != rc.clock:
+            raise ValueError(
+                f"clock mismatch: runtime={rc.clock} "
+                f"service={service.cfg.clock}"
+            )
+        self.engine = engine
+        self.service = service
+        self.rc = rc
+        self._ingest: Deque[Request] = deque()
+        self.shed: List[Request] = []
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "accepted": 0, "offered": 0,
+            "shed_slo": 0, "shed_backpressure": 0, "shed_error": 0,
+        }
+        # per-stage queue-depth accumulators, fed once per step() (telemetry
+        # for BENCH_serve.json's preprocess_overlap section)
+        self._depths: Dict[str, _StageStat] = {
+            k: _StageStat()
+            for k in ("ingest", "preprocess", "ready", "admission", "slots")
+        }
+        self._pre_busy = _StageStat()   # DPU occupancy samples (0/1)
+        self._now = 0.0                 # virtual-clock high-water mark
+
+    # --- clock --------------------------------------------------------------
+    def _tick(self, now: Optional[float]) -> float:
+        if self.rc.clock == "wall":
+            return time.monotonic() if now is None else now
+        if now is not None:
+            self._now = max(self._now, now)
+        return self._now
+
+    # --- front door (ingest + shedding) -------------------------------------
+    def submit(self, reqs: Union[Request, List[Request]],
+               now: Optional[float] = None) -> int:
+        """Admit requests at the front door. Malformed requests raise before
+        anything is enqueued (same contract as submit_many); well-formed
+        requests are either accepted into the bounded ingest queue or SHED —
+        recorded in `self.shed` — when the SLO is already blown or
+        backpressure has filled ingest. Returns the number accepted."""
+        if isinstance(reqs, Request):
+            reqs = [reqs]
+        now = self._tick(now)
+        validate_requests(reqs, self.engine.ec, check_bucket=True)
+        if self.service is None and any(r.payload is not None for r in reqs):
+            raise ValueError(
+                "raw payloads submitted to a runtime without a DpuService "
+                "would silently skip preprocessing; attach a service or "
+                "preprocess upstream"
+            )
+        accepted = 0
+        has_slo = self.rc.slo_s != float("inf")
+        for r in reqs:
+            self.stats["submitted"] += 1
+            est = 0.0
+            if has_slo and self.service is not None and r.payload is not None:
+                # cost-model estimate only matters when an SLO is set (it
+                # also assumes a well-formed payload — malformed ones are
+                # shed by the worker, not crashed on at the front door)
+                est = self.service.estimate_s(r.payload)
+            if now + est > r.arrival + self.rc.slo_s:
+                self.stats["shed_slo"] += 1
+                self.shed.append(r)
+            elif len(self._ingest) >= self.rc.max_ingest:
+                self.stats["shed_backpressure"] += 1
+                self.shed.append(r)
+            else:
+                self._ingest.append(r)
+                self.stats["accepted"] += 1
+                accepted += 1
+        return accepted
+
+    # --- event loop ---------------------------------------------------------
+    def busy(self) -> bool:
+        return bool(
+            self._ingest
+            or (self.service is not None and self.service.busy())
+            or self.engine.busy()
+        )
+
+    def step(self, now: Optional[float] = None) -> bool:
+        """One pipeline iteration, downstream stages first (each item moves
+        at most one stage per tick; decode is never blocked behind this
+        tick's preprocessing work). Returns True if anything moved."""
+        now = self._tick(now)
+        progressed = False
+
+        # stages 4+5 — decode + emit: the engine's own admit -> segment ->
+        # retire iteration; completions land on engine.completed
+        if self.engine.busy():
+            progressed |= bool(self.engine.step(now))
+
+        # stage 3 — admission pulls from the preprocess-complete queue,
+        # bounded by the backlog (full slot pool => backlog stays full =>
+        # nothing is pulled => the stall propagates upstream)
+        space = self.rc.max_backlog - self.engine.admission_depth()
+        if self.service is not None and space > 0:
+            ready = self.service.poll(now, space)
+            if ready:
+                self.engine.offer(ready)
+                space -= len(ready)
+                self.stats["offered"] += len(ready)
+                progressed = True
+
+        # stage 2 — the DPU service drains same-shape groups into batched
+        # CU launches and harvests completions into its ready buffer; a
+        # group whose launch raised is shed HERE (recorded, never lost —
+        # the worker keeps serving later groups)
+        if self.service is not None:
+            progressed |= self.service.step(now)
+            failed = self.service.take_failed()
+            if failed:
+                self.stats["shed_error"] += len(failed)
+                self.shed.extend(failed)
+                progressed = True
+
+        # stage 1 — ingest feeds the service (raw payloads) or admission
+        # directly (already-tokenized requests), FIFO, stopping at the
+        # first request the downstream stage cannot take
+        direct: List[Request] = []
+        while self._ingest:
+            r = self._ingest[0]
+            if r.payload is not None and self.service is not None:
+                if not self.service.submit(r):
+                    break
+            else:
+                if space <= 0:
+                    break
+                r.preprocessed_at = now
+                direct.append(r)
+                space -= 1
+            self._ingest.popleft()
+            progressed = True
+        if direct:
+            self.engine.offer(direct)
+            self.stats["offered"] += len(direct)
+
+        self._sample()
+        return progressed
+
+    def run_until_idle(self) -> List[Request]:
+        """Drain the pipeline. Virtual clock: idle iterations jump to the
+        next modeled event (service completion or batcher deadline). Wall
+        clock: idle iterations nap briefly while the DPU worker runs."""
+        stall = 0
+        while self.busy():
+            if self.step():
+                stall = 0
+                continue
+            if self.rc.clock == "wall":
+                time.sleep(0.0005)
+                continue
+            nxt = self._next_event()
+            if nxt is not None and nxt > self._now:
+                self._now = nxt
+                stall = 0
+            else:
+                self._now += 1e-4
+                stall += 1
+                if stall > 10_000:
+                    raise RuntimeError(
+                        "pipeline stalled: no stage can make progress "
+                        f"(depths={self.stage_summary()})"
+                    )
+        return list(self.completed)
+
+    def close(self) -> None:
+        if self.service is not None:
+            self.service.close()
+
+    # --- emit side ----------------------------------------------------------
+    @property
+    def completed(self) -> List[Request]:
+        return self.engine.completed
+
+    @property
+    def batcher(self):
+        """The engine's batcher (benchmark-replay deadline compatibility);
+        idle on the pipelined path — admission bypasses it via offer()."""
+        return self.engine.batcher
+
+    # --- internals ----------------------------------------------------------
+    def _next_event(self) -> Optional[float]:
+        ts = []
+        if self.service is not None:
+            t = self.service.next_ready()
+            if t is not None:
+                ts.append(t)
+        dl = self.engine.batcher.next_deadline()
+        if dl is not None:
+            ts.append(dl)
+        return min(ts) if ts else None
+
+    def _sample(self) -> None:
+        self._depths["ingest"].add(len(self._ingest))
+        if self.service is not None:
+            self._depths["preprocess"].add(
+                self.service.pending() + self.service.in_flight()
+            )
+            self._depths["ready"].add(self.service.ready())
+            # occupancy counts actual CU execution, not queued-but-idle
+            self._pre_busy.add(int(self.service.executing() > 0))
+        else:
+            self._depths["preprocess"].add(0)
+            self._depths["ready"].add(0)
+            self._pre_busy.add(0)
+        self._depths["admission"].add(self.engine.admission_depth())
+        self._depths["slots"].add(self.engine.slots_in_use())
+
+    # --- telemetry ----------------------------------------------------------
+    def stage_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-stage queue-depth stats over every step() sample."""
+        return {
+            k: {"mean": round(st.mean, 3), "max": int(st.peak)}
+            for k, st in self._depths.items()
+        }
+
+    def stage_occupancy(self) -> Dict[str, float]:
+        """Fraction-of-time-busy per resource stage: the DPU (service busy
+        across step samples) and the KV slot pools (occupied fraction)."""
+        cap = self.engine.slot_capacity()
+        slots = self._depths["slots"]
+        return {
+            "preprocess": round(self._pre_busy.mean, 3),
+            "slots": round(slots.mean / cap, 3) if cap else 0.0,
+        }
+
+    def reset_metrics(self) -> None:
+        """Clear telemetry, shed records, and every counter that pairs with
+        them (benchmark warmup boundary) — stats must stay consistent with
+        the shed list (shed_slo + shed_backpressure + shed_error ==
+        len(shed)) across the reset."""
+        for st in self._depths.values():
+            st.reset()
+        self._pre_busy.reset()
+        self.shed = []
+        for k in self.stats:
+            self.stats[k] = 0
+        if self.service is not None:
+            self.service.reset_metrics()
+
+
+def build_pipelined_runtime(
+    cfg, *, n_slices: int = 1, seed: int = 0, ec=None,
+    service: Optional[DpuService] = None, rc: Optional[RuntimeConfig] = None,
+    params=None, hedge_factor: float = 3.0,
+) -> PipelinedRuntime:
+    """Convenience mirror of build_engine/build_multislice_engine: one
+    continuous-batching engine (or a multi-slice pool) behind the pipelined
+    stages. The engine's own inline DPU pass is disabled — preprocessing
+    belongs to the service stage here."""
+    from dataclasses import replace as dc_replace
+
+    from repro.serving.engine import EngineConfig, build_engine
+    from repro.serving.multislice import build_multislice_engine
+
+    ec = EngineConfig() if ec is None else ec
+    ec = dc_replace(ec, continuous=True, preprocess="none")
+    if n_slices > 1:
+        engine: Engine = build_multislice_engine(
+            cfg, n_slices=n_slices, seed=seed, ec=ec, params=params,
+            hedge_factor=hedge_factor,
+        )
+    else:
+        engine = build_engine(cfg, seed=seed, ec=ec)
+        if params is not None:
+            engine.params = params
+    return PipelinedRuntime(engine, service, rc)

@@ -59,6 +59,42 @@ def test_dpu_real_execution_matches_cpu_reference():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+def test_process_batch_preserves_input_order():
+    """Ordering contract regression (documented on DPU.process_batch):
+    out[i] must be the preprocessed xs[i] even when mixed shapes split the
+    submission into several interleaved groups — grouping is an execution
+    detail and must never permute results."""
+    rng = np.random.default_rng(3)
+    lens = [48000, 32000, 48000, 16000, 32000, 48000, 16000]
+    xs = [rng.standard_normal(n).astype(np.float32) for n in lens]
+    dpu = DPU(DpuConfig(modality="audio", backend="cpu"))
+    got = dpu.process_batch(list(xs))
+    ref_dpu = DPU(DpuConfig(modality="audio", backend="cpu"))
+    for i, x in enumerate(xs):
+        np.testing.assert_allclose(got[i], ref_dpu.process(x),
+                                   rtol=1e-4, atol=1e-4)
+    assert dpu.processed == len(xs)
+
+
+def test_group_key_contract():
+    """group_key is THE same-shape grouping key for every batched
+    preprocessing path (DPU.process_batch and the DpuService drain loop):
+    arrays group by shape, dict payloads by per-field shapes, and the key
+    ignores values (two different same-shape signals share a group)."""
+    from repro.core.dpu.runtime import group_key
+
+    a = np.zeros(16000, np.float32)
+    b = np.ones(16000, np.float32)
+    c = np.zeros(32000, np.float32)
+    assert group_key(a) == group_key(b)
+    assert group_key(a) != group_key(c)
+    d1 = {"coeffs": np.zeros((4, 4, 8, 8)), "qtable": np.zeros((8, 8))}
+    d2 = {"qtable": np.ones((8, 8)), "coeffs": np.ones((4, 4, 8, 8))}
+    d3 = {"coeffs": np.zeros((2, 2, 8, 8)), "qtable": np.zeros((8, 8))}
+    assert group_key(d1) == group_key(d2)   # field order irrelevant
+    assert group_key(d1) != group_key(d3)
+
+
 def test_image_cu_real_execution():
     from repro.data import preprocess_cpu as pp
 

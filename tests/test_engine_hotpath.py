@@ -380,6 +380,39 @@ def test_continuous_clock_rebase_is_bit_invariant(tiny):
         np.testing.assert_array_equal(r.payload, ref)
 
 
+def test_continuous_admission_near_ring_wrap_is_bit_identical(tiny):
+    """Regression (found by the PR 4 preprocess-overlap bench): a request
+    admitted when the slot-pool clock sits at/near a multiple of the ring
+    length must decode the SAME tokens as one admitted at the initial
+    clock. Under the old shared-clock ring placement the KV layout rotated
+    with the admission clock, XLA's blocked reductions paired softmax/PV
+    summands differently once the row's window wrapped the ring boundary,
+    and an argmax occasionally flipped mid-sequence. The cache is now
+    TRUE-POSITION indexed per row (lm._attn_decode), making the layout —
+    and therefore every output bit — independent of when a request joins."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=12, max_prompt_len=32)  # pool ring 48
+
+    def run_at(clock0):
+        engine = build_engine(cfg, ec=ec)
+        engine._ensure_pool()
+        engine._clock = clock0
+        r = Request(rid=777, arrival=0.0, length=25.0, max_new_tokens=12)
+        engine._admit([r])
+        while engine._slots[0] is not None:
+            engine._decode_segment(4)
+        return np.asarray(engine.completed[0].payload), engine.params
+
+    base, params_ = run_at(32)
+    for clock0 in (47, 48, 49, 96, 200):  # straddle ring-length multiples
+        out, _ = run_at(clock0)
+        np.testing.assert_array_equal(out, base)
+    # and at this pool size the canonical layout matches isolated decode
+    ref = _isolated_ref(cfg, params_, 777, 25, 12)
+    np.testing.assert_array_equal(base, ref)
+
+
 def test_engine_config_default_not_shared(tiny):
     """Regression: engines built without an explicit EngineConfig must not
     share one default instance (mutating one engine's config leaked into
@@ -414,6 +447,93 @@ def test_engine_submit_batches_dpu_preprocess(tiny):
     for r, x in zip(reqs, xs):
         np.testing.assert_allclose(r.payload, pp.audio_pipeline(x),
                                    rtol=1e-4, atol=1e-4)
+
+
+def _isolated_ref_tokens(cfg, params, prompt, steps):
+    """Reference decode of an EXPLICIT token array (no rid-derived
+    generator): prefill + sequential lm.decode, unpadded, alone."""
+    prompt = np.asarray(prompt, np.int32)
+    n = len(prompt)
+    logits, cache = lm.prefill(params, jnp.asarray(prompt)[None], cfg,
+                               cache_len=n + steps)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [np.asarray(tok[0])]
+    for t in range(steps - 1):
+        logits, cache = lm.decode(params, cache, tok, jnp.int32(n + t), cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(np.asarray(tok[0]))
+    return np.concatenate(outs)
+
+
+def test_real_prompt_roundtrip_through_slot_pool(tiny):
+    """Real tokenized prompts end-to-end (ROADMAP open item): a request
+    carrying an explicit token array through the continuous slot pool —
+    join/leave, padding, ring clock and all — produces exactly the greedy
+    continuation of THAT array, not of the synthetic per-rid prompt."""
+    cfg, params = tiny
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=8, max_prompt_len=32)
+    engine = build_engine(cfg, ec=ec)
+    rng = np.random.default_rng(77)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (9, 23, 14)]
+    reqs = [Request(rid=900 + i, arrival=0.0, length=float(len(p)),
+                    prompt=p, max_new_tokens=5 + i)
+            for i, p in enumerate(prompts)]
+    engine.submit_many(reqs)
+    done = {r.rid: r for r in engine.run_until_idle()}
+    assert set(done) == {900, 901, 902}
+    for i, p in enumerate(prompts):
+        r = done[900 + i]
+        ref = _isolated_ref_tokens(cfg, engine.params, p, len(r.payload))
+        np.testing.assert_array_equal(r.payload, ref)
+        # and it differs from the synthetic-generator continuation (the
+        # array really was used, not just accepted)
+        syn = np.random.default_rng(r.rid).integers(0, cfg.vocab, len(p))
+        assert not np.array_equal(p, syn)
+
+
+def test_real_prompt_roundtrip_run_to_completion(tiny):
+    """Same round-trip on the run-to-completion path (batched prefill +
+    fused generate)."""
+    cfg, params = tiny
+    engine = build_engine(cfg, ec=EngineConfig(max_new_tokens=4))
+    rng = np.random.default_rng(78)
+    p = rng.integers(0, cfg.vocab, 13).astype(np.int32)
+    reqs = [Request(rid=950, arrival=0.0, length=13.0, prompt=p),
+            Request(rid=951, arrival=0.0, length=17.0)]  # synthetic neighbor
+    engine._execute(Batch(requests=reqs, bucket_id=0, formed_at=0.0))
+    done = {r.rid: r for r in engine.completed}
+    ref = _isolated_ref_tokens(cfg, engine.params, p, 4)
+    np.testing.assert_array_equal(done[950].payload, ref)
+
+
+def test_prompt_length_mismatch_rejected_at_submit(tiny):
+    """A token array that disagrees with Request.length must fail at the
+    front door — length drives bucket choice and cache sizing."""
+    cfg, params = tiny
+    engine = build_engine(cfg, ec=EngineConfig(
+        continuous=True, max_prompt_len=32))
+    bad = Request(rid=1, arrival=0.0, length=9.0,
+                  prompt=np.arange(5, dtype=np.int32))
+    with pytest.raises(ValueError, match="prompt carries"):
+        engine.submit(bad)
+    assert engine.batcher.pending() == 0
+
+
+def test_generate_requests_attaches_matching_prompts():
+    """WorkloadSpec(vocab>0) text workloads carry real token arrays whose
+    length matches max(1, int(length)) — the engine contract."""
+    from repro.serving.requests import WorkloadSpec, generate_requests
+
+    reqs = generate_requests(
+        WorkloadSpec(modality="text", rate_qps=100.0, mean_len=20,
+                     max_len=30, vocab=512, seed=3), 16)
+    assert all(r.prompt is not None for r in reqs)
+    for r in reqs:
+        assert len(r.prompt) == max(1, int(r.length))
+        assert r.prompt.dtype == np.int32
+        assert 0 <= int(r.prompt.min()) and int(r.prompt.max()) < 512
 
 
 def test_engine_payloads_unaffected_by_batch_composition(tiny):

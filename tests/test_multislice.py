@@ -8,6 +8,8 @@ engine no matter how batches are routed, a hedged batch completes exactly
 once (first slice to finish wins, the twin is cancelled mid-flight), and an
 elastic resize() mid-trace loses no requests.
 """
+import time
+
 import numpy as np
 import pytest
 
@@ -94,7 +96,13 @@ def test_hedged_batch_completes_exactly_once_twin_wins(setup):
                           hedge_factor=1.5)
     ms.fixed_expected_s = 1e-4   # deterministic straggler detection
     ms.submit_many(_fresh(2))
-    ms.step()                    # form + dispatch to one slice
+    # form + dispatch only (no _advance): since dispatch hands batches
+    # straight to slot admission via offer(), a full ms.step() could admit,
+    # decode and retire this small batch in one iteration — the stall must
+    # be injected before the slice engine ever advances
+    now = time.monotonic()
+    ms._form(now)
+    ms._dispatch(now)
     (sid,) = ms._inflight
     ms.stalled_slices.add(sid)   # that slice never advances again
     done = ms.run_until_idle()
@@ -111,11 +119,17 @@ def test_hedge_original_wins_and_twin_is_cancelled(setup):
     original (ahead by several segments) finishes first: the twin's clones
     are cancelled and nothing completes twice."""
     cfg, params, ref = setup
-    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+    # segment_len=2: budget-8 requests span 4 segments, so the batch is
+    # still in flight when the straggler check runs (dispatch now admits in
+    # the same step via offer(), so a segment_len-4 batch would finish
+    # before any elapsed time accrues). Outputs are segment-len-invariant.
+    ec = EngineConfig(max_new_tokens=8, continuous=True, max_slots=4,
+                      segment_len=2, max_prompt_len=32)
+    ms = MultiSliceEngine(cfg, params, _policy(2), ec, n_slices=2,
                           hedge_factor=0.5)
     ms.fixed_expected_s = 1e-6
-    reqs = _pick([2, 8])  # budget 8: needs several segments, so the batch
-    ms.submit_many(reqs)  # is still in flight when the straggler check runs
+    reqs = _pick([2, 8])  # budget 8: needs several segments
+    ms.submit_many(reqs)
     done = ms.run_until_idle()
     _check_done(done, ref, 2)
     assert ms.hedges >= 1
@@ -168,7 +182,9 @@ def test_fail_slice_requeues_and_recovers(setup):
     cfg, params, ref = setup
     ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2)
     ms.submit_many(_fresh(2))
-    ms.step()
+    now = time.monotonic()
+    ms._form(now)
+    ms._dispatch(now)            # dispatched, not yet advanced (see above)
     (sid,) = ms._inflight
     assert ms.fail_slice(sid) is not None    # sole holder -> requeued
     done = ms.run_until_idle()
