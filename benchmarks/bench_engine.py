@@ -33,7 +33,8 @@ Part 3 — multi-slice (PR 3): replays the same style of Poisson trace through
 `MultiSliceEngine` at several partition-menu points (fine / medium / full —
 the paper's MIG design points, logical replicas sharing the device set on a
 single-device host), one continuous-batching engine per slice behind ONE
-shared admission queue, with SliceScheduler straggler hedging live. Records
+shared admission queue with request->slot streaming dispatch and
+per-request SliceScheduler straggler hedging live. Records
 per-slice slot occupancy, useful tokens/s, p50/p99 latency, hedge counts,
 and the per-slice compile-once invariant (2 traces per slice in steady
 state). On one shared CPU device the replicas serialize, so the sweep
@@ -47,6 +48,14 @@ preprocessing wall) is compared against the stage-pipelined runtime
 (serving/runtime.py) with a decoupled DpuService overlapping preprocessing
 with decode; outputs must be bit-identical, and per-stage queue-depth /
 occupancy telemetry is recorded.
+
+Part 5 — chunked prefill + streaming (PR 5): a heavy-tailed prompt-length
+Poisson trace through the same slice pool under the old batch-granularity
+dispatch (one formed batch per slice at a time, monolithic prefill) vs
+request->slot streaming with chunked prefill (long prompts admit
+chunk-by-chunk between decode segments); the new path must win p99 AND
+useful tokens/s with outputs bit-identical to the unchunked single-slice
+engine and per-slice executables bounded by #chunk buckets + 1 segment.
 
 Measures useful tokens/s (per-request budgets only — run-to-completion's
 overshoot doesn't count), p50/p99 request latency (completed - arrival), and
@@ -335,8 +344,8 @@ def run_trace_multi(ms: MultiSliceEngine, rel, spec) -> dict:
         str(sid): {
             "admitted": stats[sid]["admitted"] - stats_before[sid]["admitted"],
             "segments": stats[sid]["segments"] - stats_before[sid]["segments"],
-            "completed_batches": stats[sid]["completed_batches"]
-            - stats_before[sid]["completed_batches"],
+            "completed_requests": stats[sid]["completed_requests"]
+            - stats_before[sid]["completed_requests"],
             "mean_slot_occupancy": stats[sid]["mean_slot_occupancy"],
             "steady_state_traces": traces_after[sid],
         }
@@ -353,7 +362,7 @@ def run_trace_multi(ms: MultiSliceEngine, rel, spec) -> dict:
         "p50_latency_ms": round(1e3 * q(0.50), 2),
         "p99_latency_ms": round(1e3 * q(0.99), 2),
         "hedges": ms.hedges - hedges_before,
-        "dispatched_batches": ms.stats["dispatched"] - dispatched_before,
+        "dispatched_requests": ms.stats["dispatched"] - dispatched_before,
         "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
         "trace_count_during_trace": sum(traces_after.values())
         - sum(traces_before.values()),
@@ -389,6 +398,166 @@ def bench_multi_slice(cfg, trace_n: int, mean_gap_s: float) -> dict:
             and all(s["steady_state_traces"] == 2
                     for s in p["per_slice"].values())
             for p in points.values()
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Part 5 — chunked prefill + request->slot streaming vs batch dispatch
+# ---------------------------------------------------------------------------
+#
+# ISSUE 5 tentpole: the old dispatcher handed each slice exactly one formed
+# batch at a time (slot occupancy collapsed between dispatches) and admitted
+# whole prompts in one prefill (a long prompt froze the resident decoders).
+# This section replays a Poisson trace with a HEAVY-TAILED prompt-length mix
+# through the same single-slice pool twice:
+#
+#   batch_dispatch — dispatch="batch": a slice takes a max_slots-sized group
+#                    only when fully idle, monolithic prefill (the old
+#                    batch-granularity regime, kept as the baseline);
+#   stream_chunked — request->slot streaming (any slice with a free slot,
+#                    least-loaded; later groups join a busy pool mid-flight)
+#                    + chunked prefill (long prompts admit chunk-by-chunk
+#                    between decode segments).
+#
+# Gates: streaming+chunked beats batch dispatch on p99 AND useful tokens/s;
+# per-request outputs are bit-identical to the unchunked single-slice
+# engine; and the steady-state executable count per slice is bounded:
+# bucket-64 prompts admit monolithically (64 == CHUNK_LEN, not chunked),
+# bucket-256 prompts run one (64, 256) chunk program, plus one segment —
+# exactly 3 programs per slice.
+
+CHUNK_TRACE_N = 32
+CHUNK_MEAN_GAP_S = 0.03
+CHUNK_MAX_PROMPT = 256
+# chunk only what hurts: bucket-64 prompts admit monolithically (a chunked
+# short admission pays extra calls for nothing), bucket-256 prompts split
+# into 4 chunks so residents keep decoding through the long prefill
+CHUNK_LEN = 64
+# ONE slice: on the single shared CI device a slice is a real device, and
+# the comparison isolates exactly the batch-granularity head-of-line the
+# refactor removes (multi-slice streaming/hedging races are covered by
+# tests and the multi_slice section, which now streams too)
+CHUNK_SLICES = 1
+# decode-heavy budgets: slot occupancy (what streaming raises: 0.32 -> 0.5+)
+# pays off in the segment calls, so the regime where batch-granularity
+# dispatch actually hurts is many decode segments per admission
+CHUNK_BUDGETS = (16, 32, 48, 64)
+CHUNK_MAX_NEW = 64
+
+
+def make_heavy_trace(n: int, mean_gap_s: float, seed: int = 31):
+    """Poisson arrivals with a heavy-tailed prompt-length mix: short
+    (33..64 -> bucket 64) with a heavy long tail (129..224 -> bucket 256)
+    whose monolithic prefill would freeze a slice's resident decoders."""
+    rng = np.random.default_rng(seed)
+    rel = np.cumsum(rng.exponential(mean_gap_s, n))
+    spec = []
+    for i in range(n):
+        ln = (int(rng.integers(129, 225)) if rng.random() < 0.4
+              else int(rng.integers(33, 65)))
+        spec.append((3000 + i, ln, int(rng.choice(CHUNK_BUDGETS))))
+    return rel, spec
+
+
+def _warmup_lengths(ms: MultiSliceEngine, lengths) -> None:
+    """Compile every executable the replay can hit on EVERY slice: one full
+    pool of requests per prompt bucket (batch mode hands each idle slice a
+    max_slots group; stream mode spreads by load), then reset metrics."""
+    rid = 960000
+    for ln in lengths:
+        reqs = [
+            Request(rid=(rid := rid + 1), arrival=0.0, length=float(ln),
+                    max_new_tokens=int(min(CHUNK_BUDGETS)))
+            for _ in range(len(ms.engines) * MAX_SLOTS)
+        ]
+        ms.submit_many(reqs)
+        ms.run_until_idle()
+    ms.reset_metrics()
+
+
+def bench_chunked_prefill(cfg, trace_n: int, mean_gap_s: float) -> dict:
+    from dataclasses import replace as dc_replace
+
+    rel, spec = make_heavy_trace(trace_n, mean_gap_s)
+    ec = EngineConfig(max_new_tokens=CHUNK_MAX_NEW, continuous=True,
+                      max_slots=MAX_SLOTS, segment_len=SEGMENT_LEN,
+                      max_prompt_len=CHUNK_MAX_PROMPT)
+
+    # bit-identity reference: the unchunked single-slice engine (untimed)
+    ref_engine = build_engine(cfg, ec=ec)
+    ref_engine.submit_many(_fresh_requests(rel, spec, 0.0))
+    ref_engine.run_until_idle()
+    ref_out = {r.rid: np.asarray(r.payload) for r in ref_engine.completed}
+
+    def run(ms: MultiSliceEngine):
+        tb = ms.trace_counts()
+        hedges_b = ms.hedges
+        makespan, reqs = _replay(ms, rel, spec)
+        done = ms.completed
+        assert len(done) == len(reqs), (len(done), len(reqs))
+        useful = sum(len(r.payload) for r in done)
+        q = _latency_quantile(done)
+        ta = ms.trace_counts()
+        res = {
+            "requests": len(done),
+            "makespan_s": round(makespan, 4),
+            "useful_tokens": useful,
+            "tokens_per_s": round(useful / makespan, 1),
+            "p50_latency_ms": round(1e3 * q(0.50), 2),
+            "p99_latency_ms": round(1e3 * q(0.99), 2),
+            "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
+            "hedges": ms.hedges - hedges_b,
+            "trace_count_during_trace": sum(ta.values()) - sum(tb.values()),
+            "per_slice_traces": {str(k): v for k, v in ta.items()},
+        }
+        return res, {r.rid: np.asarray(r.payload) for r in done}
+
+    base = build_multislice_engine(cfg, n_slices=CHUNK_SLICES,
+                                   params=ref_engine.params, ec=ec,
+                                   dispatch="batch")
+    _warmup_lengths(base, (50, 200))   # admit buckets 64 + 256
+    base_res, base_out = run(base)
+
+    ec_chunk = dc_replace(ec, chunk_lens=(CHUNK_LEN,))
+    stream = build_multislice_engine(cfg, n_slices=CHUNK_SLICES,
+                                     params=ref_engine.params, ec=ec_chunk)
+    _warmup_lengths(stream, (50, 200))  # ONE chunk program covers both
+    stream_res, stream_out = run(stream)
+
+    bit_identical = (
+        set(stream_out) == set(ref_out) == set(base_out)
+        and all(np.array_equal(stream_out[k], ref_out[k]) for k in ref_out)
+        and all(np.array_equal(base_out[k], ref_out[k]) for k in ref_out)
+    )
+    return {
+        "trace": {
+            "requests": trace_n,
+            "mean_interarrival_ms": round(1e3 * mean_gap_s, 1),
+            "budgets": list(CHUNK_BUDGETS),
+            "prompt_mix": "60% in 33..64, 40% in 129..224 (buckets 64/256)",
+            "max_prompt_len": CHUNK_MAX_PROMPT,
+            "chunk_len": CHUNK_LEN,
+            "n_slices": CHUNK_SLICES,
+            "max_slots": MAX_SLOTS,
+            "segment_len": SEGMENT_LEN,
+            # compile-once bound: one chunk program per (chunk len, prompt
+            # bucket) pair the trace hits + one segment, per slice
+            "expected_traces_per_slice": 3,
+        },
+        "batch_dispatch": base_res,
+        "stream_chunked": stream_res,
+        "tokens_per_s_speedup": round(
+            stream_res["tokens_per_s"] / base_res["tokens_per_s"], 2),
+        "p99_latency_speedup": round(
+            base_res["p99_latency_ms"] / stream_res["p99_latency_ms"], 2),
+        "bit_identical_to_unchunked": bit_identical,
+        # per slice: one monolithic admit program (bucket 64 == CHUNK_LEN,
+        # not chunked) + one (64, 256) chunk program + ONE segment = 3
+        "executables_bounded": (
+            stream_res["trace_count_during_trace"] == 0
+            and all(v == 3
+                    for v in stream_res["per_slice_traces"].values())
         ),
     }
 
@@ -619,6 +788,11 @@ def main():
         "tokens_per_s_speedup": round(speedup, 2),
         "compile_once": new["total_traces"] == 2,
         "continuous_batching": bench_continuous(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
+        # chunked runs before the bigger sections: executable accumulation
+        # late in the run inflates per-call overhead, which would skew its
+        # call-count-sensitive streaming-vs-batching comparison
+        "chunked_prefill": bench_chunked_prefill(
+            cfg, CHUNK_TRACE_N, CHUNK_MEAN_GAP_S),
         "multi_slice": bench_multi_slice(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
         "preprocess_overlap": bench_preprocess_overlap(
             cfg, TRACE_N, MEAN_INTERARRIVAL_S),
@@ -646,6 +820,14 @@ def main():
           f"(decoupled DPU vs CPU-inline), "
           f"bit_identical={po['bit_identical']}, "
           f"compile_once={po['compile_once_per_slice']}")
+    cp = result["chunked_prefill"]
+    print(f"chunked:      {cp['tokens_per_s_speedup']:.2f}x useful tokens/s, "
+          f"{cp['p99_latency_speedup']:.2f}x p99 latency "
+          f"(stream+chunked vs batch dispatch), "
+          f"occupancy {cp['batch_dispatch']['mean_slot_occupancy']:.3f} -> "
+          f"{cp['stream_chunked']['mean_slot_occupancy']:.3f}, "
+          f"bit_identical={cp['bit_identical_to_unchunked']}, "
+          f"executables_bounded={cp['executables_bounded']}")
 
 
 if __name__ == "__main__":

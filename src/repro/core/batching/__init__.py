@@ -9,10 +9,12 @@ from repro.core.batching.knee import (  # noqa: F401
 from repro.core.batching.policy import (  # noqa: F401
     BatchPolicy,
     derive_policy,
+    pick_chunk_len,
     pick_segment_len,
 )
 from repro.core.batching.buckets import BucketedBatcher, Bucket  # noqa: F401
 from repro.core.batching.scheduler import (  # noqa: F401
+    BatchSliceScheduler,
     SliceScheduler,
     SlotPlan,
     SlotScheduler,

@@ -56,6 +56,35 @@ def pick_segment_len(choices: Sequence[int], *, waiting: int, free_slots: int) -
     return cs[-1]
 
 
+def pick_chunk_len(choices: Sequence[int], *, resident: int,
+                   waiting: int = 0) -> int:
+    """Prefill chunk length for chunked admission, against the knee.
+
+    Chunk length is the prefill-side twin of pick_segment_len's dial: a
+    monolithic long-prompt prefill freezes every resident decoder for the
+    whole pass (head-of-line at the latency/throughput knee), while tiny
+    chunks pay per-chunk dispatch overhead. The rule mirrors Time_queue's
+    intent:
+
+      * resident decoders AND queued work -> shortest chunk (the pool is
+        contended; interleave decode segments as finely as possible);
+      * resident decoders only            -> middle chunk (they must keep
+        producing, but don't give up all the fusion);
+      * empty pool                        -> longest chunk (nobody stalls;
+        amortize dispatch overhead).
+
+    The engine chunks a prompt bucket only when the bucket is strictly
+    longer than the returned length (a prompt that fits one chunk admits
+    monolithically through its bucket executable)."""
+    cs = sorted(set(int(c) for c in choices))
+    assert cs and cs[0] > 0, choices
+    if resident and waiting:
+        return cs[0]
+    if resident:
+        return cs[len(cs) // 2]
+    return cs[-1]
+
+
 def derive_policy(
     profiles: Dict[int, KneeProfile],
     n_slices: int,

@@ -1,12 +1,45 @@
-"""Batch/slot dispatch policies.
+"""Request/slot dispatch policies.
 
-`SliceScheduler`: batch -> slice dispatch with failure handling and straggler
-hedging. The slice pool is the MIG analogue (core/slicing): V independent
-sub-mesh serving replicas. The scheduler keeps slices busy (least-loaded
-dispatch), evicts failed slices (their in-flight batches are re-queued), and
-hedges stragglers: if a slice exceeds `hedge_factor x` the expected execution
-time, the batch is speculatively re-dispatched to another free slice and the
-first completion wins (large-scale runnability requirement).
+`SliceScheduler`: REQUEST -> slice dispatch tracking for the multi-slice
+serving pool (the MIG analogue, core/slicing: V independent sub-mesh serving
+replicas, each a continuous-batching engine with `max_slots` KV rows).
+
+Per-request contract (the batch-granularity scheduler this replaced handed
+each slice exactly one formed batch at a time; every semantic below is now
+tracked per request id):
+
+* dispatch — the caller streams individual requests into any slice with a
+  free slot; `pick_slice` chooses the least-loaded healthy slice (by the
+  caller-supplied load map, i.e. `slots_in_use() + admission_depth()`), so
+  later admission groups join a busy slice's pool mid-flight instead of
+  queueing behind a resident batch. `dispatch(rid, sid, ...)` records a
+  *holder*: (slice, dispatched_at, expected_s).
+* hedging — PROGRESS-GATED straggler detection: the caller stamps
+  `note_progress(sid, now)` whenever a slice's engine advances, and a
+  holder is a straggler only once `hedge_factor x` its expected execution
+  time passes with NO progress on its slice (a hung/failed device). Pure
+  elapsed time cannot be the signal at request granularity: a healthy
+  slice time-shares its pool across many streamed residents, so every
+  request's wall time stretches with load and elapsed-only detection
+  hedges the whole pool (measured: it re-ran ~30% of a saturated trace).
+  `hedge(rid, ...)` records a speculative copy of THAT REQUEST on a twin
+  slice (the caller clones the Request so the two engines never race on
+  shared fields) and marks every holder hedged so the pair is never
+  re-hedged onto a third slice. First completion wins: `complete(rid,
+  sid)` records the winner exactly once and returns the losing holders'
+  slice ids for mid-flight cancellation (`ServingEngine.cancel`); a later
+  completion of the same rid is a no-op (returns None).
+* failure — evicting a slice returns the rids whose ONLY healthy holder it
+  was (the caller requeues those requests exactly once); a rid with a
+  surviving healthy holder is NOT requeued — the survivor simply carries
+  on, re-armed for hedging (hedged=False). An elastic RESIZE rebuilds the
+  whole pool (every engine is torn down, so no holder can survive): the
+  caller requeues every tracked original exactly once — they are unique
+  per rid — and discards this scheduler wholesale.
+
+The scheduler tracks ids and timing only; Request objects, slot pools, and
+execution live in serving/multislice.py. The simulator's analytic
+batch-granularity scheduler survives as `BatchSliceScheduler` below.
 
 `SlotScheduler`: continuous-batching admission planner for the slot-pool
 engine. Pulls knee-formed batches from the BucketedBatcher as they come due,
@@ -19,7 +52,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.batching.buckets import Batch, BucketedBatcher, Request, next_pow2
 from repro.core.batching.policy import BatchPolicy, pick_segment_len
@@ -137,6 +170,147 @@ class SlotScheduler:
 
 @dataclass
 class SliceState:
+    """Per-slice health + completion bookkeeping (request granularity)."""
+
+    slice_id: int
+    healthy: bool = True
+    completed: int = 0            # requests completed by this slice
+    last_progress: float = 0.0    # caller-stamped engine-advance time
+
+
+@dataclass
+class _Holder:
+    """One slice's in-flight copy of one request."""
+
+    slice_id: int
+    dispatched_at: float
+    expected_s: float
+    hedged: bool = False
+
+
+class SliceScheduler:
+    """Per-request slice dispatch tracker (contract in the module
+    docstring): holders per rid, straggler hedging with first-completion-
+    wins, and failure/resize requeue that never duplicates a request whose
+    other hedge holder is still healthy."""
+
+    def __init__(self, n_slices: int, *, hedge_factor: float = 3.0):
+        self.slices = {i: SliceState(i) for i in range(n_slices)}
+        self.hedge_factor = hedge_factor
+        self.hedges = 0
+        self._holders: Dict[int, List[_Holder]] = {}
+
+    # --- introspection -----------------------------------------------------
+    def holders(self, rid: int) -> List[int]:
+        return [h.slice_id for h in self._holders.get(rid, ())]
+
+    # --- slice lifecycle ---------------------------------------------------
+    def fail_slice(self, slice_id: int) -> List[int]:
+        """Evict a slice. Returns the rids to requeue: those whose only
+        healthy holder was the failed slice. A rid with a surviving healthy
+        holder is NOT requeued (the survivor completes alone, re-armed for
+        hedging) — requeueing it would duplicate execution and completion."""
+        self.slices[slice_id].healthy = False
+        requeue: List[int] = []
+        for rid, hs in list(self._holders.items()):
+            if not any(h.slice_id == slice_id for h in hs):
+                continue
+            rest = [h for h in hs if h.slice_id != slice_id
+                    and self.slices[h.slice_id].healthy]
+            if rest:
+                for h in rest:
+                    h.hedged = False  # single holder again: re-arm hedging
+                self._holders[rid] = rest
+            else:
+                del self._holders[rid]
+                requeue.append(rid)
+        return requeue
+
+    def recover_slice(self, slice_id: int) -> None:
+        self.slices[slice_id].healthy = True
+
+    # --- dispatch ----------------------------------------------------------
+    def pick_slice(self, load: Dict[int, int], capacity: int, *,
+                   exclude: Iterable[int] = ()) -> Optional[int]:
+        """Least-loaded healthy slice with a free slot (`load` is the
+        caller's occupancy map — slots in use plus admission backlog;
+        `capacity` the per-slice slot count). Ties break toward the slice
+        that has completed the fewest requests, then the lowest id."""
+        exclude = set(exclude)
+        cands = [
+            sid for sid, s in self.slices.items()
+            if s.healthy and sid not in exclude
+            and load.get(sid, 0) < capacity
+        ]
+        if not cands:
+            return None
+        return min(cands, key=lambda sid: (load.get(sid, 0),
+                                           self.slices[sid].completed, sid))
+
+    def dispatch(self, rid: int, slice_id: int, now: float,
+                 expected_s: float) -> None:
+        """Record `rid` streaming into a slot of `slice_id`."""
+        self._holders.setdefault(rid, []).append(
+            _Holder(slice_id, now, expected_s)
+        )
+
+    def complete(self, rid: int, slice_id: int) -> Optional[List[int]]:
+        """First completion wins: records the winner and returns the OTHER
+        holders' slice ids (losing hedge copies for the caller to cancel
+        mid-flight). Returns None when the rid is unknown — already
+        completed elsewhere, or cancelled."""
+        hs = self._holders.pop(rid, None)
+        if hs is None:
+            return None
+        st = self.slices.get(slice_id)
+        if st is not None:
+            st.completed += 1
+        return [h.slice_id for h in hs if h.slice_id != slice_id]
+
+    # --- hedging -----------------------------------------------------------
+    def note_progress(self, slice_id: int, now: float) -> None:
+        """Stamp a slice as having advanced (its engine did work at `now`);
+        holders on a progressing slice are never stragglers, however long
+        they wall-clock wait behind other streamed residents."""
+        st = self.slices.get(slice_id)
+        if st is not None and now > st.last_progress:
+            st.last_progress = now
+
+    def stragglers(self, now: float) -> List[Tuple[int, int]]:
+        """(rid, slice_id) holders whose slice has made NO progress for
+        hedge_factor x the holder's expected execution time."""
+        out = []
+        for rid, hs in self._holders.items():
+            for h in hs:
+                st = self.slices.get(h.slice_id)
+                if st is None or not st.healthy or h.hedged or h.expected_s <= 0:
+                    continue
+                ref = max(h.dispatched_at, st.last_progress)
+                if now - ref > self.hedge_factor * h.expected_s:
+                    out.append((rid, h.slice_id))
+        return out
+
+    def hedge(self, rid: int, now: float, twin_sid: int) -> None:
+        """Record a speculative copy of `rid` on `twin_sid`. Every holder of
+        the pair is marked hedged — without this, stragglers() would flag
+        the twin and re-hedge the same request onto a third slice (and so
+        on), multiplying speculative copies."""
+        hs = self._holders.get(rid)
+        if not hs:
+            return
+        for h in hs:
+            h.hedged = True
+        hs.append(_Holder(twin_sid, now, hs[0].expected_s, hedged=True))
+        self.hedges += 1
+
+
+# ---------------------------------------------------------------------------
+# Simulator's batch-granularity scheduler (analytic model)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchSliceState:
     slice_id: int
     healthy: bool = True
     busy_until: float = 0.0
@@ -147,15 +321,22 @@ class SliceState:
     completed: int = 0
 
 
-class SliceScheduler:
+class BatchSliceScheduler:
+    """Batch -> slice dispatch with failure handling and straggler hedging,
+    one in-flight batch per slice. This is the event-driven SIMULATOR's
+    analytic execution model (serving/simulator.py reproduces the paper's
+    figures with whole-batch slice latencies); the real serving path
+    streams requests per slot through the per-request `SliceScheduler`
+    above."""
+
     def __init__(self, n_slices: int, *, hedge_factor: float = 3.0):
-        self.slices = {i: SliceState(i) for i in range(n_slices)}
+        self.slices = {i: BatchSliceState(i) for i in range(n_slices)}
         self.hedge_factor = hedge_factor
         self.requeued: List[Batch] = []
         self.hedges = 0
 
     @staticmethod
-    def _reset(s: SliceState) -> None:
+    def _reset(s: BatchSliceState) -> None:
         """Clear dispatch-tracking state once a slice stops holding a batch
         (complete / cancel / fail / drop) so stragglers() and free_slices()
         never act on stale expected_s / dispatched_at / busy_until."""
@@ -165,7 +346,7 @@ class SliceScheduler:
         s.dispatched_at = 0.0
         s.busy_until = 0.0
 
-    def _holders(self, batch: Batch, *, exclude: int = -1) -> List[SliceState]:
+    def _holders(self, batch: Batch, *, exclude: int = -1) -> List[BatchSliceState]:
         """Every healthy slice currently running `batch` (hedge twins run the
         same Batch object, so identity is the dedupe key)."""
         return [
@@ -208,7 +389,7 @@ class SliceScheduler:
                 dropped.append(st.inflight)
             self._reset(st)
         for sid in range(n_slices):
-            self.slices.setdefault(sid, SliceState(sid))
+            self.slices.setdefault(sid, BatchSliceState(sid))
         requeue: List[Batch] = []
         for b in dropped:
             if any(u is b for u in requeue):

@@ -62,10 +62,10 @@ class DpuServiceConfig:
     # baseline (which loops per request and would only waste work).
     bucket_pow2: Optional[bool] = None
     # Run a group's WHOLE front-end as one jitted program
-    # (kernels/ops.audio_pipeline_batch) instead of one launch per
-    # functional unit: the worker holds the GIL only at dispatch, so decode
-    # on the event-loop thread genuinely overlaps preprocessing. None =
-    # auto: on for the Pallas audio backend.
+    # (kernels/ops.audio_pipeline_batch / image_pipeline_batch) instead of
+    # one launch per functional unit: the worker holds the GIL only at
+    # dispatch, so decode on the event-loop thread genuinely overlaps
+    # preprocessing. None = auto: on for the Pallas audio/image backends.
     fused_launch: Optional[bool] = None
 
 
@@ -122,7 +122,7 @@ class DpuService:
                         if self.cfg.bucket_pow2 is None
                         else self.cfg.bucket_pow2)
         auto_fused = (self.cfg.dpu.backend == "dpu"
-                      and self.cfg.dpu.modality == "audio")
+                      and self.cfg.dpu.modality in ("audio", "image"))
         self._fused = (auto_fused if self.cfg.fused_launch is None
                        else self.cfg.fused_launch)
         self._pending: Deque[Request] = deque()
@@ -252,7 +252,12 @@ class DpuService:
         the whole stack still makes one kernel launch) and padded outputs
         are dropped — the launch shape set stays small and compile-once.
         With fused_launch the whole front-end runs as a single jitted
-        program per group instead of one launch per functional unit."""
+        program per group instead of one launch per functional unit (audio:
+        kernels/ops.audio_pipeline_batch; image JPEG dicts:
+        kernels/ops.image_pipeline_batch — requests sharing a group carry
+        same-shape fields by group_key, and the fused path additionally
+        requires one shared qtable, falling back to the per-FU batch path
+        when the tables differ)."""
         xs = [r.payload for r in group]
         n = len(xs)
         if self._bucket:
@@ -265,9 +270,19 @@ class DpuService:
 
             from repro.kernels import ops as kops
 
-            out = np.asarray(kops.audio_pipeline_batch(jnp.stack(xs)))
-            self.dpu.processed += n
-            return [out[i] for i in range(n)]
+            if self.cfg.dpu.modality == "audio":
+                out = np.asarray(kops.audio_pipeline_batch(jnp.stack(xs)))
+                self.dpu.processed += n
+                return [out[i] for i in range(n)]
+            qt = np.asarray(xs[0]["qtable"])
+            if all(np.array_equal(np.asarray(x["qtable"]), qt) for x in xs[1:]):
+                out = np.asarray(kops.image_pipeline_batch(
+                    jnp.stack([jnp.asarray(x["coeffs"]) for x in xs]),
+                    jnp.asarray(qt),
+                ))
+                self.dpu.processed += n
+                return [out[i] for i in range(n)]
+            # mixed qtables: per-FU batched path below still shares launches
         outs = self.dpu.process_batch(xs)[:n]
         self.dpu.processed -= len(xs) - n  # padded rows are not requests
         return outs

@@ -185,6 +185,24 @@ def image_normalize_batch(imgs: jax.Array, mean: float, std: float) -> jax.Array
     return out.reshape(n, h, w)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("resize_to", "crop_to", "mean", "std"))
+def image_pipeline_batch(coeffs: jax.Array, qtable: jax.Array, *,
+                         resize_to: int = 256, crop_to: int = 224,
+                         mean: float = 127.5, std: float = 64.0) -> jax.Array:
+    """Whole JPEG front-end — dequantize+IDCT decode -> resize -> center
+    crop -> normalize — for a same-shape coefficient stack [N, H/8, W/8, 8,
+    8] with one shared qtable, as ONE jitted program (the DPU service's
+    fused CU launch, mirroring audio_pipeline_batch): a single XLA call per
+    request group instead of one launch per functional unit, so the service
+    worker holds the GIL only at dispatch and decode on the event-loop
+    thread genuinely overlaps preprocessing."""
+    imgs = jpeg_decode_batch(coeffs, qtable)
+    imgs = image_resize_batch(imgs, resize_to, resize_to)
+    imgs = center_crop_batch(imgs, crop_to, crop_to)
+    return image_normalize_batch(imgs, mean, std)
+
+
 # --- serving -----------------------------------------------------------------
 
 

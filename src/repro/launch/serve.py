@@ -45,6 +45,13 @@ def main():
                     help="slot-pool continuous batching (in-flight join/leave)")
     ap.add_argument("--max-slots", type=int, default=8)
     ap.add_argument("--segment-len", type=int, default=8)
+    ap.add_argument("--chunk-lens", default="",
+                    help="comma-separated chunked-prefill lengths (pow2, "
+                         "e.g. '32' or '16,64'): prompt buckets longer than "
+                         "the policy-chosen chunk admit chunk-by-chunk, "
+                         "interleaved with decode segments, so long prompts "
+                         "never stall resident decoders (attention+MLP "
+                         "models; empty = monolithic admission)")
     ap.add_argument("--slices", type=int, default=1,
                     help="number of MIG-analogue slices, each its own "
                          "continuous-batching engine behind one shared "
@@ -72,11 +79,21 @@ def main():
     from repro.serving.requests import WorkloadSpec, generate_requests
 
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    chunk_lens = tuple(
+        int(c) for c in args.chunk_lens.split(",") if c.strip()
+    )
+    for c in chunk_lens:
+        # fail at parse time, not mid-serve: the engine asserts pow2
+        # divisibility against pow2 prompt buckets at admission
+        if c <= 0 or c & (c - 1):
+            ap.error(f"--chunk-lens entries must be positive powers of two "
+                     f"(got {c})")
     ec = EngineConfig(
         max_new_tokens=args.max_new, continuous=args.continuous,
         max_slots=args.max_slots, segment_len=args.segment_len,
         max_prompt_len=128,  # covers the workload's max_len=120 prompt bucket
         preprocess=args.preprocess if not args.pipelined else "none",
+        chunk_lens=chunk_lens,
     )
     reqs = generate_requests(
         WorkloadSpec(modality="text", rate_qps=args.rate, mean_len=48,
@@ -146,7 +163,8 @@ def main():
             f"served {len(done)} requests on {engine.pod.spec.name} "
             f"({'replicated' if engine.replicated else 'partitioned'}, "
             f"{engine.pod.stranded_chips} chips stranded); "
-            f"{engine.stats['dispatched']} batches, {engine.hedges} hedges; "
+            f"{engine.stats['dispatched']} dispatched requests, "
+            f"{engine.hedges} hedges; "
             f"exec p50={1e3*np.percentile(lats,50):.1f}ms "
             f"p95={1e3*np.percentile(lats,95):.1f}ms"
         )

@@ -428,6 +428,193 @@ def prefill_into_slots(params, tokens, pool_cache, slot_ids, clock,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (continuous batching without long-prompt head-of-line)
+#
+# A monolithic prefill_into_slots freezes every resident decoder for the
+# whole prompt pass. The chunked variant splits a prompt bucket's KV
+# construction into fixed-length column chunks: each chunk runs the model
+# over C padded prompt positions, writes their K/V at TRUE-POSITION ring
+# slots of the pool (the same layout contract as _attn_decode /
+# scatter_into_slots, so slot t of a live row is always its own token at
+# true position t), and attends the chunk's queries over the updated ring.
+# The engine interleaves one decode segment between chunks, so resident
+# rows keep producing tokens while a long prompt admits. The chunk program
+# reads and writes only the ring PREFIX [0, lp) (lp = the padded prompt
+# bucket, a static shape): chunk attention costs what the bucket's
+# monolithic prefill costs — NOT a full-ring scan per chunk — so the
+# executable set is one per (chunk length, prompt bucket), the compile-once
+# bound the engine reports as #chunk buckets + 1 segment. Outputs stay
+# bit-identical to monolithic admission (the valid key set for a query at
+# true position t is the same true positions 0..t in the same axis order;
+# masked slots carry exactly-zero probabilities).
+# ---------------------------------------------------------------------------
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill is implemented for pure attention+MLP decoder stacks.
+
+    Excluded (engines fall back to monolithic admission): SSM/hybrid mixers
+    (ssm_block has no chunk-resume path for the sequential conv/state),
+    MoE ffns (expert capacity is computed over the WHOLE prefill token
+    count, so chunking changes which tokens drop and therefore the
+    outputs), sliding-window attention (a ring smaller than the prompt
+    cannot hold the chunk history), and enc-dec / image-prefix models
+    (non-token context precedes the prompt)."""
+    return (
+        cfg.enc_layers == 0
+        and cfg.sliding_window == 0
+        and cfg.n_img_tokens == 0
+        and all(m == "attn" and f == "mlp" for m, f in cfg.layer_kinds())
+    )
+
+
+def _attn_chunk(x, p, cfg, cache, qpos, valid, off, lp: int):
+    """Multi-token cache-extending attention for one prefill chunk.
+
+    x: [B, C, D] chunk hidden states; cache: {'k','v'} slot-pool rows
+    [B, wc, ...]; qpos: [B, C] TRUE positions (negative = left-pad or a row
+    not part of this admission); valid = qpos >= 0; off: [B] left-pad
+    amounts; lp: the padded prompt bucket (static). All prompt positions
+    live in the ring PREFIX [0, lp) (ring slot == true position; no wrap:
+    the ring holds the whole bucket by pool sizing), so only that prefix is
+    read, written, and attended — chunk attention costs what the bucket's
+    monolithic prefill costs, not a full-ring scan.
+
+    Bit-identity detail: the attention READ presents keys in monolithic
+    prefill's PADDED-AXIS layout — each row's true-position prefix gathered
+    back to axis col = true position + off (the exact inverse of the shift
+    _attn_forward applies when emitting the cache), with kpos = col - off.
+    Valid keys, causally-masked future keys, and left-pad masking then
+    occupy the SAME axis columns as in `prefill`, so XLA's reduction
+    pairing over the key axis matches bit for bit. Presenting the prefix
+    directly (valid-then-masked instead of pad-then-valid) flips zero
+    PLACEMENT in the contraction, and at lp=256 that re-pairs softmax/PV
+    summands and occasionally flips a downstream argmax (found by the PR 5
+    chunked-prefill bench's bit-identity gate). Masked columns carry
+    whatever the gather clamps to — like prefill's pad-col keys they are
+    exact-zero probabilities, never read."""
+    dt = x.dtype
+    B, C, _ = x.shape
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
+    k1 = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
+    v1 = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
+    q = _rope4(q, qpos, cfg.rope_theta)
+    k1 = L.apply_rope(k1, qpos, cfg.rope_theta)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    slot = jnp.where(valid, qpos, lp)  # invalid -> out of range -> dropped
+    ckp = jax.lax.slice_in_dim(cache["k"], 0, lp, axis=1)
+    cvp = jax.lax.slice_in_dim(cache["v"], 0, lp, axis=1)
+    ckp = ckp.at[rows, slot].set(k1.astype(ckp.dtype), mode="drop")
+    cvp = cvp.at[rows, slot].set(v1.astype(cvp.dtype), mode="drop")
+    # padded-axis view: axis col j holds true position j - off (row-wise)
+    lp_idx = jnp.arange(lp, dtype=jnp.int32)
+    gi = lp_idx[None, :] - off[:, None].astype(jnp.int32)       # [B, lp]
+    kpos = jnp.where((gi >= 0) & (gi <= qpos[:, -1:]), gi, -1)
+    gidx = jnp.maximum(gi, 0)
+
+    def _unshift(a):
+        return jnp.take_along_axis(
+            a, jnp.broadcast_to(gidx[..., None, None], a.shape[:1] + (lp,) + a.shape[2:]),
+            axis=1,
+        )
+
+    kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
+    o = L.attention_dense(
+        q.reshape(B, C, kh * g, hd), _unshift(ckp), _unshift(cvp), qpos, kpos,
+        causal=True, window=0
+    )
+    out = jnp.einsum("bskgh,kghd->bsd", o.reshape(B, C, kh, g, hd),
+                     p["wo"].astype(dt))
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                             ckp.astype(cache["k"].dtype), 0, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                             cvp.astype(cache["v"].dtype), 0, 1)
+    return out, {"k": ck, "v": cv}
+
+
+def prefill_chunk_into_slots(params, tokens, pool_cache, start,
+                             cfg: ModelConfig, *, pos_offset, lp: int):
+    """Run ONE chunk of a left-padded prompt bucket and extend the slot
+    pool's KV in place (see the chunked-prefill module comment above).
+
+    tokens: [max_slots, C] — row b IS pool row b (the engine lays each
+    admitted request's padded prompt on its slot's row); row b's columns
+    are padded prompt positions start[b] .. start[b]+C-1. `start` is PER
+    ROW ([max_slots] int32, traced), so one call advances EVERY in-flight
+    chunked admission of this (C, lp) class at once, each group at its own
+    chunk position — trickled single-request admissions share the pinned
+    program width instead of each paying a full-width call per chunk. lp:
+    the class's padded prompt bucket, a STATIC shape (the executable key
+    is (C, lp); only the ring prefix [0, lp) is read or written).
+    pos_offset: [max_slots] left-pad amounts; rows NOT part of any
+    admission in this class (live decoders, free slots, other buckets'
+    admissions) carry the sentinel offset lp with start 0 (> start + C - 1
+    for every chunk), which makes every column's true position negative:
+    embeddings zeroed, K/V writes dropped, attention fully masked — the
+    chunk program cannot perturb them.
+
+    Returns (greedy next token [B, 1] int32 from the LAST column's logits —
+    meaningful only for rows on their bucket's final chunk, where column
+    lp-1 is the row's last true prompt position — and the new pool)."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(
+            f"chunked prefill unsupported for {cfg.name} "
+            "(see lm.supports_chunked_prefill)"
+        )
+    dt = _cdt(cfg)
+    C = tokens.shape[1]
+    off = pos_offset.astype(jnp.int32)
+    qpos = (jnp.asarray(start, jnp.int32)[:, None]
+            + jnp.arange(C, dtype=jnp.int32)[None, :]) - off[:, None]
+    valid = qpos >= 0
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * valid[..., None].astype(dt)
+    pre_kinds, body_kinds = _kinds_for(cfg)
+
+    def sub_step(x, sub, csub):
+        h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
+        o, nc = _attn_chunk(h, sub["mixer"], cfg, csub["mixer"], qpos, valid,
+                            off, lp)
+        x = x + o
+        x, _ = _ffn_forward(x, sub, cfg, ("attn", "mlp"))
+        return x, {"mixer": nc}
+
+    new_cache: Dict[str, Any] = {}
+    if pre_kinds:
+        new_prefix = {}
+        for i in range(len(pre_kinds)):
+            x, nc = sub_step(x, params["prefix"][f"l{i}"],
+                             pool_cache["prefix"][f"l{i}"])
+            new_prefix[f"l{i}"] = nc
+        new_cache["prefix"] = new_prefix
+
+    nb = jax.tree.leaves(params["body"])[0].shape[0]
+
+    def block_fn(carry, xs):
+        x, cbody = carry
+        bp, i = xs
+        cb = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False), cbody
+        )
+        ncb = {}
+        for li in range(len(body_kinds)):
+            x, nc = sub_step(x, bp[f"l{li}"], cb[f"l{li}"])
+            ncb[f"l{li}"] = nc
+        cbody = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n, i, 0), cbody, ncb
+        )
+        return (x, cbody), None
+
+    (x, new_body), _ = jax.lax.scan(
+        block_fn, (x, pool_cache["body"]), (params["body"], jnp.arange(nb))
+    )
+    new_cache["body"] = new_body
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)
+    return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+
+# ---------------------------------------------------------------------------
 # Forward pieces
 # ---------------------------------------------------------------------------
 

@@ -27,6 +27,25 @@ Two decode regimes share that prefill discipline:
   tests/test_engine_hotpath.py). Steady-state serving traces exactly two
   programs: one prefill bucket + one segment.
 
+* chunked prefill (`chunk_lens` non-empty, model permitting —
+  `lm.supports_chunked_prefill`): a prompt bucket longer than the policy-
+  chosen chunk length admits across MULTIPLE engine steps, one
+  `lm.prefill_chunk_into_slots` call per step interleaved with the decode
+  segments, so a huge prompt never freezes resident decoders (the last
+  head-of-line source). Mid-prefill rows hold their slots but are not
+  `live`: segments skip their token production, and their `pos_offset` is
+  refreshed to `clock - filled` before every segment so the segment's
+  (ignored) write for such a row always lands at ring slot >= the filled
+  prefix — stale garbage sits only above the row's current position, where
+  the same causal masking that covers unwritten decode slots hides it, and
+  later chunks / decode steps overwrite it before it can ever be read.
+  Outputs are bit-identical to monolithic admission (the chunk program
+  writes the same TRUE-POSITION cache layout), each chunk program touches
+  only the ring prefix [0, prompt bucket) — so a chunk costs its share of
+  the bucket's monolithic prefill, not a full-ring scan — and the
+  executable set is one per (chunk length, prompt bucket): steady-state
+  executables = #chunk buckets + 1 segment.
+
 Composes the DPU/CPU preprocess runtime (same-shape pending requests are
 preprocessed through one batched CU launch at submit), the BucketedBatcher
 (knee-driven batch formation), and the SlotScheduler (admission order +
@@ -49,7 +68,7 @@ from repro.configs.base import ModelConfig
 from repro.core.batching.buckets import (
     Batch, BucketedBatcher, Request, next_pow2,
 )
-from repro.core.batching.policy import BatchPolicy
+from repro.core.batching.policy import BatchPolicy, pick_chunk_len
 from repro.core.batching.scheduler import SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
 from repro.models import api, lm
@@ -71,6 +90,12 @@ class EngineConfig:
     max_prompt_len: int = 64       # largest padded prompt bucket the pool accepts
     pool_cache_len: int = 0        # 0 -> max_prompt_len + max_new_tokens + max segment
     eos_id: Optional[int] = None   # retire a row early when it emits this token
+    # --- chunked prefill (long-prompt admission split across steps) ---
+    # candidate chunk lengths (pow2); () disables chunking. The policy picks
+    # one per admission (policy.pick_chunk_len); buckets longer than the
+    # pick admit chunk-by-chunk, interleaved with decode segments. Silently
+    # inert for model families lm.supports_chunked_prefill rejects.
+    chunk_lens: Tuple[int, ...] = ()
 
 
 _next_pow2 = next_pow2  # shared shape-bucket formula (buckets.next_pow2)
@@ -129,11 +154,34 @@ def enqueue_requests(reqs: List[Request], *, ec: EngineConfig,
 
 @dataclass
 class _Slot:
-    """Host-side state of one occupied pool row."""
+    """Host-side state of one occupied pool row.
+
+    `live=False` marks a mid-prefill row (chunked admission in progress):
+    it holds its slot but produces no tokens and never retires; `filled`
+    is its TRUE-position prefix length written so far (the garbage-write
+    floor for interleaved decode segments)."""
 
     req: Request
     budget: int
     produced: List[int]
+    live: bool = True
+    filled: int = 0
+
+
+@dataclass
+class _ChunkAdmission:
+    """One in-flight chunked admission group: a bucket-pure left-padded
+    prompt block being written into the pool chunk-by-chunk. `toks`/`off`
+    are laid out on POOL ROWS (row s is slot s; non-member rows carry the
+    sentinel offset lp, which the chunk program fully masks)."""
+
+    reqs: List[Request]
+    slots: List[int]
+    toks: np.ndarray         # [max_slots, lp] left-padded prompt tokens
+    off: np.ndarray          # [max_slots] left-pad; lp sentinel = not ours
+    lp: int
+    chunk: int
+    pos: int = 0             # next padded column to process
 
 
 class ServingEngine:
@@ -218,6 +266,16 @@ class ServingEngine:
             self._clock = ec.max_prompt_len
             # lp -> jitted prefill+admit executable
             self._admit_cache: Dict[int, Any] = {}
+            # --- chunked prefill ---
+            # chunk lengths the policy may pick; empty when disabled or the
+            # model family has no chunk path (monolithic admission fallback)
+            self._chunk_lens: Tuple[int, ...] = (
+                tuple(sorted(set(int(c) for c in ec.chunk_lens)))
+                if ec.chunk_lens and lm.supports_chunked_prefill(cfg) else ()
+            )
+            self._chunk_q: List[_ChunkAdmission] = []
+            # (chunk len, prompt bucket) -> chunk executable
+            self._chunk_cache: Dict[Tuple[int, int], Any] = {}
 
             def _segment(p, cache, tok, clock, off, steps):
                 self.stats["segment_traces"] += 1  # trace-time only
@@ -278,6 +336,21 @@ class ServingEngine:
             bucket.queue = deque(kept)
         if self.ec.continuous:
             n += self.slot_scheduler.cancel(rids)
+            # mid-chunk cancellation: drop the row from its in-flight chunked
+            # admission (masking it via the sentinel offset so later chunk
+            # calls cannot touch its slot); the slot loop below frees and
+            # counts it like any occupied row
+            for adm in list(self._chunk_q):
+                keep_r, keep_s = [], []
+                for r, s in zip(adm.reqs, adm.slots):
+                    if r.rid in rids:
+                        adm.off[s] = adm.lp
+                    else:
+                        keep_r.append(r)
+                        keep_s.append(s)
+                adm.reqs, adm.slots = keep_r, keep_s
+                if not adm.reqs:
+                    self._chunk_q.remove(adm)
             for s, st in enumerate(self._slots):
                 if st is not None and st.req.rid in rids:
                     self._slots[s] = None
@@ -312,14 +385,28 @@ class ServingEngine:
         )
         progressed = False
         for group in plan.admissions:
-            self._admit(group)
+            lp = max(self.ec.min_prompt_len,
+                     _next_pow2(max(max(1, int(r.length)) for r in group)))
+            c = self._pick_chunk(lp)
+            if c:
+                self._begin_chunked(group, lp, c)
+            else:
+                self._admit(group)
             progressed = True
-        if any(s is not None for s in self._slots):
+        # advance every in-flight chunked admission by ONE chunk, so chunk
+        # work and the decode segment below interleave step by step and a
+        # long prompt never freezes resident decoders
+        progressed |= self._advance_chunks()
+        if any(st is not None and st.live for st in self._slots):
             self._decode_segment(plan.segment_len)
             progressed = True
-        elif not self.slot_scheduler.backlog() and not self.batcher.pending():
+        elif all(st is None for st in self._slots) \
+                and not self.slot_scheduler.backlog() \
+                and not self.batcher.pending():
             # pool drained: rewind the clock so int32 positions stay small
-            # (placement is clock-independent; this is pure hygiene)
+            # (placement is clock-independent; this is pure hygiene).
+            # Mid-prefill-only pools skip the segment entirely — it would
+            # decode nothing but masked garbage rows.
             self._clock = self.ec.max_prompt_len
             self._pool_off[:] = 0
         return progressed
@@ -502,8 +589,138 @@ class ServingEngine:
         self.stats["admitted"] += len(reqs)
         self._retire_finished(now)  # budget-1 / instant-EOS requests
 
+    # --- chunked prefill ----------------------------------------------------
+    def _pick_chunk(self, lp: int) -> int:
+        """Chunk length for a prompt bucket of padded length lp; 0 means
+        monolithic admission (chunking disabled, unsupported family, or the
+        bucket fits in one policy-chosen chunk)."""
+        if not self._chunk_lens:
+            return 0
+        resident = sum(1 for s in self._slots if s is not None)
+        waiting = self.slot_scheduler.backlog() + self.batcher.pending()
+        c = pick_chunk_len(self._chunk_lens, resident=resident,
+                           waiting=waiting)
+        return c if c < lp else 0
+
+    def _begin_chunked(self, reqs: List[Request], lp: int, chunk: int) -> None:
+        """Reserve slots for a chunked admission group and queue its prompt
+        block; chunks run one per engine step (_advance_chunks), interleaved
+        with decode segments."""
+        self._ensure_pool()
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        assert len(reqs) <= len(free), (len(reqs), len(free))
+        assert lp % chunk == 0, (lp, chunk)  # both pow2, chunk < lp
+        assert self._clock >= lp  # clock starts at max_prompt_len, only grows
+        bp = self.ec.max_slots
+        toks = np.zeros((bp, lp), np.int32)
+        off = np.full(bp, lp, np.int32)  # sentinel: rows not ours stay masked
+        slots = free[: len(reqs)]
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            n = max(1, int(r.length))
+            s = slots[i]
+            toks[s, lp - n:] = self._prompt_tokens(r, n)
+            off[s] = lp - n
+            self._slots[s] = _Slot(req=r, budget=self._budget(r), produced=[],
+                                   live=False, filled=0)
+            self._pool_off[s] = self._clock  # filled=0; refreshed per segment
+            r.dispatched_at = now
+        self._chunk_q.append(_ChunkAdmission(
+            reqs=list(reqs), slots=slots, toks=toks, off=off, lp=lp,
+            chunk=chunk,
+        ))
+
+    def _advance_chunks(self) -> bool:
+        """Advance every in-flight chunked admission by ONE chunk, merging
+        admissions of the same (chunk len, prompt bucket) class into a
+        single program call (per-row start positions): trickled
+        single-request admissions share the pinned program width instead of
+        each paying a full-width call per chunk."""
+        if not self._chunk_q:
+            return False
+        classes: Dict[Tuple[int, int], List[_ChunkAdmission]] = {}
+        for adm in self._chunk_q:
+            classes.setdefault((adm.chunk, adm.lp), []).append(adm)
+        for (c, lp), adms in classes.items():
+            self._chunk_step(c, lp, adms)
+        self._chunk_q = [a for a in self._chunk_q if a.pos < a.lp]
+        return True
+
+    def _get_chunk(self, c: int, lp: int):
+        """Jitted chunk executable, one per (chunk length, prompt bucket):
+        the program touches only the ring prefix [0, lp), so each chunk
+        costs what its share of the bucket's monolithic prefill would — the
+        compile-once bound is #chunk buckets + 1 segment."""
+        key = (c, lp)
+        fn = self._chunk_cache.get(key)
+        if fn is not None:
+            self.stats["prefill_cache_hits"] += 1
+            return fn
+
+        def _chunk(p, toks, off, pool, start, _lp=lp):
+            self.stats["prefill_traces"] += 1  # trace-time only
+            return lm.prefill_chunk_into_slots(
+                p, toks, pool, start, self.cfg, pos_offset=off, lp=_lp
+            )
+
+        fn = jax.jit(_chunk, donate_argnums=(3,))
+        self._chunk_cache[key] = fn
+        self.stats["prefill_compiles"] += 1
+        return fn
+
+    def _chunk_step(self, c: int, lp: int,
+                    adms: List[_ChunkAdmission]) -> None:
+        """Run one chunk for every admission of a (chunk, bucket) class in
+        ONE program call (per-row start); admissions reaching their final
+        chunk flip their rows live (decode starts at the next segment)."""
+        t0 = time.monotonic()
+        bp = self.ec.max_slots
+        toks = np.zeros((bp, c), np.int32)
+        off = np.full(bp, lp, np.int32)   # sentinel: rows not ours, masked
+        start = np.zeros(bp, np.int32)
+        for adm in adms:
+            for s in adm.slots:
+                toks[s] = adm.toks[s, adm.pos:adm.pos + c]
+                off[s] = adm.off[s]
+                start[s] = adm.pos
+        tok0, self._pool = self._get_chunk(c, lp)(
+            self.params, jnp.asarray(toks), jnp.asarray(off), self._pool,
+            jnp.asarray(start),
+        )
+        self.batch_exec_s.append(time.monotonic() - t0)
+        finished: List[_ChunkAdmission] = []
+        for adm in adms:
+            adm.pos += c
+            for s in adm.slots:
+                self._slots[s].filled = max(0, adm.pos - int(adm.off[s]))
+            if adm.pos >= adm.lp:
+                finished.append(adm)
+        if not finished:
+            return
+        # final chunk: column lp-1 is every row's last true prompt position,
+        # so its greedy tokens seed decode exactly like prefill_into_slots
+        tok0 = np.asarray(tok0)
+        now = time.monotonic()
+        for adm in finished:
+            for s in adm.slots:
+                st = self._slots[s]
+                n = adm.lp - int(adm.off[s])
+                self._pool_off[s] = self._clock - n
+                self._tok[s] = tok0[s]
+                st.produced = [int(tok0[s, 0])]
+                st.live = True
+            self.stats["admitted"] += len(adm.reqs)
+        self._retire_finished(now)
+
     def _decode_segment(self, steps: int) -> None:
         """One fused segment over the whole pool; finished rows retire after."""
+        # mid-prefill rows: pin the (ignored) segment write to ring slot
+        # `filled` — at or above the written prefix, below the pool ring —
+        # so interleaved garbage can never land on real prompt KV and stays
+        # behind the causal mask until a later chunk/decode overwrites it
+        for s, st in enumerate(self._slots):
+            if st is not None and not st.live:
+                self._pool_off[s] = self._clock - st.filled
         t0 = time.monotonic()
         toks, self._pool = self._segment_jit(
             self.params, self._pool, jnp.asarray(self._tok),
@@ -520,8 +737,8 @@ class ServingEngine:
         n_active = self.ec.max_slots - self._free_slots()
         self.slot_occupancy.append(n_active / self.ec.max_slots)
         for s, st in enumerate(self._slots):
-            if st is None:
-                continue
+            if st is None or not st.live:
+                continue  # mid-prefill rows produce nothing yet
             take = min(steps, st.budget - len(st.produced))
             if take > 0:
                 st.produced.extend(int(t) for t in toks[s, :take])
@@ -545,7 +762,7 @@ class ServingEngine:
     def _retire_finished(self, now: float) -> None:
         eos = self.ec.eos_id
         for s, st in enumerate(self._slots):
-            if st is None:
+            if st is None or not st.live:
                 continue
             done = len(st.produced) >= st.budget or (
                 eos is not None and eos in st.produced

@@ -2,8 +2,7 @@
 
 PREBA's core claim is that a MIG GPU reconfigured into many small slices,
 each running its own inference replica behind a shared dynamic batcher,
-beats one monolithic GPU. This module composes the three pieces that so far
-only met in the simulator:
+beats one monolithic GPU. This module composes:
 
   core/slicing/mig.partition_pod   -> V disjoint sub-meshes (PodSlice)
   serving/engine.ServingEngine     -> one compile-once, continuous-batching
@@ -13,39 +12,48 @@ only met in the simulator:
                                       host has enough devices; replicated
                                       single-device engines otherwise — the
                                       CPU-CI fallback)
-  core/batching SliceScheduler     -> batch -> slice dispatch with straggler
-                                      hedging and failure/resize requeue,
-                                      now driving REAL batches
+  core/batching SliceScheduler     -> REQUEST -> slice dispatch tracking
+                                      with per-request straggler hedging
+                                      and failure/resize requeue
 
-Admission is ONE shared queue: `submit_many` runs one batched
-`DPU.process_batch` preprocessing pass, the shared `BucketedBatcher` forms
-knee-driven batches, and the shared `SlotScheduler` keeps an EDF backlog and
-releases bucket-pure admission groups sized to the free slices' slot
-capacity. Groups are chunked to `max_slots`, wrapped as `Batch`es, and
-dispatched to free slices (least-loaded). Each global `step()` advances
-every busy slice engine by one admit -> decode-segment -> retire iteration,
-so a dispatched batch is genuinely in flight across steps:
+Admission is ONE shared queue — and dispatch is REQUEST -> SLOT streaming:
+`submit_many` runs one batched `DPU.process_batch` preprocessing pass, the
+shared `BucketedBatcher` forms knee-driven batches, the shared
+`SlotScheduler` keeps an EDF backlog, and each `step()` streams individual
+due requests into whichever slice has free slot capacity (least-loaded by
+`slots_in_use() + admission_depth()`). A slice is never reserved for one
+formed batch: later admission groups join a busy slice's pool mid-flight,
+so slot occupancy does not collapse between dispatches (the
+batch-granularity head-of-line the old dispatcher had). The old behaviour
+survives as `dispatch="batch"` — a slice only receives work when fully
+idle — as the benchmark baseline.
 
-* straggler hedging — a slice past `hedge_factor x` the expected batch time
-  gets its batch re-dispatched (cloned requests) to a free slice; the first
-  slice whose engine retires every request wins, the twin's copies are
-  cancelled mid-flight (`ServingEngine.cancel`), and per-request results are
-  recorded exactly once (outputs are bit-identical either way: prompts are
-  deterministic per rid and decode is greedy).
-* `fail_slice` — evicts a slice; its batch is requeued unless a hedge twin
-  is still running it (the surviving copy completes alone).
+Per-request semantics (contract in core/batching/scheduler.py):
+
+* straggler hedging — a REQUEST past `hedge_factor x` its expected
+  execution time on a slice is cloned (`dataclasses.replace`, so the two
+  engines never race on shared Request fields) onto another slice with a
+  free slot; the first copy to complete wins, the loser is cancelled
+  mid-flight (`ServingEngine.cancel`), and results are recorded exactly
+  once per rid. Outputs are bit-identical either way: prompts are
+  deterministic per rid and decode is greedy.
+* `fail_slice` — evicts a slice; each of its in-flight requests is
+  requeued into the shared admission backlog UNLESS a hedge twin still
+  runs it elsewhere (the surviving copy completes alone).
 * `resize` — elastic MIG reconfiguration mid-trace: cancel in-flight work,
   re-partition the pod to a different menu entry, rebuild the per-slice
-  engines, and requeue every in-flight batch exactly once (hedge twins
-  deduped). Completed requests are unaffected; re-run requests produce the
-  same tokens (deterministic), so a resize loses nothing.
+  engines, and requeue every in-flight request exactly once (hedge pairs
+  deduped by rid). Completed requests are unaffected; re-run requests
+  produce the same tokens (deterministic), so a resize loses nothing.
 
-One slice runs one dispatched batch at a time (the SliceScheduler
-invariant hedging needs); continuous batching still pays off *within* a
-batch — heterogeneous-budget rows retire early and free their slots. On a
-single shared device (CPU CI) the replicas serialize, so the sweep measures
-scheduling behaviour, not slice parallelism; on a real pod each engine owns
-a disjoint sub-mesh.
+Chunked prefill composes transparently: per-slice engines inherit
+`EngineConfig.chunk_lens`, so a long prompt streamed into a busy slice
+admits chunk-by-chunk between that slice's decode segments — neither the
+resident rows nor the other slices ever wait out a monolithic prefill.
+
+On a single shared device (CPU CI) the replicas serialize, so sweeps
+measure scheduling behaviour, not slice parallelism; on a real pod each
+engine owns a disjoint sub-mesh.
 """
 from __future__ import annotations
 
@@ -57,7 +65,7 @@ from typing import Any, Dict, List, Optional, Sequence, Set
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.batching.buckets import Batch, BucketedBatcher, Request
+from repro.core.batching.buckets import BucketedBatcher, Request, next_pow2
 from repro.core.batching.policy import BatchPolicy
 from repro.core.batching.scheduler import SliceScheduler, SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
@@ -93,38 +101,46 @@ def _slice_pod(devices: Sequence, n_slices: int):
 
 
 @dataclass
-class _Dispatch:
-    """One slice's copy of an in-flight batch. `batch.requests` are always
-    the ORIGINAL request objects; a hedge twin executes clones (`reqs`) so
-    the two engines never race on the same Request fields."""
+class _ReqTrack:
+    """One in-flight request's copies. `req` is always the ORIGINAL request
+    object; a hedge twin executes a clone (`copies[twin_sid]`) so the two
+    engines never race on the same Request fields."""
 
-    batch: Batch
-    reqs: List[Request]
-    primary: bool
+    req: Request
+    primary_sid: int
+    copies: Dict[int, Request]
 
 
 class MultiSliceEngine:
-    """V per-slice continuous-batching engines behind one admission queue,
-    scheduled by `SliceScheduler` (hedging, failure, elastic resize)."""
+    """V per-slice continuous-batching engines behind one admission queue;
+    individual requests stream into any slice with free slot capacity
+    (per-request hedging / failure / elastic resize via `SliceScheduler`)."""
 
     def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
                  ec: Optional[EngineConfig] = None, *, n_slices: int,
                  devices: Optional[Sequence] = None,
-                 hedge_factor: float = 3.0):
+                 hedge_factor: float = 3.0, dispatch: str = "stream"):
         import jax
 
+        from repro.models import lm
+
+        if dispatch not in ("stream", "batch"):
+            raise ValueError(f"unknown dispatch mode {dispatch!r}")
         ec = EngineConfig() if ec is None else ec
         self.cfg = cfg
+        # whether the per-slice engines will actually chunk (they apply the
+        # same family gate); the hedging time budget must match reality
+        self._chunked = bool(ec.chunk_lens) and lm.supports_chunked_prefill(cfg)
         self.params = params
         self.policy = policy
         self.ec = ec
         self.hedge_factor = hedge_factor
+        self.dispatch_mode = dispatch
         self._devices = list(jax.devices() if devices is None else devices)
         self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
         self.batcher = BucketedBatcher(policy)
         self.completed: List[Request] = []
         self._done_rids: Set[int] = set()
-        self._pending: List[Batch] = []
         self.stats: Dict[str, int] = {
             "dispatched": 0, "hedge_wins": 0, "cancelled": 0,
             "requeued": 0, "resizes": 0, "dpu_batches": 0,
@@ -134,10 +150,11 @@ class MultiSliceEngine:
         self._exec_seen: Dict[int, int] = {}
         # --- test/chaos injection knobs ---
         # slices listed here skip their engine step (a hung device): the
-        # straggler detector must hedge their work onto a healthy twin
+        # straggler detector must hedge their requests onto a healthy twin
         self.stalled_slices: Set[int] = set()
-        # override the per-batch expected execution time used for straggler
-        # detection (None = (segments+1) * EMA of measured segment times)
+        # override the per-request expected execution time used for straggler
+        # detection (None = analytic chunk/segment count * EMA of measured
+        # execution times)
         self.fixed_expected_s: Optional[float] = None
         self._build(n_slices)
 
@@ -154,13 +171,14 @@ class MultiSliceEngine:
         self.engines: Dict[int, ServingEngine] = {
             ps.slice_id: self._make_engine(ps) for ps in self.pod.slices
         }
-        self._inflight: Dict[int, _Dispatch] = {}
+        self._inflight: Dict[int, _ReqTrack] = {}
         self._exec_seen = {}
 
     def _make_engine(self, ps: PodSlice) -> ServingEngine:
         # per-slice engines are always continuous (own slot pool + prefill
-        # cache); preprocessing already happened once at the shared queue,
-        # and batch formation too — their internal batcher is a pass-through
+        # cache, chunk_lens inherited); preprocessing already happened once
+        # at the shared queue, and batch formation too — their internal
+        # batcher is a pass-through
         ec_s = dc_replace(self.ec, continuous=True, preprocess="none")
         pol = dc_replace(self.policy, time_queue=0.0)
         return ServingEngine(self.cfg, self._params_for(ps), pol, ec_s)
@@ -189,50 +207,50 @@ class MultiSliceEngine:
                chips_per_slice: Optional[int] = None) -> int:
         """Elastic re-slice mid-trace (MIG reconfiguration): cancel in-flight
         work, re-partition to a different menu entry, rebuild the per-slice
-        engines, and requeue every in-flight batch exactly once. Returns the
-        number of requeued batches."""
+        engines, and requeue every in-flight request exactly once (hedge
+        copies dedupe by rid — tracks hold one original each). Returns the
+        number of requeued requests."""
         assert (n_slices is None) != (chips_per_slice is None), (
             "pass exactly one of n_slices / chips_per_slice"
         )
         if n_slices is None:
             n_slices = max(1, len(self._devices) // max(1, chips_per_slice))
-        # unique in-flight batches (hedge twins share the Batch object)
-        carry: List[Batch] = []
-        for disp in self._inflight.values():
-            if not any(b is disp.batch for b in carry):
-                carry.append(disp.batch)
-        for sid, disp in self._inflight.items():
-            self.stats["cancelled"] += self.engines[sid].cancel(
-                r.rid for r in disp.reqs
-            )
-        for b in self.sched.requeued:
-            if not any(u is b for u in carry):
-                carry.append(b)
-        carry.extend(self._pending)
-        self._pending = []
+        carry = [tr.req for tr in self._inflight.values()]
+        rids = set(self._inflight)
+        for sid, e in self.engines.items():
+            self.stats["cancelled"] += e.cancel(rids)
         # the shared admission backlog holds requests already pulled out of
-        # the batcher but not yet formed into a batch — carry them across
-        # the scheduler rebuild or they would simply vanish
+        # the batcher but not yet dispatched — carry them across the
+        # scheduler rebuild or they would simply vanish
         backlog = self.slot_scheduler.drain()
         self._hedges_base += self.sched.hedges
         self._build(n_slices)
-        self._pending = carry
-        self.slot_scheduler.requeue(backlog)
+        self.slot_scheduler.requeue(carry + backlog)
         self.stats["resizes"] += 1
         self.stats["requeued"] += len(carry)
         return len(carry)
 
-    def fail_slice(self, slice_id: int) -> Optional[Batch]:
+    def fail_slice(self, slice_id: int) -> List[Request]:
         """Evict a slice (fault injection / real device loss): cancel its
-        engine's work; the scheduler requeues the batch unless a hedge twin
-        still runs it."""
-        requeued = self.sched.fail_slice(slice_id)
+        engine's work; each of its in-flight requests is requeued into the
+        shared backlog unless a hedge twin still runs it elsewhere (the
+        surviving copy completes alone). Returns the requeued requests."""
+        requeue_rids = self.sched.fail_slice(slice_id)
         self.pod.fail(slice_id)
-        disp = self._inflight.pop(slice_id, None)
-        if disp is not None:
-            self.stats["cancelled"] += self.engines[slice_id].cancel(
-                r.rid for r in disp.reqs
-            )
+        victims = [rid for rid, tr in self._inflight.items()
+                   if slice_id in tr.copies]
+        if victims:
+            self.stats["cancelled"] += self.engines[slice_id].cancel(victims)
+        requeued: List[Request] = []
+        for rid in victims:
+            tr = self._inflight[rid]
+            tr.copies.pop(slice_id, None)
+            if rid in requeue_rids:
+                del self._inflight[rid]
+                requeued.append(tr.req)
+        if requeued:
+            self.slot_scheduler.requeue(requeued)
+            self.stats["requeued"] += len(requeued)
         return requeued
 
     def recover_slice(self, slice_id: int) -> None:
@@ -253,34 +271,32 @@ class MultiSliceEngine:
     def offer(self, reqs: List[Request]) -> None:
         """Stage-pipelined admission intake (serving/runtime.py): already-
         preprocessed requests join the shared SlotScheduler's EDF backlog
-        directly; _form() chunks them into bucket-pure per-slice batches as
-        usual, so dispatch/hedging semantics are unchanged."""
+        directly; _dispatch() streams them into slice slots as capacity
+        frees, so dispatch/hedging semantics are unchanged."""
         self.slot_scheduler.offer(reqs)
 
     def admission_depth(self) -> int:
-        """Requests waiting for slice capacity (batcher + shared backlog +
-        formed-but-undispatched batches + failure/resize requeues) — the
-        pipelined runtime's backpressure signal for this stage; omitting
-        requeued batches would let the runtime offer past max_backlog after
-        a slice failure."""
+        """Requests waiting for a KV slot anywhere (shared batcher + shared
+        backlog + per-slice admission backlogs of requests already streamed
+        to a slice but not yet in a slot) — the pipelined runtime's
+        backpressure signal for this stage."""
         return (self.batcher.pending() + self.slot_scheduler.depth()
-                + sum(b.size for b in self._pending)
-                + sum(b.size for b in self.sched.requeued))
+                + sum(e.admission_depth() for e in self.engines.values()))
 
     def busy(self) -> bool:
         return bool(
             self.batcher.pending() or self.slot_scheduler.backlog()
-            or self._pending or self.sched.requeued or self._inflight
+            or self._inflight or any(e.busy() for e in self.engines.values())
         )
 
     # --- serve loop ---------------------------------------------------------
     def step(self, now: Optional[float] = None) -> bool:
-        """One global iteration: form due admission groups, dispatch to free
-        slices, advance every busy slice engine one segment, harvest
-        completions, and hedge stragglers. Returns True if anything moved."""
+        """One global iteration: stream due requests into slices with free
+        slot capacity, advance every busy slice engine one admit/chunk/
+        segment iteration, harvest completions, and hedge stragglers.
+        Returns True if anything moved."""
         now = time.monotonic() if now is None else now
-        progressed = self._form(now)
-        progressed |= self._dispatch(now)
+        progressed = self._dispatch(now)
         progressed |= self._advance(now)
         self._check_hedges(now)
         return progressed
@@ -295,86 +311,117 @@ class MultiSliceEngine:
                           else time.monotonic())
         return self.completed
 
-    def _form(self, now: float) -> bool:
-        """Pull due batches through the shared SlotScheduler (EDF backlog,
-        bucket-pure groups) sized to the free slices' slot capacity, and
-        chunk them into one dispatchable Batch per slice-pool load."""
-        n_free = len(self.sched.free_slices(now))
-        capacity = max(0, n_free - len(self._pending)) * self.ec.max_slots
-        plan = self.slot_scheduler.plan(self.batcher, now,
-                                        free_slots=capacity)
-        formed = False
-        for group in plan.admissions:
-            for i in range(0, len(group), self.ec.max_slots):
-                chunk = group[i:i + self.ec.max_slots]
-                self._pending.append(Batch(
-                    requests=chunk,
-                    bucket_id=self.batcher.bucket_of(chunk[0].length),
-                    formed_at=now,
-                ))
-                formed = True
-        return formed
+    def _loads(self) -> Dict[int, int]:
+        """Per-slice slot pressure: occupied pool rows plus requests already
+        streamed to the slice but still waiting in its admission backlog
+        (they will take a slot before anything dispatched later)."""
+        return {
+            sid: e.slots_in_use() + e.admission_depth()
+            for sid, e in self.engines.items()
+        }
 
     def _dispatch(self, now: float) -> bool:
+        """Stream due requests (EDF order, bucket-grouped by the shared
+        SlotScheduler) into slices. `stream` mode: any healthy slice with
+        free slot capacity, least-loaded first — later groups join a busy
+        slice's pool mid-flight. `batch` mode (benchmark baseline): a slice
+        receives one max_slots-sized group only when fully idle, emulating
+        the old batch-granularity dispatcher."""
+        if self.dispatch_mode == "batch":
+            return self._dispatch_batch_mode(now)
+        load = self._loads()
+        cap = self.ec.max_slots
+        healthy = [sid for sid, s in self.sched.slices.items() if s.healthy]
+        total = sum(max(0, cap - load[sid]) for sid in healthy)
+        plan = self.slot_scheduler.plan(self.batcher, now, free_slots=total)
         did = False
-        # requeued work (failure / resize) goes first — it is the oldest
-        while self.sched.requeued and self.sched.free_slices(now):
-            b = self.sched.requeued.pop(0)
-            if self._dispatch_batch(b, now) is None:
-                self.sched.requeued.insert(0, b)
-                break
-            did = True
-        while self._pending and self.sched.free_slices(now):
-            b = self._pending[0]
-            if self._dispatch_batch(b, now) is None:
-                break
-            self._pending.pop(0)
-            did = True
+        leftovers: List[Request] = []
+        for group in plan.admissions:
+            for r in group:
+                sid = self.sched.pick_slice(load, cap)
+                if sid is None:
+                    leftovers.append(r)
+                    continue
+                self._send(r, sid, now)
+                load[sid] += 1
+                did = True
+        if leftovers:  # capacity raced away (shouldn't normally happen)
+            self.slot_scheduler.requeue(leftovers)
         return did
 
-    def _dispatch_batch(self, b: Batch, now: float) -> Optional[int]:
-        sid = self.sched.dispatch(b, now, expected_s=self._expected_s(b))
-        if sid is None:
-            return None
-        # offer(), not submit_many(): the batch is already formed, validated
-        # and preprocessed at the shared queue — re-submitting would re-run
-        # batch formation against the slice's (pass-through) batcher and
-        # overwrite preprocessed_at with a wall timestamp, which breaks
-        # virtual-clock driving (the pipelined runtime) and skews latency
-        # accounting. Dispatch hands it straight to slot admission.
-        self.engines[sid].offer(list(b.requests))
-        self._inflight[sid] = _Dispatch(batch=b, reqs=list(b.requests),
-                                        primary=True)
-        self.stats["dispatched"] += 1
-        return sid
+    def _dispatch_batch_mode(self, now: float) -> bool:
+        cap = self.ec.max_slots
+        idle = [
+            sid for sid, s in sorted(self.sched.slices.items())
+            if s.healthy and self.engines[sid].slots_in_use() == 0
+            and self.engines[sid].admission_depth() == 0
+            and not any(sid in tr.copies for tr in self._inflight.values())
+        ]
+        plan = self.slot_scheduler.plan(self.batcher, now,
+                                        free_slots=len(idle) * cap)
+        did = False
+        leftovers: List[Request] = []
+        for group in plan.admissions:
+            group = list(group)
+            while group:
+                if not idle:
+                    leftovers.extend(group)
+                    break
+                sid = idle.pop(0)
+                for r in group[:cap]:
+                    self._send(r, sid, now)
+                    did = True
+                del group[:cap]
+        if leftovers:
+            self.slot_scheduler.requeue(leftovers)
+        return did
 
-    def _expected_s(self, b: Batch) -> float:
+    def _send(self, r: Request, sid: int, now: float) -> None:
+        self.engines[sid].offer([r])
+        self.sched.dispatch(r.rid, sid, now, self._expected_s(r))
+        self._inflight[r.rid] = _ReqTrack(req=r, primary_sid=sid,
+                                          copies={sid: r})
+        self.stats["dispatched"] += 1
+
+    def _expected_s(self, r: Request) -> float:
+        """Analytic per-request time budget for straggler detection: chunked
+        admission dispatches (worst case: smallest chunk length over the
+        prompt bucket) + decode segments + one admission pass, scaled by
+        the EMA of measured per-dispatch execution times."""
         if self.fixed_expected_s is not None:
             return self.fixed_expected_s
         if self._seg_ema is None:
-            return 0.0  # uncalibrated: hedging off until a segment is timed
+            return 0.0  # uncalibrated: hedging off until a dispatch is timed
         cap = self.ec.max_new_tokens
-        budget = max(
-            cap if r.max_new_tokens is None else min(r.max_new_tokens, cap)
-            for r in b.requests
-        )
+        budget = cap if r.max_new_tokens is None else min(r.max_new_tokens, cap)
         segs = math.ceil(budget / max(1, self.ec.segment_len))
-        return (segs + 1) * self._seg_ema  # +1 ~ admission prefill
+        chunks = 1
+        if self._chunked:  # only when the slice engines really chunk —
+            # budgeting phantom chunk dispatches on an unsupported family
+            # would delay dead-device detection by the same factor
+            lp = next_pow2(max(1, int(r.length)))
+            chunks = max(1, lp // min(self.ec.chunk_lens))
+        return (segs + chunks) * self._seg_ema
 
     def _advance(self, now: float) -> bool:
         did = False
-        for sid in list(self._inflight):
-            disp = self._inflight.get(sid)
-            if disp is None:  # finished/cancelled earlier this pass
-                continue
+        for sid, engine in self.engines.items():
             if sid in self.stalled_slices:
                 continue  # hung device: no progress; hedging covers it
-            engine = self.engines[sid]
+            moved = False
             if engine.busy():
-                did |= engine.step(now)
+                moved = bool(engine.step(now))
+                did |= moved
+            if moved or not engine.busy():
+                # straggler detection is progress-gated: a slice that
+                # advanced (or has nothing to do) is healthy, however long
+                # its streamed residents wall-clock wait behind each other
+                self.sched.note_progress(sid, now)
             self._update_ema(sid, engine)
-            if self._harvest(sid, disp):
-                self._finish(sid, disp, now)
+            if engine.completed:
+                done, engine.completed = engine.completed, []
+                for res in done:
+                    self._record(res, sid)
                 did = True
         return did
 
@@ -386,59 +433,45 @@ class MultiSliceEngine:
             self._seg_ema = (x if self._seg_ema is None
                              else 0.7 * self._seg_ema + 0.3 * x)
 
-    def _harvest(self, sid: int, disp: _Dispatch) -> bool:
-        """Record newly finished requests (first completion wins per rid —
-        originals for the primary, clones mapped back for a twin). Returns
-        True once every request of the dispatched batch is done HERE."""
-        done = {r.rid: r for r in self.engines[sid].completed}
-        for orig in disp.batch.requests:
-            res = done.get(orig.rid)
-            if res is None or orig.rid in self._done_rids:
-                continue
-            if res is not orig:  # hedge twin ran a clone: copy results back
-                orig.payload = res.payload
-                orig.dispatched_at = res.dispatched_at
-                orig.completed_at = res.completed_at
-            self._done_rids.add(orig.rid)
-            self.completed.append(orig)
-        return all(r.rid in done for r in disp.batch.requests)
-
-    def _finish(self, sid: int, disp: _Dispatch, now: float) -> None:
-        """First full completion wins: scheduler-complete this slice, cancel
-        the hedge twin's in-flight copies (if any) on the losing engine."""
-        # sched.complete stamps completed_at = now on every request (its
-        # simulator contract); here the engine's per-request retire times —
-        # which _harvest already placed on the originals — are the truth
-        times = [(r, r.completed_at) for r in disp.batch.requests]
-        b = self.sched.complete(sid, now)
-        assert b is disp.batch, (sid, b)
-        for r, t in times:
-            r.completed_at = t
-        rids = {r.rid for r in disp.batch.requests}
-        self.engines[sid].completed = [
-            r for r in self.engines[sid].completed if r.rid not in rids
-        ]
-        del self._inflight[sid]
-        if not disp.primary:
+    def _record(self, res: Request, sid: int) -> None:
+        """First completion wins per rid: record the original exactly once
+        (clone results copied back when a hedge twin won) and cancel every
+        losing copy mid-flight on its engine."""
+        track = self._inflight.get(res.rid)
+        if track is None or res.rid in self._done_rids:
+            return  # stale copy of an already-recorded completion
+        orig = track.req
+        if res is not orig:  # hedge twin ran a clone: copy results back
+            orig.payload = res.payload
+            orig.dispatched_at = res.dispatched_at
+            orig.completed_at = res.completed_at
+        self._done_rids.add(orig.rid)
+        self.completed.append(orig)
+        losers = self.sched.complete(res.rid, sid) or []
+        for osid in losers:
+            if osid in self.engines:
+                self.stats["cancelled"] += self.engines[osid].cancel([res.rid])
+        del self._inflight[res.rid]
+        if sid != track.primary_sid:
             self.stats["hedge_wins"] += 1
-        for osid, od in list(self._inflight.items()):
-            if od.batch is disp.batch:
-                self.stats["cancelled"] += self.engines[osid].cancel(rids)
-                del self._inflight[osid]
 
     def _check_hedges(self, now: float) -> None:
-        for sid in self.sched.stragglers(now):
-            disp = self._inflight.get(sid)
-            if disp is None:
+        load = None
+        for rid, sid in self.sched.stragglers(now):
+            track = self._inflight.get(rid)
+            if track is None:
                 continue
-            twin_sid = self.sched.hedge(sid, now)
-            if twin_sid is None:
-                continue  # no free slice: stays un-hedged, retried next step
-            clones = [dc_replace(r) for r in disp.batch.requests]
-            self.engines[twin_sid].offer(clones)
-            self._inflight[twin_sid] = _Dispatch(
-                batch=disp.batch, reqs=clones, primary=False
-            )
+            if load is None:
+                load = self._loads()
+            twin = self.sched.pick_slice(load, self.ec.max_slots,
+                                         exclude=track.copies)
+            if twin is None:
+                continue  # no free capacity: stays un-hedged, retried next step
+            clone = dc_replace(track.req)
+            self.engines[twin].offer([clone])
+            track.copies[twin] = clone
+            self.sched.hedge(rid, now, twin)
+            load[twin] += 1
 
     # --- reporting ----------------------------------------------------------
     def reset_metrics(self) -> None:
@@ -454,8 +487,12 @@ class MultiSliceEngine:
         self._exec_seen = {sid: 0 for sid in self.engines}
 
     def trace_counts(self) -> Dict[int, int]:
-        """Per-slice jit trace totals (compile-once invariant: 2 per slice
-        in steady state — one prefill+admit bucket + one segment)."""
+        """Per-slice jit trace totals (compile-once invariant): in steady
+        state, one admit program per monolithically-admitted prompt bucket
+        + one chunk program per (chunk length, bucket) pair actually
+        chunked + ONE segment — e.g. the chunked-prefill bench's mix (one
+        monolithic bucket, one chunked bucket) gives exactly 3 per slice;
+        unchunked single-bucket serving gives the classic 2."""
         return {
             sid: (e.stats["prefill_traces"] + e.stats["generate_traces"]
                   + e.stats["segment_traces"] + e.stats["decode_step_traces"])
@@ -471,7 +508,7 @@ class MultiSliceEngine:
                 "retired": e.stats["retired"],
                 "segments": e.stats["segments"],
                 "mean_slot_occupancy": round(e.mean_slot_occupancy(), 3),
-                "completed_batches": st.completed if st is not None else 0,
+                "completed_requests": st.completed if st is not None else 0,
                 "healthy": st.healthy if st is not None else False,
             }
         return out
@@ -492,12 +529,14 @@ def build_multislice_engine(
     cfg: ModelConfig, *, n_slices: int, seed: int = 0,
     ec: Optional[EngineConfig] = None, hedge_factor: float = 3.0,
     devices: Optional[Sequence] = None, params=None,
+    dispatch: str = "stream",
 ) -> MultiSliceEngine:
     """Mirror of engine.build_engine for the multi-slice system: same param
     init (bit-identical outputs vs a single engine), knee-derived policy
     with V = n_slices (Time_queue = Time_knee / V). Pass `params` to reuse
     an already-initialized tree (a partition-menu sweep re-slices the same
-    model)."""
+    model); `dispatch="batch"` keeps the old batch-granularity dispatcher
+    (benchmark baseline)."""
     import jax
 
     from repro.core.batching import (
@@ -520,4 +559,5 @@ def build_multislice_engine(
     policy = derive_policy(profiles, n_slices=n_slices,
                            bucket_width=ec.bucket_width)
     return MultiSliceEngine(cfg, params, policy, ec, n_slices=n_slices,
-                            devices=devices, hedge_factor=hedge_factor)
+                            devices=devices, hedge_factor=hedge_factor,
+                            dispatch=dispatch)

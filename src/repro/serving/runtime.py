@@ -34,10 +34,15 @@ queue is unbounded, and every request is either completed, still queued, or
 recorded in `self.shed` — nothing vanishes.
 
 SLO-aware shedding: with RuntimeConfig.slo_s set, a request whose modeled
-preprocessing completion (`DpuService.estimate_s`, the CU cost model)
-already overruns `arrival + slo_s` is shed immediately — the paper's
-front-door admission control: work that cannot meet its deadline must not
-occupy the DPU or a KV slot.
+completion already overruns `arrival + slo_s` is shed immediately — the
+paper's front-door admission control: work that cannot meet its deadline
+must not occupy the DPU or a KV slot. The estimate folds BOTH stages in:
+the DPU cost model (`DpuService.estimate_s`) for preprocessing, plus a
+decode-backlog term (`decode_backlog_s`) — admission depth and slot
+occupancy scaled by the measured per-dispatch execution EMA — so a
+saturated slice pool sheds at the front door instead of accepting work
+that will time out waiting for a KV slot (the DPU-only model shed too
+late under slice saturation).
 
 Clocks: `clock="virtual"` is deterministic (tests/simulation drive `now`
 explicitly; idle gaps jump to the next modeled event). `clock="wall"` is
@@ -132,6 +137,12 @@ class PipelinedRuntime:
         }
         self._pre_busy = _StageStat()   # DPU occupancy samples (0/1)
         self._now = 0.0                 # virtual-clock high-water mark
+        # EMA of the engine's per-dispatch execution times (chunk/admit/
+        # segment calls) feeding the decode-backlog SLO estimate; the
+        # multi-slice engine maintains its own, a single engine is observed
+        # here from batch_exec_s. Tests may pin it directly.
+        self.seg_ema: Optional[float] = None
+        self._exec_seen = 0
 
     # --- clock --------------------------------------------------------------
     def _tick(self, now: Optional[float]) -> float:
@@ -161,14 +172,15 @@ class PipelinedRuntime:
             )
         accepted = 0
         has_slo = self.rc.slo_s != float("inf")
+        backlog_est = self.decode_backlog_s() if has_slo else 0.0
         for r in reqs:
             self.stats["submitted"] += 1
-            est = 0.0
+            est = backlog_est
             if has_slo and self.service is not None and r.payload is not None:
                 # cost-model estimate only matters when an SLO is set (it
                 # also assumes a well-formed payload — malformed ones are
                 # shed by the worker, not crashed on at the front door)
-                est = self.service.estimate_s(r.payload)
+                est += self.service.estimate_s(r.payload)
             if now + est > r.arrival + self.rc.slo_s:
                 self.stats["shed_slo"] += 1
                 self.shed.append(r)
@@ -290,6 +302,44 @@ class PipelinedRuntime:
         idle on the pipelined path — admission bypasses it via offer()."""
         return self.engine.batcher
 
+    # --- decode-backlog SLO model -------------------------------------------
+    def decode_backlog_s(self) -> float:
+        """Decode-side front-door wait estimate: requests ahead of a new
+        arrival (admission depth across every queue that feeds the slot
+        pools) plus current slot occupancy, scaled by how long a resident
+        request holds its slot (segments per decode budget x the measured
+        per-dispatch execution EMA) over the pool's drain parallelism (slot
+        capacity). Coarse by design — a lower bound that moves the shed
+        decision earlier exactly when the slice pools saturate, which the
+        DPU-only cost model could not see (it shed too late: preprocessing
+        finished on time and the request then starved waiting for a KV
+        slot)."""
+        cap = self.engine.slot_capacity()
+        if cap <= 0 or self.seg_ema is None:
+            return 0.0
+        waiting = self.engine.admission_depth() + self.engine.slots_in_use()
+        if not waiting:
+            return 0.0
+        ec = self.engine.ec
+        segs = max(1, -(-ec.max_new_tokens // max(1, ec.segment_len)))
+        return self.seg_ema * segs * waiting / cap
+
+    def _observe_exec(self) -> None:
+        """Fold fresh engine execution timings into `seg_ema` (multi-slice
+        engines maintain their own EMA; a single engine is observed from
+        batch_exec_s)."""
+        if isinstance(self.engine, MultiSliceEngine):
+            if self.engine._seg_ema is not None:
+                self.seg_ema = self.engine._seg_ema
+            return
+        xs = self.engine.batch_exec_s
+        if self._exec_seen > len(xs):  # engine metrics were reset
+            self._exec_seen = 0
+        for x in xs[self._exec_seen:]:
+            self.seg_ema = (x if self.seg_ema is None
+                            else 0.7 * self.seg_ema + 0.3 * x)
+        self._exec_seen = len(xs)
+
     # --- internals ----------------------------------------------------------
     def _next_event(self) -> Optional[float]:
         ts = []
@@ -303,6 +353,7 @@ class PipelinedRuntime:
         return min(ts) if ts else None
 
     def _sample(self) -> None:
+        self._observe_exec()
         self._depths["ingest"].add(len(self._ingest))
         if self.service is not None:
             self._depths["preprocess"].add(

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.batching.buckets import Batch, BucketedBatcher, Request
 from repro.core.batching.policy import BatchPolicy
-from repro.core.batching.scheduler import SliceScheduler
+from repro.core.batching.scheduler import BatchSliceScheduler
 from repro.core.dpu.runtime import DPU, CpuPreprocessPool, DpuConfig
 
 
@@ -79,7 +79,9 @@ def simulate(
 ) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
     batcher = BucketedBatcher(policy)
-    sched = SliceScheduler(cfg.n_slices, hedge_factor=cfg.hedge_factor)
+    # analytic whole-batch slice latencies -> the batch-granularity scheduler
+    # (the real serving path streams requests per slot; see multislice.py)
+    sched = BatchSliceScheduler(cfg.n_slices, hedge_factor=cfg.hedge_factor)
 
     if cfg.preprocess == "cpu":
         pre = CpuPreprocessPool(cfg.cpu_cores, preprocess_cost_s)

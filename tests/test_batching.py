@@ -111,10 +111,12 @@ def test_no_request_lost_or_duplicated(lengths, bmax):
 
 
 def test_scheduler_failure_requeues_inflight():
-    from repro.core.batching import SliceScheduler
+    # the SIMULATOR's batch-granularity scheduler (the real serving path
+    # streams requests per slot; see tests/test_scheduler.py)
+    from repro.core.batching import BatchSliceScheduler
     from repro.core.batching.buckets import Batch
 
-    s = SliceScheduler(2)
+    s = BatchSliceScheduler(2)
     batch = Batch([Request(0, 0.0, 1.0)], 0, 0.0)
     sid = s.dispatch(batch, 0.0, expected_s=0.1)
     assert sid is not None
@@ -124,10 +126,10 @@ def test_scheduler_failure_requeues_inflight():
 
 
 def test_scheduler_hedging_and_first_wins():
-    from repro.core.batching import SliceScheduler
+    from repro.core.batching import BatchSliceScheduler
     from repro.core.batching.buckets import Batch
 
-    s = SliceScheduler(2, hedge_factor=2.0)
+    s = BatchSliceScheduler(2, hedge_factor=2.0)
     batch = Batch([Request(0, 0.0, 1.0)], 0, 0.0)
     sid = s.dispatch(batch, 0.0, expected_s=0.1)
     assert s.stragglers(0.15) == []
@@ -142,10 +144,10 @@ def test_scheduler_hedging_and_first_wins():
 
 
 def test_scheduler_elastic_resize():
-    from repro.core.batching import SliceScheduler
+    from repro.core.batching import BatchSliceScheduler
     from repro.core.batching.buckets import Batch
 
-    s = SliceScheduler(4)
+    s = BatchSliceScheduler(4)
     b = Batch([Request(0, 0.0, 1.0)], 0, 0.0)
     s.dispatch(b, 0.0, 0.1)
     s.resize(2)

@@ -1,0 +1,254 @@
+"""Chunked prefill proofs (ISSUE 5 tentpole): a long prompt's KV
+construction split across admission steps interleaved with decode segments
+is BIT-IDENTICAL to monolithic admission — across chunk sizes, mid-chunk
+joins/leaves, and request-level hedge/cancel/resize races — while the
+executable count stays bounded by #chunk buckets + one segment (chunk
+programs are keyed (chunk len, prompt bucket) and touch only the ring
+prefix [0, bucket): a bucket-agnostic shared program would pay full-ring
+attention per chunk — the rejected first cut that lost the bench)."""
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import reduced
+from repro.core.batching.buckets import Request
+from repro.core.batching.policy import BatchPolicy
+from repro.models import api, lm
+from repro.serving.engine import EngineConfig, build_engine
+from repro.serving.multislice import MultiSliceEngine
+
+# canonical request set: heavy-tailed prompt mix (two long, rest short),
+# deterministic per-rid prompts, heterogeneous budgets
+SPEC = [(100, 8), (23, 5), (14, 9), (70, 6), (9, 12), (33, 7), (121, 4),
+        (27, 3)]
+
+
+def _ec(**kw):
+    base = dict(continuous=True, max_slots=4, segment_len=4,
+                max_new_tokens=12, max_prompt_len=128)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _fresh(idxs=None):
+    idxs = range(len(SPEC)) if idxs is None else idxs
+    return [Request(rid=8000 + i, arrival=0.0, length=float(SPEC[i][0]),
+                    max_new_tokens=SPEC[i][1]) for i in idxs]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced("tinyllama-1.1b")
+    engine = build_engine(cfg, ec=_ec())  # monolithic admission reference
+    engine.submit_many(_fresh())
+    engine.run_until_idle()
+    ref = {r.rid: np.asarray(r.payload) for r in engine.completed}
+    assert len(ref) == len(SPEC)
+    return cfg, engine.params, ref
+
+
+def _check(done, ref, k):
+    assert len(done) == k
+    assert len({r.rid for r in done}) == k  # exactly once each
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.payload), ref[r.rid])
+
+
+def test_chunked_bit_identical_across_chunk_sizes(setup):
+    """Every chunk length (and mixes the policy can pick from) produces the
+    same tokens as monolithic admission, request for request."""
+    cfg, params, ref = setup
+    for chunk_lens in [(8,), (16,), (64,), (8, 32)]:
+        engine = build_engine(cfg, ec=_ec(chunk_lens=chunk_lens))
+        engine.params = params
+        engine.submit_many(_fresh())
+        done = engine.run_until_idle()
+        _check(done, ref, len(SPEC))
+        assert engine.stats["admitted"] == engine.stats["retired"] == len(SPEC)
+
+
+def test_chunk_executables_bounded_and_compile_once(setup):
+    """Steady-state executable count under chunked admission is bounded by
+    #chunk buckets + 1 segment: one (chunk len, prompt bucket) program per
+    bucket the trace hits (16/32/64/128 here — each touching only its ring
+    prefix, so a chunk costs its share of the bucket's monolithic prefill)
+    plus ONE segment; later waves retrace nothing."""
+    cfg, params, ref = setup
+    engine = build_engine(cfg, ec=_ec(chunk_lens=(8,)))
+    engine.params = params
+    for wave in range(3):
+        reqs = [Request(rid=8000 + i if wave == 0 else 9000 + 10 * wave + i,
+                        arrival=0.0, length=float(n), max_new_tokens=b)
+                for i, (n, b) in enumerate(SPEC)]
+        engine.submit_many(reqs)
+        engine.run_until_idle()
+    assert engine.stats["prefill_traces"] == 4   # chunk buckets 16/32/64/128
+    assert engine.stats["segment_traces"] == 1
+    assert engine.stats["generate_traces"] == 0
+    assert engine.stats["decode_step_traces"] == 0
+    _check([r for r in engine.completed if r.rid < 9000], ref, len(SPEC))
+
+
+def test_mid_chunk_joins_and_leaves_bit_identical(setup):
+    """Requests join free slots (and retire) WHILE another admission is
+    mid-chunk — including concurrent chunked admissions whose row masks
+    must not touch each other's pool rows — and everything stays
+    bit-identical to the monolithic reference."""
+    cfg, params, ref = setup
+    engine = build_engine(cfg, ec=_ec(chunk_lens=(8,)))
+    engine.params = params
+    engine.submit(_fresh([0])[0])        # lp 128 -> 16 chunks of 8
+    engine.step(time.monotonic() + 60)   # past the knee flush deadline
+    assert engine._chunk_q               # genuinely mid-prefill
+    engine.submit_many(_fresh([1, 2, 4]))  # join while chunk 0 is in flight
+    engine.step(time.monotonic() + 60)
+    assert len(engine._chunk_q) >= 2     # concurrent chunked admissions
+    done = engine.run_until_idle()
+    _check(done, ref, 4)
+    # and with a chunk length that leaves short prompts monolithic, a
+    # monolithic join lands mid-chunk of the long prompt's admission
+    e2 = build_engine(cfg, ec=_ec(chunk_lens=(32,)))
+    e2.params = params
+    e2.submit(_fresh([0])[0])            # lp 128 -> 4 chunks of 32
+    e2.step(time.monotonic() + 60)
+    assert e2._chunk_q
+    e2.submit_many(_fresh([1, 4]))       # lp 32/16 <= 32: monolithic admit
+    done = e2.run_until_idle()
+    _check(done, ref, 3)
+    assert not e2._chunk_q
+
+
+def test_cancel_mid_chunk_frees_slot_and_spares_neighbors(setup):
+    """ServingEngine.cancel of a request whose prompt is mid-chunk drops it
+    from the in-flight admission (its row masked via the sentinel offset),
+    frees the slot, and leaves the group's other requests bit-identical."""
+    cfg, params, ref = setup
+    engine = build_engine(cfg, ec=_ec(chunk_lens=(8,)))
+    engine.params = params
+    reqs = _fresh([0, 6])                # two long prompts, one admission
+    engine.submit_many(reqs)
+    engine.step(time.monotonic() + 60)
+    assert engine._chunk_q and not engine._chunk_q[0].pos >= 128
+    assert engine.cancel([reqs[0].rid]) == 1
+    assert engine.slots_in_use() == 1    # victim's slot freed mid-prefill
+    done = engine.run_until_idle()
+    _check(done, ref, 1)
+    assert done[0].rid == reqs[1].rid
+    # cancelling the whole group mid-chunk drains the admission queue
+    e2 = build_engine(cfg, ec=_ec(chunk_lens=(8,)))
+    e2.params = params
+    r = _fresh([0])[0]
+    e2.submit(r)
+    e2.step(time.monotonic() + 60)
+    assert e2._chunk_q
+    assert e2.cancel([r.rid]) == 1
+    assert not e2._chunk_q and not e2.busy()
+
+
+def test_unsupported_family_falls_back_to_monolithic():
+    """chunk_lens on a model lm.supports_chunked_prefill rejects (mamba2's
+    sequential SSM state has no chunk-resume path) must serve correctly
+    through monolithic admission, not crash or corrupt."""
+    cfg = reduced("mamba2-370m")
+    assert not lm.supports_chunked_prefill(cfg)
+    base = dict(continuous=True, max_slots=2, segment_len=4,
+                max_new_tokens=6, max_prompt_len=16)
+    e_ref = build_engine(cfg, ec=EngineConfig(**base))
+    reqs = [Request(rid=50 + i, arrival=0.0, length=float(n),
+                    max_new_tokens=b) for i, (n, b) in
+            enumerate([(6, 6), (11, 4), (9, 5)])]
+    e_ref.submit_many([Request(rid=r.rid, arrival=0.0, length=r.length,
+                               max_new_tokens=r.max_new_tokens)
+                       for r in reqs])
+    ref = {r.rid: np.asarray(r.payload) for r in e_ref.run_until_idle()}
+    e = build_engine(cfg, ec=EngineConfig(chunk_lens=(4,), **base))
+    e.params = e_ref.params
+    assert e._chunk_lens == ()           # silently inert
+    e.submit_many(reqs)
+    done = e.run_until_idle()
+    _check(done, ref, 3)
+
+
+# ---------------------------------------------------------------------------
+# Request-level races on the multi-slice streaming dispatcher, mid-chunk
+# ---------------------------------------------------------------------------
+
+
+def _policy(n_slices):
+    return BatchPolicy(batch_max={0: 4}, time_queue=0.0, time_knee=0.1,
+                       n_slices=n_slices, bucket_width=64.0)
+
+
+def test_hedge_mid_chunk_request_completes_exactly_once(setup):
+    """A slice stalling WHILE a request's prompt is mid-chunk: the straggler
+    detector clones the REQUEST onto a healthy twin, the twin re-runs the
+    prompt from scratch (chunked again) and wins, the stalled copy is
+    cancelled mid-prefill — recorded exactly once, bit-identical."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2),
+                          _ec(chunk_lens=(8,)), n_slices=2,
+                          hedge_factor=1.5)
+    ms.fixed_expected_s = 1e-4
+    ms.submit_many(_fresh([0, 1]))       # one long (chunked) + one short
+    ms._dispatch(time.monotonic())       # streamed, engines not yet advanced
+    long_rid = 8000
+    (sid,) = ms._inflight[long_rid].copies
+    ms.stalled_slices.add(sid)
+    done = ms.run_until_idle()
+    _check(done, ref, 2)
+    assert ms.hedges >= 1
+    assert ms.stats["hedge_wins"] >= 1
+    assert ms.stats["cancelled"] >= 1
+    assert ms._inflight == {}
+
+
+def test_resize_mid_chunk_loses_no_requests(setup):
+    """Elastic re-slice while chunked admissions are in flight: mid-prefill
+    requests are requeued exactly once, re-chunked on the rebuilt engines,
+    and complete bit-identically."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2),
+                          _ec(chunk_lens=(8,)), n_slices=2)
+    ms.submit_many(_fresh())
+    ms.step()
+    assert any(e._chunk_q for e in ms.engines.values())  # mid-chunk
+    requeued = ms.resize(n_slices=3)
+    assert requeued >= 1
+    done = ms.run_until_idle()
+    _check(done, ref, len(SPEC))
+    assert ms.stats["resizes"] == 1
+
+
+def test_fail_slice_mid_chunk_requeues_and_completes(setup):
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2),
+                          _ec(chunk_lens=(8,)), n_slices=2)
+    ms.submit_many(_fresh([0, 3]))       # both long: chunked on both slices
+    ms.step()
+    busy = [sid for sid, e in ms.engines.items() if e._chunk_q]
+    assert busy
+    assert ms.fail_slice(busy[0])        # sole holder -> requeued
+    done = ms.run_until_idle()
+    _check(done, ref, 2)
+
+
+def test_streaming_chunked_multislice_bit_identical(setup):
+    """End-to-end: the full heavy-tailed mix through request->slot streaming
+    with chunked prefill on 2 slices == the monolithic single-slice
+    reference, with per-slice steady-state executables bounded by the
+    chunk buckets that slice actually served (<= 4 here) + one segment."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2),
+                          _ec(chunk_lens=(8,)), n_slices=2)
+    ms.submit_many(_fresh())
+    done = ms.run_until_idle()
+    _check(done, ref, len(SPEC))
+    for sid, e in ms.engines.items():
+        if e.stats["admitted"]:
+            # chunk_lens=(8,): every bucket (16..128) exceeds the chunk —
+            # one chunk program per bucket this slice served + 1 segment
+            assert e.stats["prefill_traces"] <= 4, (sid, e.stats)
+            assert e.stats["segment_traces"] == 1, (sid, e.stats)

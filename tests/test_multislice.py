@@ -81,75 +81,118 @@ def test_outputs_bit_identical_to_single_slice_engine(setup):
     ms.submit_many(_fresh())
     done = ms.run_until_idle()
     _check_done(done, ref, 9)
-    # the work really spread across slices, each with its own slot pool
+    # the work really spread across slices (least-loaded request streaming),
+    # each with its own slot pool
     st = ms.slice_stats()
     assert sum(1 for v in st.values() if v["admitted"] > 0) == 2
     assert all(0.0 < v["mean_slot_occupancy"] <= 1.0 for v in st.values())
 
 
-def test_hedged_batch_completes_exactly_once_twin_wins(setup):
-    """A stalled slice (hung device) is detected as a straggler; its batch
-    is re-dispatched to a free twin, the twin's completion wins, and the
-    stalled engine's copies are cancelled — every request exactly once."""
+def test_stream_joins_busy_slice_mid_flight(setup):
+    """The request -> slot refactor's core behaviour: a later admission
+    group joins a BUSY slice's pool mid-flight instead of queueing behind
+    the resident work (the old batch-granularity dispatcher reserved a
+    slice for one formed batch at a time)."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(1), _ec(), n_slices=1)
+    ms.submit_many(_pick([2, 8]))        # budget-8 residents: several segments
+    ms.step()
+    e = ms.engines[0]
+    assert e.slots_in_use() == 2 and e.stats["retired"] == 0  # mid-flight
+    ms.submit_many(_pick([0, 4]))        # arrive while the slice is busy
+    ms.step()
+    # joined the same busy slice's pool without waiting for it to drain:
+    # admission ran before this step's segment, while both residents (0
+    # retired above) still occupied their slots
+    assert e.stats["admitted"] == 4
+    done = ms.run_until_idle()
+    _check_done(done, ref, 4)
+
+
+def test_hedged_request_completes_exactly_once_twin_wins(setup):
+    """A stalled slice (hung device) is detected as a straggler; each of
+    its REQUESTS is cloned onto a healthy twin's free slot, the twin's
+    completion wins, and the stalled engine's copies are cancelled
+    mid-flight — every request exactly once."""
     cfg, params, ref = setup
     ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
                           hedge_factor=1.5)
     ms.fixed_expected_s = 1e-4   # deterministic straggler detection
     ms.submit_many(_fresh(2))
-    # form + dispatch only (no _advance): since dispatch hands batches
-    # straight to slot admission via offer(), a full ms.step() could admit,
-    # decode and retire this small batch in one iteration — the stall must
-    # be injected before the slice engine ever advances
-    now = time.monotonic()
-    ms._form(now)
-    ms._dispatch(now)
-    (sid,) = ms._inflight
+    # dispatch only (no _advance): streaming hands requests straight to
+    # slice admission, so a full ms.step() could admit, decode and retire
+    # these small requests in one iteration — the stall must be injected
+    # before the slice engine ever advances
+    ms._dispatch(time.monotonic())
+    assert len(ms._inflight) == 2
+    sid = next(iter(next(iter(ms._inflight.values())).copies))
     ms.stalled_slices.add(sid)   # that slice never advances again
     done = ms.run_until_idle()
     _check_done(done, ref, 2)
-    assert ms.hedges == 1
-    assert ms.stats["hedge_wins"] == 1
+    assert ms.hedges >= 1
+    assert ms.stats["hedge_wins"] >= 1
     assert ms.stats["cancelled"] >= 1       # stalled copies were killed
-    assert not ms.engines[sid].busy()       # nothing left in the slice
     assert ms._inflight == {}
 
 
-def test_hedge_original_wins_and_twin_is_cancelled(setup):
-    """With an absurdly small expected time every dispatch hedges, but the
-    original (ahead by several segments) finishes first: the twin's clones
-    are cancelled and nothing completes twice."""
+def test_hedge_original_wins_and_clone_is_cancelled(setup):
+    """A TRANSIENT stall: the slice hangs after several segments, the
+    hedge fires, the device recovers — the original (segments ahead of the
+    freshly-admitted clone) finishes first, the clone is cancelled
+    mid-flight, and nothing completes twice."""
     cfg, params, ref = setup
-    # segment_len=2: budget-8 requests span 4 segments, so the batch is
-    # still in flight when the straggler check runs (dispatch now admits in
-    # the same step via offer(), so a segment_len-4 batch would finish
-    # before any elapsed time accrues). Outputs are segment-len-invariant.
+    # segment_len=2: the budget-8 request spans 4 segments
     ec = EngineConfig(max_new_tokens=8, continuous=True, max_slots=4,
                       segment_len=2, max_prompt_len=32)
     ms = MultiSliceEngine(cfg, params, _policy(2), ec, n_slices=2,
-                          hedge_factor=0.5)
-    ms.fixed_expected_s = 1e-6
-    reqs = _pick([2, 8])  # budget 8: needs several segments
-    ms.submit_many(reqs)
+                          hedge_factor=1.5)
+    ms.fixed_expected_s = 1e-4
+    ms.submit_many(_pick([2]))       # budget 8
+    ms.step()                        # admit + first segment
+    (rid,) = list(ms._inflight)
+    (sid,) = ms._inflight[rid].copies
+    ms.step()                        # another segment: original is ahead
+    ms.stalled_slices.add(sid)       # transient hang
+    t0 = time.monotonic()
+    while ms.hedges == 0 and time.monotonic() - t0 < 30:
+        ms.step()                    # no progress on sid -> straggler
+    assert ms.hedges == 1
+    ms.stalled_slices.discard(sid)   # device recovers, segments ahead
     done = ms.run_until_idle()
-    _check_done(done, ref, 2)
-    assert ms.hedges >= 1
-    assert ms.stats["hedge_wins"] == 0      # original won every time
-    assert ms.stats["cancelled"] >= 1
+    _check_done(done, ref, 1)
+    assert ms.stats["hedge_wins"] == 0      # the original won
+    assert ms.stats["cancelled"] >= 1       # the clone was killed mid-flight
     for e in ms.engines.values():
         assert not e.busy()
 
 
+def test_healthy_loaded_slices_never_hedge(setup):
+    """Progress-gated straggler detection: slices that keep advancing are
+    never hedged, however small the expected time and however saturated
+    the pools — elapsed-only detection would clone most of this workload
+    (each streamed resident's wall time stretches with load)."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+                          hedge_factor=0.5)
+    ms.fixed_expected_s = 1e-6       # absurdly tight budget
+    ms.submit_many(_fresh())         # 9 requests > 8 slots: saturated
+    done = ms.run_until_idle()
+    _check_done(done, ref, 9)
+    assert ms.hedges == 0
+    assert ms.stats["cancelled"] == 0
+
+
 def test_resize_mid_trace_loses_no_requests(setup):
-    """Elastic re-slice to a different menu entry mid-trace: in-flight work
-    is requeued (exactly once), the shared admission backlog survives the
-    scheduler rebuild, engines are rebuilt, and every request completes
-    with the same tokens as an undisturbed run."""
+    """Elastic re-slice to a different menu entry mid-trace: every in-flight
+    request is requeued (exactly once, by rid), the shared admission
+    backlog survives the scheduler rebuild, engines are rebuilt, and every
+    request completes with the same tokens as an undisturbed run."""
     cfg, params, ref = setup
     # 9 requests > 2 slices x 4 slots: some stay in the shared admission
     # backlog at resize time, which a rebuild must not lose
     ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2)
     ms.submit_many(_fresh())
-    ms.step()                                # dispatch + first segments
+    ms.step()                                # stream + first segments
     assert ms._inflight                      # genuinely mid-trace
     assert ms.slot_scheduler.backlog() >= 1  # over-capacity work waiting
     requeued = ms.resize(n_slices=3)
@@ -182,11 +225,10 @@ def test_fail_slice_requeues_and_recovers(setup):
     cfg, params, ref = setup
     ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2)
     ms.submit_many(_fresh(2))
-    now = time.monotonic()
-    ms._form(now)
-    ms._dispatch(now)            # dispatched, not yet advanced (see above)
-    (sid,) = ms._inflight
-    assert ms.fail_slice(sid) is not None    # sole holder -> requeued
+    ms._dispatch(time.monotonic())  # streamed, not yet advanced (see above)
+    assert ms._inflight
+    sid = next(iter(next(iter(ms._inflight.values())).copies))
+    assert ms.fail_slice(sid)                # sole holder -> requeued
     done = ms.run_until_idle()
     _check_done(done, ref, 2)
     assert not ms.sched.slices[sid].healthy

@@ -155,6 +155,58 @@ def test_dpu_service_fused_pallas_launch():
                                    rtol=2e-2, atol=2e-2)
 
 
+def test_dpu_service_fused_image_launch():
+    """backend='dpu' image services auto-fuse the whole JPEG front-end —
+    decode-IDCT -> resize -> crop -> normalize — into ONE jitted program
+    per pow2-padded group (kernels/ops.image_pipeline_batch, mirroring the
+    audio path); outputs match the per-FU CPU pipeline within kernel
+    tolerance, and mixed qtables fall back to the per-FU batched path."""
+    svc = DpuService(DpuServiceConfig(
+        clock="virtual", dpu=DpuConfig(backend="dpu", modality="image"),
+        max_group=4))
+    assert svc._fused and svc._bucket
+    rng = np.random.default_rng(9)
+    qt = rng.integers(1, 16, (8, 8)).astype(np.float32)
+    cos = [rng.integers(-32, 32, (32, 32, 8, 8)).astype(np.float32)
+           for _ in range(3)]
+    reqs = [Request(rid=i, arrival=0.0, length=1.0,
+                    payload={"coeffs": c.copy(), "qtable": qt.copy()})
+            for i, c in enumerate(cos)]
+    for r in reqs:
+        assert svc.submit(r)
+    now, out = 0.0, []
+    while svc.busy():
+        svc.step(now)
+        out.extend(svc.poll(now))
+        nxt = svc.next_ready()
+        now = nxt if nxt is not None else now
+    assert len(out) == 3 and svc.stats["groups"] == 1  # one padded launch
+    for r in sorted(out, key=lambda r: r.rid):
+        np.testing.assert_allclose(r.payload, pp.image_pipeline(cos[r.rid], qt),
+                                   rtol=2e-2, atol=2e-2)
+    # mixed qtables: same group key (shapes match) but no shared table —
+    # the per-FU batched fallback must still produce per-request results
+    svc2 = DpuService(DpuServiceConfig(
+        clock="virtual", dpu=DpuConfig(backend="dpu", modality="image"),
+        max_group=4, bucket_pow2=False))
+    qts = [qt, qt + 1.0]
+    reqs2 = [Request(rid=i, arrival=0.0, length=1.0,
+                     payload={"coeffs": cos[i].copy(), "qtable": qts[i].copy()})
+             for i in range(2)]
+    for r in reqs2:
+        assert svc2.submit(r)
+    now, out2 = 0.0, []
+    while svc2.busy():
+        svc2.step(now)
+        out2.extend(svc2.poll(now))
+        nxt = svc2.next_ready()
+        now = nxt if nxt is not None else now
+    for r in sorted(out2, key=lambda r: r.rid):
+        np.testing.assert_allclose(
+            r.payload, pp.image_pipeline(cos[r.rid], qts[r.rid]),
+            rtol=2e-2, atol=2e-2)
+
+
 def test_wall_worker_failure_sheds_group_and_keeps_serving(setup):
     """A batched launch that raises (malformed payload) must shed ONLY its
     group — recorded in runtime.shed with the error kept on
@@ -321,6 +373,38 @@ def test_slo_shed_expired_requests(setup):
     assert rt.stats["shed_slo"] == 1 and rt.shed == [stale]
     done = rt.run_until_idle()
     assert [r.rid for r in done] == [fresh.rid]
+    _check(done, ref)
+
+
+def test_decode_backlog_folds_into_slo_shed(setup):
+    """ISSUE 5 satellite: the front-door SLO estimate folds in a decode-
+    backlog term (admission depth + slot occupancy x the measured execution
+    EMA), so a saturated slot pool sheds a request the DPU-only model (no
+    payload => zero preprocessing estimate) would have accepted — and then
+    starved waiting for a KV slot."""
+    cfg, ref = setup
+    rt = build_pipelined_runtime(cfg, ec=_ec(), rc=RuntimeConfig(slo_s=0.5))
+    # an idle engine sheds nothing: the backlog term is zero
+    assert rt.decode_backlog_s() == 0.0
+    probe = _mk(0)
+    assert rt.submit([probe], now=0.0) == 1
+    rt.run_until_idle()
+    rt.completed.clear()
+    # saturate: every slot occupied / queued, then pin the execution EMA so
+    # the estimate is deterministic (wall-measured timings vary per host)
+    reqs = [_mk(i) for i in range(1, len(SPEC))]
+    rt.submit(reqs, now=0.0)
+    rt.step(0.0)
+    assert rt.engine.admission_depth() + rt.engine.slots_in_use() > 0
+    rt.seg_ema = 0.2
+    assert rt.decode_backlog_s() > 0.5
+    late = Request(rid=6990, arrival=0.0, length=20.0, max_new_tokens=4)
+    assert rt.submit([late], now=0.0) == 0
+    assert rt.stats["shed_slo"] == 1 and late in rt.shed
+    # accepted survivors still complete bit-identically
+    rt.seg_ema = None  # stop shedding; drain
+    done = rt.run_until_idle()
+    assert {r.rid for r in done} == {r.rid for r in reqs}
     _check(done, ref)
 
 

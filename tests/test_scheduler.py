@@ -1,162 +1,93 @@
-"""Scheduler-layer semantics: SliceScheduler hedging/completion (regression
-guard before multi-slice real execution lands on the compile-once hot path)
-and SlotScheduler continuous-batching admission planning."""
+"""Scheduler-layer semantics: the per-request SliceScheduler contract
+(request -> slot streaming dispatch, per-request hedging with
+first-completion-wins, failure/resize requeue without duplication) and
+SlotScheduler continuous-batching admission planning. The simulator's
+batch-granularity scheduler keeps its own coverage in test_batching.py."""
 from repro.core.batching.buckets import Batch, BucketedBatcher, Request
-from repro.core.batching.policy import BatchPolicy, pick_segment_len
+from repro.core.batching.policy import BatchPolicy, pick_chunk_len, pick_segment_len
 from repro.core.batching.scheduler import SliceScheduler, SlotScheduler
 
 
-def _batch(rid0=0, n=2):
-    reqs = [Request(rid=rid0 + i, arrival=0.0, length=8.0) for i in range(n)]
-    return Batch(requests=reqs, bucket_id=0, formed_at=0.0)
+def test_pick_slice_least_loaded_with_free_slot():
+    s = SliceScheduler(3)
+    load = {0: 2, 1: 1, 2: 4}
+    assert s.pick_slice(load, capacity=4) == 1      # least loaded
+    assert s.pick_slice(load, capacity=4, exclude={1}) == 0
+    s.slices[1].healthy = False
+    assert s.pick_slice(load, capacity=4) == 0      # unhealthy skipped
+    assert s.pick_slice({0: 4, 1: 4, 2: 4}, capacity=4) is None  # all full
+    # ties break toward the slice that has completed the fewest requests
+    s2 = SliceScheduler(2)
+    s2.slices[0].completed = 5
+    assert s2.pick_slice({0: 1, 1: 1}, capacity=4) == 1
 
 
-def test_first_completion_cancels_hedge_twin():
+def test_first_completion_cancels_hedge_copies():
     s = SliceScheduler(3, hedge_factor=2.0)
-    b = _batch()
-    sid = s.dispatch(b, now=0.0, expected_s=1.0)
-    assert sid is not None
-    # past hedge_factor x expected -> straggler; twin gets the same batch
-    assert s.stragglers(now=3.0) == [sid]
-    twin = s.hedge(sid, now=3.0)
-    assert twin is not None and twin != sid
-    assert s.slices[twin].inflight is b
-    # first completion (the twin) wins and cancels the original in-flight copy
-    done = s.complete(twin, now=4.0)
-    assert done is b
-    assert s.slices[sid].inflight is None
-    assert s.slices[twin].inflight is None
-    assert all(r.completed_at == 4.0 for r in b.requests)
+    s.dispatch(7, 0, now=0.0, expected_s=1.0)
+    # past hedge_factor x expected -> straggler; a twin gets a copy
+    assert s.stragglers(now=3.0) == [(7, 0)]
+    s.hedge(7, now=3.0, twin_sid=2)
+    assert sorted(s.holders(7)) == [0, 2]
+    # first completion (the twin) wins; the loser's slice id comes back for
+    # mid-flight cancellation, and a later completion is a no-op
+    assert s.complete(7, 2) == [0]
+    assert s.complete(7, 0) is None
+    assert s.slices[2].completed == 1
+    assert s.slices[0].completed == 0
+    assert s.holders(7) == []
 
 
-def test_hedged_batch_never_double_completed():
-    s = SliceScheduler(2, hedge_factor=2.0)
-    b = _batch()
-    sid = s.dispatch(b, now=0.0, expected_s=1.0)
-    twin = s.hedge(sid, now=3.0)
-    first = s.complete(sid, now=3.5)
-    assert first is b
-    # the twin's copy was cancelled: completing it is a no-op
-    assert s.complete(twin, now=4.0) is None
-    assert s.slices[sid].completed == 1
-    assert s.slices[twin].completed == 0
-    assert all(r.completed_at == 3.5 for r in b.requests)
-
-
-def test_requeued_batch_not_double_completed():
-    s = SliceScheduler(2)
-    b = _batch()
-    sid = s.dispatch(b, now=0.0, expected_s=1.0)
-    # slice dies; its in-flight batch is re-queued exactly once
-    requeued = s.fail_slice(sid)
-    assert requeued is b
-    assert s.requeued == [b]
-    assert s.complete(sid, now=1.0) is None  # dead slice holds nothing
-    sid2 = s.dispatch(b, now=2.0, expected_s=1.0)
-    assert sid2 != sid
-    assert s.complete(sid2, now=3.0) is b
-    assert s.requeued == [b]  # re-queue list untouched by completion
-
-
-def test_hedge_needs_free_slice_and_marks_straggler():
-    s = SliceScheduler(1, hedge_factor=2.0)
-    b = _batch()
-    sid = s.dispatch(b, now=0.0, expected_s=1.0)
-    assert s.hedge(sid, now=5.0) is None  # no free twin available
-    s2 = SliceScheduler(2, hedge_factor=2.0)
-    sid = s2.dispatch(_batch(), now=0.0, expected_s=1.0)
-    s2.hedge(sid, now=3.0)
-    # an already-hedged straggler is not re-listed for hedging
-    assert sid not in s2.stragglers(now=10.0)
-    assert s2.hedges == 1
-
-
-def test_hedge_marks_twin_hedged_so_it_is_never_rehedged():
-    """Regression: the twin used to inherit expected_s/dispatched_at but not
-    hedged=True, so stragglers() could flag the twin and re-hedge the same
-    batch onto a third slice, multiplying speculative copies."""
+def test_hedged_pair_never_rehedged():
+    """Every holder of a hedged pair is marked hedged — without this,
+    stragglers() would flag the twin and re-hedge the same request onto a
+    third slice (and so on), multiplying speculative copies."""
     s = SliceScheduler(3, hedge_factor=2.0)
-    b = _batch()
-    sid = s.dispatch(b, now=0.0, expected_s=1.0)
-    twin = s.hedge(sid, now=3.0)
-    assert s.slices[twin].hedged is True
-    # far past any expected time: NEITHER holder is re-listed
+    s.dispatch(1, 0, now=0.0, expected_s=1.0)
+    s.hedge(1, now=3.0, twin_sid=1)
     assert s.stragglers(now=1000.0) == []
     assert s.hedges == 1
 
 
-def test_fail_slice_skips_requeue_when_other_holder_survives():
-    """Regression: failing one holder of a hedged pair used to requeue the
-    batch even though the other slice was still healthily running it,
-    duplicating execution and completion."""
+def test_uncalibrated_expected_time_never_straggles():
+    s = SliceScheduler(2, hedge_factor=2.0)
+    s.dispatch(1, 0, now=0.0, expected_s=0.0)  # EMA not yet calibrated
+    assert s.stragglers(now=1e9) == []
+
+
+def test_fail_slice_requeues_only_sole_holders():
+    """Failing one holder of a hedged pair must NOT requeue the request —
+    the surviving copy completes alone (re-armed for hedging); requeueing
+    it would duplicate execution and completion. A sole holder's requests
+    requeue exactly once."""
     # twin dies, original survives
     s = SliceScheduler(2, hedge_factor=2.0)
-    b = _batch()
-    sid = s.dispatch(b, 0.0, 1.0)
-    twin = s.hedge(sid, 3.0)
-    assert s.fail_slice(twin) is None
-    assert s.requeued == []
-    assert s.slices[sid].hedged is False  # single holder again: re-armed
-    assert s.complete(sid, 4.0) is b
+    s.dispatch(1, 0, 0.0, 1.0)
+    s.hedge(1, 3.0, twin_sid=1)
+    assert s.fail_slice(1) == []
+    assert s.holders(1) == [0]
+    assert s.stragglers(now=1000.0) == [(1, 0)]  # survivor re-armed
+    assert s.complete(1, 0) == []
     # original dies, twin survives
     s2 = SliceScheduler(2, hedge_factor=2.0)
-    b2 = _batch(rid0=10)
-    sid2 = s2.dispatch(b2, 0.0, 1.0)
-    twin2 = s2.hedge(sid2, 3.0)
-    assert s2.fail_slice(sid2) is None
-    assert s2.requeued == []
-    assert s2.complete(twin2, 4.0) is b2
-    # an unhedged holder still requeues exactly once
+    s2.dispatch(2, 0, 0.0, 1.0)
+    s2.hedge(2, 3.0, twin_sid=1)
+    assert s2.fail_slice(0) == []
+    assert s2.complete(2, 1) == []
+    # a sole holder's requests requeue exactly once
     s3 = SliceScheduler(2)
-    b3 = _batch(rid0=20)
-    sid3 = s3.dispatch(b3, 0.0, 1.0)
-    assert s3.fail_slice(sid3) is b3
-    assert s3.requeued == [b3]
+    s3.dispatch(3, 0, 0.0, 1.0)
+    s3.dispatch(4, 0, 0.0, 1.0)
+    assert sorted(s3.fail_slice(0)) == [3, 4]
+    assert s3.holders(3) == [] and s3.holders(4) == []
+    assert s3.complete(3, 0) is None  # dead slice holds nothing now
 
 
-def test_resize_dedupes_dropped_twins_and_keeps_survivors():
-    """Regression: resize used to requeue each dropped holder's copy, so a
-    hedged batch whose two holders were both dropped came back twice, and
-    one whose other holder survived came back while still running."""
-    # both holders dropped -> requeued exactly once
-    s = SliceScheduler(4, hedge_factor=2.0)
-    s.slices[0].healthy = False
-    s.slices[1].healthy = False
-    b = _batch()
-    sid = s.dispatch(b, 0.0, 1.0)
-    twin = s.hedge(sid, 3.0)
-    assert {sid, twin} == {2, 3}
-    assert s.resize(2) == [b]
-    assert s.requeued == [b]
-    # other holder survives -> nothing requeued, survivor re-armed
-    s2 = SliceScheduler(3, hedge_factor=2.0)
-    b2 = _batch(rid0=10)
-    sid2 = s2.dispatch(b2, 0.0, 1.0)   # -> slice 0
-    s2.hedge(sid2, 3.0)                # -> slice 1
-    assert s2.resize(1) == []
-    assert s2.requeued == []
-    assert s2.slices[0].inflight is b2
-    assert s2.slices[0].hedged is False
-
-
-def test_complete_resets_twin_state_and_free_slices_honors_busy_until():
-    """Regression: complete() used to cancel the twin's inflight but leave
-    hedged/expected_s/dispatched_at stale, and free_slices(now) ignored
-    busy_until entirely."""
-    s = SliceScheduler(2, hedge_factor=2.0)
-    b = _batch()
-    sid = s.dispatch(b, now=0.0, expected_s=1.0)
-    assert s.slices[sid].busy_until == 1.0  # dispatch reserves the slice
-    twin = s.hedge(sid, now=3.0)
-    assert s.complete(sid, now=3.5) is b
-    ts = s.slices[twin]
-    assert ts.inflight is None and ts.hedged is False
-    assert ts.expected_s == 0.0 and ts.dispatched_at == 0.0
-    assert ts.busy_until == 0.0
-    # an idle slice reserved until t=10 is not handed out before then
-    s.slices[sid].busy_until = 10.0
-    assert s.free_slices(5.0) == [twin]
-    assert sorted(s.free_slices(11.0)) == [sid, twin]
+def test_unknown_rid_completion_is_noop():
+    s = SliceScheduler(2)
+    s.dispatch(2, 1, 0.0, 1.0)
+    assert s.complete(99, 0) is None   # never dispatched
+    assert s.holders(2) == [1]         # tracked work untouched
 
 
 def test_slot_scheduler_cancel_drops_backlogged_rids():
@@ -193,6 +124,17 @@ def test_pick_segment_len_rules():
     assert pick_segment_len(cs, waiting=0, free_slots=4) == 16
     # a single choice is always returned
     assert pick_segment_len((8,), waiting=5, free_slots=0) == 8
+
+
+def test_pick_chunk_len_rules():
+    cs = (8, 16, 64)
+    # resident decoders + queued work -> interleave as finely as possible
+    assert pick_chunk_len(cs, resident=3, waiting=2) == 8
+    # resident decoders only -> middle ground
+    assert pick_chunk_len(cs, resident=3) == 16
+    # empty pool -> nobody stalls; amortize dispatch (longest chunk)
+    assert pick_chunk_len(cs, resident=0) == 64
+    assert pick_chunk_len((32,), resident=5, waiting=5) == 32
 
 
 def test_slot_scheduler_admits_oldest_first_and_respects_free_slots():
