@@ -57,10 +57,18 @@ chunk-by-chunk between decode segments); the new path must win p99 AND
 useful tokens/s with outputs bit-identical to the unchunked single-slice
 engine and per-slice executables bounded by #chunk buckets + 1 segment.
 
+Part 6 — radix prefix KV cache (PR 6): a template-heavy Poisson trace (~80%
+of prompt tokens shared through one template, heavy-tailed suffixes) through
+the chunked engine with the prefix cache off vs on; a hit scatters stored
+prefix K/V into the slot and chunk-prefills only the suffix. Gates: >= 50%
+of prompt tokens served from the store, cache-on wins useful tokens/s AND
+TTFT p99, bit-identical outputs, bounded executables (one scatter program).
+
 Measures useful tokens/s (per-request budgets only — run-to-completion's
-overshoot doesn't count), p50/p99 request latency (completed - arrival), and
-trace counts; writes BENCH_serve.json (or --out). --smoke shrinks the
-workload for CI.
+overshoot doesn't count), p50/p99 request latency (completed - arrival),
+p50/p99 TTFT (first_token_at - arrival, in every section), and trace
+counts; writes BENCH_serve.json (or --out). --smoke shrinks the workload
+for CI.
 
     PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--out F]
 """
@@ -117,6 +125,12 @@ def run_path(engine: ServingEngine, stream) -> dict:
 
     t0 = time.monotonic()
     for b in stream[1:]:
+        # stamp arrival at dispatch so TTFT (first_token_at - arrival) is
+        # meaningful here too: under run-to-completion the first observable
+        # token is the finished batch, so TTFT == full batch execution
+        now = time.monotonic()
+        for r in b.requests:
+            r.arrival = now
         engine._execute(b)
     steady_s = time.monotonic() - t0
 
@@ -125,6 +139,7 @@ def run_path(engine: ServingEngine, stream) -> dict:
     lat = sorted(engine.batch_exec_s[1:])
     p95 = lat[max(0, int(round(0.95 * len(lat))) - 1)] if lat else float("nan")
     s = dict(engine.stats)
+    tq = _ttft_quantile([r for b in stream[1:] for r in b.requests])
     return {
         "batches": len(stream),
         "steady_batches": n_steady,
@@ -132,6 +147,8 @@ def run_path(engine: ServingEngine, stream) -> dict:
         "steady_s": round(steady_s, 4),
         "tokens_per_s": round(toks / steady_s, 1),
         "p95_batch_ms": round(1e3 * p95, 2),
+        "ttft_p50_ms": round(1e3 * tq(0.50), 2),
+        "ttft_p99_ms": round(1e3 * tq(0.99), 2),
         "prefill_traces": s["prefill_traces"],
         "generate_traces": s["generate_traces"],
         "decode_step_traces": s["decode_step_traces"],
@@ -202,13 +219,13 @@ def _warmup(engine: ServingEngine, seed: int = 99):
     engine.slot_occupancy.clear()
 
 
-def _replay(engine, rel, spec):
+def _replay(engine, rel, spec, factory=None):
     """Wall-clock Poisson replay, shared by the single- and multi-slice
     sections (both engines expose submit/step/busy/batcher): submit each
     request when its arrival time passes, step the engine in between.
     Returns (makespan_s, requests)."""
     t0 = time.monotonic()
-    reqs = _fresh_requests(rel, spec, t0)
+    reqs = (_fresh_requests if factory is None else factory)(rel, spec, t0)
     i = 0
     while i < len(reqs) or engine.busy():
         now = time.monotonic()
@@ -231,6 +248,17 @@ def _latency_quantile(done):
     return lambda p: float(lat[min(len(lat) - 1, int(np.ceil(p * len(lat))) - 1)])
 
 
+def _ttft_quantile(done):
+    """Time-to-first-token quantiles (first_token_at - arrival): the latency
+    the prefix cache attacks — a hit skips most of prefill, so the first
+    token lands segments earlier even when total decode time is unchanged."""
+    ts = np.sort([r.first_token_at - r.arrival for r in done
+                  if r.first_token_at is not None])
+    if not len(ts):
+        return lambda p: float("nan")
+    return lambda p: float(ts[min(len(ts) - 1, int(np.ceil(p * len(ts))) - 1)])
+
+
 def run_trace(engine: ServingEngine, rel, spec) -> dict:
     """Replay the trace through one engine; measure useful tokens/s +
     request latency + trace counts."""
@@ -248,6 +276,7 @@ def run_trace(engine: ServingEngine, rel, spec) -> dict:
     assert len(done) == len(reqs), (len(done), len(reqs))
     useful = sum(len(r.payload) for r in done)
     q = _latency_quantile(done)
+    tq = _ttft_quantile(done)
     out = {
         "requests": len(done),
         "makespan_s": round(makespan, 4),
@@ -255,6 +284,8 @@ def run_trace(engine: ServingEngine, rel, spec) -> dict:
         "tokens_per_s": round(useful / makespan, 1),
         "p50_latency_ms": round(1e3 * q(0.50), 2),
         "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "ttft_p50_ms": round(1e3 * tq(0.50), 2),
+        "ttft_p99_ms": round(1e3 * tq(0.99), 2),
         "trace_count_total": traces_after,
         "trace_count_during_trace": traces_after - traces_before,
     }
@@ -361,6 +392,8 @@ def run_trace_multi(ms: MultiSliceEngine, rel, spec) -> dict:
         "tokens_per_s": round(useful / makespan, 1),
         "p50_latency_ms": round(1e3 * q(0.50), 2),
         "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "ttft_p50_ms": round(1e3 * _ttft_quantile(done)(0.50), 2),
+        "ttft_p99_ms": round(1e3 * _ttft_quantile(done)(0.99), 2),
         "hedges": ms.hedges - hedges_before,
         "dispatched_requests": ms.stats["dispatched"] - dispatched_before,
         "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
@@ -506,6 +539,8 @@ def bench_chunked_prefill(cfg, trace_n: int, mean_gap_s: float) -> dict:
             "tokens_per_s": round(useful / makespan, 1),
             "p50_latency_ms": round(1e3 * q(0.50), 2),
             "p99_latency_ms": round(1e3 * q(0.99), 2),
+            "ttft_p50_ms": round(1e3 * _ttft_quantile(done)(0.50), 2),
+            "ttft_p99_ms": round(1e3 * _ttft_quantile(done)(0.99), 2),
             "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
             "hedges": ms.hedges - hedges_b,
             "trace_count_during_trace": sum(ta.values()) - sum(tb.values()),
@@ -559,6 +594,203 @@ def bench_chunked_prefill(cfg, trace_n: int, mean_gap_s: float) -> dict:
             and all(v == 3
                     for v in stream_res["per_slice_traces"].values())
         ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Part 6 — radix prefix KV cache: shared-prefix prefill reuse (PR 6)
+# ---------------------------------------------------------------------------
+#
+# ISSUE 6 tentpole: template-heavy serving (system prompts, few-shot
+# scaffolds) re-prefills the same prefix tokens for every request. The radix
+# prefix store keeps retired requests' K/V keyed by token prefix; a new
+# request whose prompt extends a stored prefix scatters the cached rows into
+# its slot and chunk-prefills ONLY the suffix. Same Poisson trace (~80% of
+# prompt tokens shared via one template, heavy-tailed suffixes, a cold
+# minority) through the same chunked single-slice engine twice:
+#
+#   cache_off — prefix_cache_bytes=0: every prompt prefills cold (the
+#               parts-1..5 engine, unchanged);
+#   cache_on  — radix store enabled: later template requests resume
+#               mid-prefill from cached K/V.
+#
+# Gates: >= 50% of measured-window prompt tokens come from the store
+# (prefill FLOPs saved — token count IS the FLOPs ratio at fixed bucket),
+# hit rate > 0, cache-on wins useful tokens/s AND TTFT p99, outputs
+# bit-identical per request, executables bounded (zero new programs during
+# the measured window; ONE scatter program total — a single lp bucket).
+
+PREFIX_TRACE_N = 32
+PREFIX_MEAN_GAP_S = 0.03
+PREFIX_TEMPLATE_LEN = 200
+PREFIX_MAX_PROMPT = 256
+PREFIX_CHUNK = 64
+PREFIX_BUDGETS = (4, 8, 16)      # prefill-heavy regime: TTFT is the story
+PREFIX_MAX_NEW = 16
+PREFIX_CACHE_BYTES = 256 << 20   # generous: eviction races live in tests
+PREFIX_TEMPLATE_FRAC = 0.85
+
+
+def make_template_trace(cfg, n: int, mean_gap_s: float, seed: int = 47):
+    """Poisson arrivals; ~85% of requests share one 200-token template with
+    heavy-tailed suffixes (1..55, exponential), the rest are cold random
+    prompts of comparable length — every prompt lands in the lp=256 bucket.
+    Returns (rel, spec, template, shared_token_frac); spec entries are
+    (rid, prompt, budget)."""
+    rng = np.random.default_rng(seed)
+    rel = np.cumsum(rng.exponential(mean_gap_s, n))
+    template = rng.integers(0, cfg.vocab, PREFIX_TEMPLATE_LEN).astype(np.int32)
+    spec, shared, total = [], 0, 0
+    for i in range(n):
+        if rng.random() < PREFIX_TEMPLATE_FRAC:
+            sl = 1 + min(54, int(rng.exponential(12.0)))
+            prompt = np.concatenate(
+                [template, rng.integers(0, cfg.vocab, sl).astype(np.int32)])
+            shared += PREFIX_TEMPLATE_LEN
+        else:
+            prompt = rng.integers(
+                0, cfg.vocab, int(rng.integers(201, 256))).astype(np.int32)
+        spec.append((4000 + i, prompt, int(rng.choice(PREFIX_BUDGETS))))
+        total += len(prompt)
+    return rel, spec, template, shared / total
+
+
+def _fresh_prompt_requests(rel, spec, t0: float):
+    # prompt arrays are read-only: both paths may share them
+    return [
+        Request(rid=rid, arrival=t0 + float(rel[i]), length=float(len(p)),
+                prompt=p, max_new_tokens=b)
+        for i, (rid, p, b) in enumerate(spec)
+    ]
+
+
+def _warmup_prefix(engine: ServingEngine, cfg, template) -> dict:
+    """Compile every executable the replay can hit — the (chunk, 256)
+    program, the segment, and (cache on) the scatter program via a wave of
+    template hits — and seed the store so the measured window starts warm.
+    Returns the post-warmup stats snapshot."""
+    rng = np.random.default_rng(53)
+    rid = 940000
+    for wave in range(2):  # wave 2 takes hits -> scatter program compiled
+        reqs = []
+        for k in range(engine.ec.max_slots):
+            sl = 1 + int(rng.integers(1, 40))
+            prompt = np.concatenate(
+                [template, rng.integers(0, cfg.vocab, sl).astype(np.int32)])
+            reqs.append(Request(rid=(rid := rid + 1), arrival=0.0,
+                                length=float(len(prompt)), prompt=prompt,
+                                max_new_tokens=int(min(PREFIX_BUDGETS))))
+        engine.submit_many(reqs)
+        engine.run_until_idle()
+    engine.completed.clear()
+    engine.batch_exec_s.clear()
+    engine.slot_occupancy.clear()
+    return dict(engine.stats)
+
+
+def bench_prefix_cache(cfg, trace_n: int, mean_gap_s: float) -> dict:
+    rel, spec, template, shared_frac = make_template_trace(
+        cfg, trace_n, mean_gap_s)
+    base_ec = EngineConfig(
+        max_new_tokens=PREFIX_MAX_NEW, continuous=True, max_slots=MAX_SLOTS,
+        segment_len=SEGMENT_LEN, max_prompt_len=PREFIX_MAX_PROMPT,
+        chunk_lens=(PREFIX_CHUNK,))
+
+    def run(engine):
+        before = _warmup_prefix(engine, cfg, template)
+        tb = (before["prefill_traces"] + before["generate_traces"]
+              + before["segment_traces"] + before["decode_step_traces"]
+              + before["prefix_scatter_traces"])
+        makespan, reqs = _replay(engine, rel, spec,
+                                 factory=_fresh_prompt_requests)
+        s = engine.stats
+        ta = (s["prefill_traces"] + s["generate_traces"]
+              + s["segment_traces"] + s["decode_step_traces"]
+              + s["prefix_scatter_traces"])
+        done = engine.completed
+        assert len(done) == len(reqs), (len(done), len(reqs))
+        useful = sum(len(r.payload) for r in done)
+        q = _latency_quantile(done)
+        tq = _ttft_quantile(done)
+        hits = s["prefix_hits"] - before["prefix_hits"]
+        hit_toks = s["prefix_hit_tokens"] - before["prefix_hit_tokens"]
+        prompt_toks = (s["prefix_prompt_tokens"]
+                       - before["prefix_prompt_tokens"])
+        res = {
+            "requests": len(done),
+            "makespan_s": round(makespan, 4),
+            "useful_tokens": useful,
+            "tokens_per_s": round(useful / makespan, 1),
+            "p50_latency_ms": round(1e3 * q(0.50), 2),
+            "p99_latency_ms": round(1e3 * q(0.99), 2),
+            "ttft_p50_ms": round(1e3 * tq(0.50), 2),
+            "ttft_p99_ms": round(1e3 * tq(0.99), 2),
+            "mean_slot_occupancy": round(engine.mean_slot_occupancy(), 3),
+            "prefix_hits": hits,
+            "prefix_hit_rate": round(hits / len(done), 3),
+            "prefix_hit_tokens": hit_toks,
+            "prompt_tokens": prompt_toks,
+            "prefill_flops_saved_frac": round(
+                hit_toks / prompt_toks, 3) if prompt_toks else 0.0,
+            "prefix_scatter_traces": s["prefix_scatter_traces"],
+            "trace_count_during_trace": ta - tb,
+        }
+        return res, {r.rid: np.asarray(r.payload) for r in done}
+
+    from dataclasses import replace as dc_replace
+
+    off = build_engine(cfg, ec=base_ec)
+    off_res, off_out = run(off)
+
+    on = build_engine(cfg, ec=dc_replace(
+        base_ec, prefix_cache_bytes=PREFIX_CACHE_BYTES))
+    on.params = off.params
+    on_res, on_out = run(on)
+    store = on.prefix_store
+    on_res["store"] = {
+        "bytes_used": store.bytes_used,
+        "bytes_budget": store.bytes_budget,
+        "nodes": store.node_count(),
+        "evictions": store.stats["evictions"],
+    }
+
+    bit_identical = set(on_out) == set(off_out) and all(
+        np.array_equal(on_out[k], off_out[k]) for k in off_out)
+    return {
+        "trace": {
+            "requests": trace_n,
+            "mean_interarrival_ms": round(1e3 * mean_gap_s, 1),
+            "budgets": list(PREFIX_BUDGETS),
+            "template_len": PREFIX_TEMPLATE_LEN,
+            "template_request_frac": PREFIX_TEMPLATE_FRAC,
+            "shared_prefix_token_frac": round(shared_frac, 3),
+            "max_prompt_len": PREFIX_MAX_PROMPT,
+            "chunk_len": PREFIX_CHUNK,
+            "max_slots": MAX_SLOTS,
+            "segment_len": SEGMENT_LEN,
+            "cache_bytes": PREFIX_CACHE_BYTES,
+        },
+        "cache_off": off_res,
+        "cache_on": on_res,
+        "tokens_per_s_speedup": round(
+            on_res["tokens_per_s"] / off_res["tokens_per_s"], 2),
+        "ttft_p99_speedup": round(
+            off_res["ttft_p99_ms"] / on_res["ttft_p99_ms"], 2),
+        "p99_latency_speedup": round(
+            off_res["p99_latency_ms"] / on_res["p99_latency_ms"], 2),
+        "hit_rate": on_res["prefix_hit_rate"],
+        "prefill_flops_saved_frac": on_res["prefill_flops_saved_frac"],
+        "flops_saved_gate": on_res["prefill_flops_saved_frac"] >= 0.5,
+        "wins": (on_res["tokens_per_s"] > off_res["tokens_per_s"]
+                 and on_res["ttft_p99_ms"] < off_res["ttft_p99_ms"]),
+        "bit_identical": bit_identical,
+        # one (64, 256) chunk program + one segment compiled in warmup, one
+        # scatter program for the single lp bucket, nothing new during the
+        # measured window — on either path
+        "executables_bounded": (
+            on_res["trace_count_during_trace"] == 0
+            and off_res["trace_count_during_trace"] == 0
+            and on_res["prefix_scatter_traces"] == 1),
     }
 
 
@@ -630,6 +862,7 @@ def _overlap_metrics(done, reqs, makespan, traces_before, traces_after):
     assert len(done) == len(reqs), (len(done), len(reqs))
     useful = sum(len(r.payload) for r in done)
     q = _latency_quantile(done)
+    tq = _ttft_quantile(done)
     return {
         "requests": len(done),
         "makespan_s": round(makespan, 4),
@@ -637,6 +870,8 @@ def _overlap_metrics(done, reqs, makespan, traces_before, traces_after):
         "tokens_per_s": round(useful / makespan, 1),
         "p50_latency_ms": round(1e3 * q(0.50), 2),
         "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "ttft_p50_ms": round(1e3 * tq(0.50), 2),
+        "ttft_p99_ms": round(1e3 * tq(0.99), 2),
         "trace_count_during_trace": sum(traces_after.values())
         - sum(traces_before.values()),
         "per_slice_traces": {str(k): v for k, v in traces_after.items()},
@@ -793,6 +1028,8 @@ def main():
         # call-count-sensitive streaming-vs-batching comparison
         "chunked_prefill": bench_chunked_prefill(
             cfg, CHUNK_TRACE_N, CHUNK_MEAN_GAP_S),
+        "prefix_cache": bench_prefix_cache(
+            cfg, PREFIX_TRACE_N, PREFIX_MEAN_GAP_S),
         "multi_slice": bench_multi_slice(cfg, TRACE_N, MEAN_INTERARRIVAL_S),
         "preprocess_overlap": bench_preprocess_overlap(
             cfg, TRACE_N, MEAN_INTERARRIVAL_S),
@@ -828,6 +1065,13 @@ def main():
           f"{cp['stream_chunked']['mean_slot_occupancy']:.3f}, "
           f"bit_identical={cp['bit_identical_to_unchunked']}, "
           f"executables_bounded={cp['executables_bounded']}")
+    px = result["prefix_cache"]
+    print(f"prefix:       {px['tokens_per_s_speedup']:.2f}x useful tokens/s, "
+          f"{px['ttft_p99_speedup']:.2f}x TTFT p99 (cache on vs off), "
+          f"hit_rate={px['hit_rate']:.3f}, "
+          f"flops_saved={px['prefill_flops_saved_frac']:.3f}, "
+          f"bit_identical={px['bit_identical']}, "
+          f"executables_bounded={px['executables_bounded']}")
 
 
 if __name__ == "__main__":

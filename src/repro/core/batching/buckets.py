@@ -39,6 +39,11 @@ class Request:
     prompt: Any = None
     preprocessed_at: Optional[float] = None
     dispatched_at: Optional[float] = None
+    # TTFT telemetry: when the request's FIRST output token materialized
+    # (prefill/final-chunk greedy token on the slot-pool path; batch finish
+    # on run-to-completion, which has no earlier observable point). Prefix
+    # cache and SLO gates key on TTFT, not just completion latency.
+    first_token_at: Optional[float] = None
     completed_at: Optional[float] = None
 
     def ready_at(self) -> float:

@@ -57,7 +57,8 @@ def pick_segment_len(choices: Sequence[int], *, waiting: int, free_slots: int) -
 
 
 def pick_chunk_len(choices: Sequence[int], *, resident: int,
-                   waiting: int = 0) -> int:
+                   waiting: int = 0,
+                   profile: Optional[KneeProfile] = None) -> int:
     """Prefill chunk length for chunked admission, against the knee.
 
     Chunk length is the prefill-side twin of pick_segment_len's dial: a
@@ -73,11 +74,23 @@ def pick_chunk_len(choices: Sequence[int], *, resident: int,
       * empty pool                        -> longest chunk (nobody stalls;
         amortize dispatch overhead).
 
+    With a knee `profile` for the prompt's bucket (core/batching/knee.py),
+    the resident-decoder cases stop guessing: a chunk call stalls resident
+    rows for roughly the latency of a batch of chunk-many token positions,
+    so the MEASURED batch knee — the largest size whose latency is still
+    ~flat — bounds the interruption. We take the largest choice at or under
+    the knee (pure throughput), dropping to the smallest knee-safe choice
+    under queue pressure; the pressure heuristic above stays the fallback
+    when no profile is available.
+
     The engine chunks a prompt bucket only when the bucket is strictly
     longer than the returned length (a prompt that fits one chunk admits
     monolithically through its bucket executable)."""
     cs = sorted(set(int(c) for c in choices))
     assert cs and cs[0] > 0, choices
+    if resident and profile is not None:
+        safe = [c for c in cs if c <= profile.batch_knee] or cs[:1]
+        return safe[0] if waiting else safe[-1]
     if resident and waiting:
         return cs[0]
     if resident:

@@ -412,6 +412,24 @@ def scatter_into_slots(pool_cache, prefill_cache, slot_ids, clock, lp: int):
     return out
 
 
+def scatter_prefix_into_slots(pool_cache, prefix_cache, slot_ids, lp: int):
+    """Admit CACHED prefix K/V (radix prefix-store hits) into pool rows.
+
+    prefix_cache is shaped exactly like a prefill cache for bucket lp
+    (leaves [B, lp, kh, hd] / stacked [nb, B, lp, kh, hd]) but its rows are
+    assembled host-side from the prefix store: true positions [0, m) carry
+    a previous request's extracted K/V (bit-identical to what this
+    request's own prefill would write there, by the canonical true-position
+    read — see _attn_chunk), positions [m, lp) are zero. The engine then
+    resumes chunked prefill at the row's aligned column off + m via
+    prefill_chunk_into_slots' per-row start operand, so the suffix chunks
+    overwrite [m, n) and everything past n stays masked — no new executable
+    shapes beyond one scatter program per bucket. Rows whose slot id is out
+    of range (non-hit rows of the admission) are dropped."""
+    return scatter_into_slots(pool_cache, prefix_cache, slot_ids,
+                              jnp.int32(0), lp)
+
+
 def prefill_into_slots(params, tokens, pool_cache, slot_ids, clock,
                        cfg: ModelConfig, *, pos_offset=None):
     """Fused admission: prefill a left-padded (batch, lp) prompt bucket and
@@ -468,31 +486,35 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     )
 
 
-def _attn_chunk(x, p, cfg, cache, qpos, valid, off, lp: int):
+def _attn_chunk(x, p, cfg, cache, qpos, valid, lp: int):
     """Multi-token cache-extending attention for one prefill chunk.
 
     x: [B, C, D] chunk hidden states; cache: {'k','v'} slot-pool rows
     [B, wc, ...]; qpos: [B, C] TRUE positions (negative = left-pad or a row
-    not part of this admission); valid = qpos >= 0; off: [B] left-pad
-    amounts; lp: the padded prompt bucket (static). All prompt positions
+    not part of this admission); valid = qpos >= 0; lp: the padded prompt
+    bucket (static). All prompt positions
     live in the ring PREFIX [0, lp) (ring slot == true position; no wrap:
     the ring holds the whole bucket by pool sizing), so only that prefix is
     read, written, and attended — chunk attention costs what the bucket's
     monolithic prefill costs, not a full-ring scan.
 
-    Bit-identity detail: the attention READ presents keys in monolithic
-    prefill's PADDED-AXIS layout — each row's true-position prefix gathered
-    back to axis col = true position + off (the exact inverse of the shift
-    _attn_forward applies when emitting the cache), with kpos = col - off.
-    Valid keys, causally-masked future keys, and left-pad masking then
-    occupy the SAME axis columns as in `prefill`, so XLA's reduction
-    pairing over the key axis matches bit for bit. Presenting the prefix
-    directly (valid-then-masked instead of pad-then-valid) flips zero
-    PLACEMENT in the contraction, and at lp=256 that re-pairs softmax/PV
-    summands and occasionally flips a downstream argmax (found by the PR 5
-    chunked-prefill bench's bit-identity gate). Masked columns carry
-    whatever the gather clamps to — like prefill's pad-col keys they are
-    exact-zero probabilities, never read."""
+    Bit-identity detail — the CANONICAL TRUE-POSITION read contract: the
+    attention READ presents the pool rows directly, axis column t = the
+    roped key at true position t (exactly how the pool stores them), with
+    kpos = t for columns up to the row's current chunk end and -1 beyond.
+    Monolithic serving prefill (_attn_forward with pos_offset) presents the
+    SAME layout — keys shifted to true-position columns over the same axis
+    length lp — so XLA's reduction pairing over the key axis matches bit
+    for bit between chunked and monolithic admission. Because the layout no
+    longer encodes the row's left-pad offset, the K/V bits a prefill writes
+    at true position t are a function of (tokens[0..t], lp) ONLY — the
+    prefix-shareability invariant the radix prefix cache relies on: K/V
+    extracted from one request's pool row can be scattered into another
+    request's row (any prompt length within the bucket) and the resumed
+    suffix chunks reproduce the cold prefill bit for bit. Columns past the
+    chunk end carry stale pool bytes or zeros — masked to exact-zero
+    probabilities (scores replaced by NEG_INF before the max), never
+    read."""
     dt = x.dtype
     B, C, _ = x.shape
     q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(dt))
@@ -506,21 +528,13 @@ def _attn_chunk(x, p, cfg, cache, qpos, valid, off, lp: int):
     cvp = jax.lax.slice_in_dim(cache["v"], 0, lp, axis=1)
     ckp = ckp.at[rows, slot].set(k1.astype(ckp.dtype), mode="drop")
     cvp = cvp.at[rows, slot].set(v1.astype(cvp.dtype), mode="drop")
-    # padded-axis view: axis col j holds true position j - off (row-wise)
+    # canonical true-position read: axis col t IS true position t; valid up
+    # to the row's last query this chunk, stale/future columns masked
     lp_idx = jnp.arange(lp, dtype=jnp.int32)
-    gi = lp_idx[None, :] - off[:, None].astype(jnp.int32)       # [B, lp]
-    kpos = jnp.where((gi >= 0) & (gi <= qpos[:, -1:]), gi, -1)
-    gidx = jnp.maximum(gi, 0)
-
-    def _unshift(a):
-        return jnp.take_along_axis(
-            a, jnp.broadcast_to(gidx[..., None, None], a.shape[:1] + (lp,) + a.shape[2:]),
-            axis=1,
-        )
-
+    kpos = jnp.where(lp_idx[None, :] <= qpos[:, -1:], lp_idx[None, :], -1)
     kh, g, hd = q.shape[2], q.shape[3], q.shape[4]
     o = L.attention_dense(
-        q.reshape(B, C, kh * g, hd), _unshift(ckp), _unshift(cvp), qpos, kpos,
+        q.reshape(B, C, kh * g, hd), ckp, cvp, qpos, kpos,
         causal=True, window=0
     )
     out = jnp.einsum("bskgh,kghd->bsd", o.reshape(B, C, kh, g, hd),
@@ -574,7 +588,7 @@ def prefill_chunk_into_slots(params, tokens, pool_cache, start,
     def sub_step(x, sub, csub):
         h = L.rmsnorm(x, sub["mixer"]["ln"], cfg.norm_eps)
         o, nc = _attn_chunk(h, sub["mixer"], cfg, csub["mixer"], qpos, valid,
-                            off, lp)
+                            lp)
         x = x + o
         x, _ = _ffn_forward(x, sub, cfg, ("attn", "mlp"))
         return x, {"mixer": nc}
@@ -650,6 +664,31 @@ def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=N
         kpos_ = qpos
         q = _rope4(q, qpos, cfg.rope_theta)
         k = L.apply_rope(k, qpos, cfg.rope_theta)
+        if pos_offset is not None:
+            # Canonical TRUE-POSITION presentation for serving prefill:
+            # shift each row left by its pad amount so axis col t holds the
+            # roped key/value at true position t (cols >= true length are
+            # zero, kpos -1). This is the same layout the slot pool stores
+            # and _attn_chunk reads, so chunked resume stays bit-identical
+            # to monolithic admission — and because the layout no longer
+            # encodes the row's left-pad offset, K/V bits at position t
+            # depend on (tokens[0..t], S) only: the prefix-shareability
+            # invariant behind the radix prefix cache. The shifted tensors
+            # double as the emitted cache below (one gather, not two).
+            off = pos_offset[:, None].astype(jnp.int32)
+            s_idx = jnp.arange(S, dtype=jnp.int32)
+            gi = s_idx[None, :] + off
+            keep = (gi < S)[..., None, None]
+            gidx = jnp.minimum(gi, S - 1)
+
+            def _to_true(a):
+                g = jnp.take_along_axis(
+                    a, jnp.broadcast_to(gidx[..., None, None], a.shape), axis=1
+                )
+                return jnp.where(keep, g, jnp.zeros((), a.dtype))
+
+            k, v = _to_true(k), _to_true(v)
+            kpos_ = jnp.where(gi < S, s_idx[None, :], -1)
     else:
         qpos = jnp.arange(S, dtype=jnp.int32)
         if pos_offset is not None:
@@ -671,29 +710,13 @@ def _attn_forward(x, p, cfg, *, causal=True, window=0, pos0=0, kv_x=None, kpos=N
             if wc >= S:
                 # decode headroom: slots S..wc-1 stay empty (ring positions
                 # j - wc < 0 => masked invalid until decode writes them)
+                # with pos_offset the serving read above already shifted k/v
+                # to TRUE-POSITION layout (cache slot t = token at true
+                # position t, slot >= true length zero), so the emitted
+                # cache is a plain pad — decode reads/writes the same axis
+                # layout as an unpadded per-request cache (see _attn_decode)
                 ck = jnp.pad(k, ((0, 0), (0, wc - S), (0, 0), (0, 0))).astype(dt)
                 cv = jnp.pad(v, ((0, 0), (0, wc - S), (0, 0), (0, 0))).astype(dt)
-                if pos_offset is not None:
-                    # TRUE-POSITION cache layout for left-padded rows: shift
-                    # each row left by its pad amount so cache slot t holds
-                    # the token at true position t (slot >= true length stays
-                    # zero). Decode then reads/writes the same axis layout as
-                    # an unpadded per-request cache — the alignment behind
-                    # the engine's bit-identity invariant (see _attn_decode).
-                    gi = (jnp.arange(wc, dtype=jnp.int32)[None, :]
-                          + pos_offset[:, None].astype(jnp.int32))
-                    keep = (gi < wc)[..., None, None]
-                    gi = jnp.minimum(gi, wc - 1)
-
-                    def _shift(a):
-                        g = jnp.take_along_axis(
-                            a,
-                            jnp.broadcast_to(gi[..., None, None], a.shape),
-                            axis=1,
-                        )
-                        return jnp.where(keep, g, jnp.zeros((), a.dtype))
-
-                    ck, cv = _shift(ck), _shift(cv)
             else:
                 if pos_offset is not None:
                     raise ValueError(

@@ -71,6 +71,7 @@ from repro.core.batching.buckets import (
 from repro.core.batching.policy import BatchPolicy, pick_chunk_len
 from repro.core.batching.scheduler import SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
+from repro.core.prefix import PrefixLease, PrefixStore
 from repro.models import api, lm
 
 
@@ -96,6 +97,11 @@ class EngineConfig:
     # pick admit chunk-by-chunk, interleaved with decode segments. Silently
     # inert for model families lm.supports_chunked_prefill rejects.
     chunk_lens: Tuple[int, ...] = ()
+    # --- radix prefix KV cache (cross-request shared-prefix reuse) ---
+    # host byte budget for the per-engine radix store; 0 disables. Requires
+    # chunked prefill (hits resume suffix chunks at the matched length), so
+    # it is silently inert without chunk_lens or on unsupported families.
+    prefix_cache_bytes: int = 0
 
 
 _next_pow2 = next_pow2  # shared shape-bucket formula (buckets.next_pow2)
@@ -181,7 +187,13 @@ class _ChunkAdmission:
     off: np.ndarray          # [max_slots] left-pad; lp sentinel = not ours
     lp: int
     chunk: int
-    pos: int = 0             # next padded column to process
+    pos: int = 0             # next padded column to process (past base)
+    # prefix-cache resume: first padded column this admission actually
+    # computes (a chunk multiple; columns [0, base) were either scattered
+    # from the radix store at true positions [0, match) or are left-pad).
+    # Hit groups are split per base so each admission stays column-pure;
+    # classes of the same (chunk, lp) still merge into one program call.
+    base: int = 0
 
 
 class ServingEngine:
@@ -197,7 +209,8 @@ class ServingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
-                 ec: Optional[EngineConfig] = None):
+                 ec: Optional[EngineConfig] = None, *,
+                 knee_profiles: Optional[Dict[int, Any]] = None):
         # mutable-default hazard: a shared EngineConfig() default instance
         # would leak field mutations across engines — build a fresh one here.
         ec = EngineConfig() if ec is None else ec
@@ -205,6 +218,10 @@ class ServingEngine:
         self.params = params
         self.policy = policy
         self.ec = ec
+        # measured/analytical latency knees per prompt bucket (build_engine
+        # supplies them); pick_chunk_len uses them to bound how long a chunk
+        # may stall resident decoders instead of the pure pressure heuristic
+        self._knee_profiles = knee_profiles or {}
         self.batcher = BucketedBatcher(policy)
         self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
         self.completed: List[Request] = []
@@ -222,6 +239,16 @@ class ServingEngine:
             "retired": 0,
             "segments": 0,
             "dpu_batches": 0,
+            # radix prefix cache (zero when disabled; bench/CI read these
+            # uniformly): hit admissions, K/V tokens reused instead of
+            # recomputed, total prompt tokens admitted, store inserts, and
+            # the hit path's own trace counter (one scatter program per
+            # bucket, compiled at warmup — steady state retraces nothing)
+            "prefix_hits": 0,
+            "prefix_hit_tokens": 0,
+            "prefix_prompt_tokens": 0,
+            "prefix_inserts": 0,
+            "prefix_scatter_traces": 0,
         }
         # (padded_batch, padded_len) -> jitted prefill executable
         self._prefill_cache: Dict[Tuple[int, int], Any] = {}
@@ -276,6 +303,16 @@ class ServingEngine:
             self._chunk_q: List[_ChunkAdmission] = []
             # (chunk len, prompt bucket) -> chunk executable
             self._chunk_cache: Dict[Tuple[int, int], Any] = {}
+            # --- radix prefix KV cache (per-engine store; multi-slice
+            # engines each own one, so hits never copy KV across slices) ---
+            self.prefix_store: Optional[PrefixStore] = None
+            if ec.prefix_cache_bytes and self._chunk_lens:
+                from repro.core.batching import kv_bytes_per_token
+                tb = kv_bytes_per_token(cfg)
+                assert tb > 0, cfg.name  # attn-only families (chunk-gated)
+                self.prefix_store = PrefixStore(ec.prefix_cache_bytes, tb)
+            self._prefix_leases: Dict[int, PrefixLease] = {}  # rid -> pin
+            self._prefix_scatter_cache: Dict[int, Any] = {}   # lp -> jit
 
             def _segment(p, cache, tok, clock, off, steps):
                 self.stats["segment_traces"] += 1  # trace-time only
@@ -355,6 +392,14 @@ class ServingEngine:
                 if st is not None and st.req.rid in rids:
                     self._slots[s] = None
                     n += 1
+            # drop prefix-store pins of every cancelled request (queued OR
+            # slotted): a hedge loser / resize victim must not keep its
+            # matched path unevictable forever
+            if self.prefix_store is not None:
+                for rid in rids:
+                    lease = self._prefix_leases.pop(rid, None)
+                    if lease is not None:
+                        self.prefix_store.release(lease)
         self.completed = [r for r in self.completed if r.rid not in rids]
         return n
 
@@ -516,6 +561,9 @@ class ServingEngine:
         for i, r in enumerate(batch.requests):
             r.dispatched_at = t0
             r.completed_at = done
+            # run-to-completion materializes all tokens at once: first token
+            # observable no earlier than the batch finishing
+            r.first_token_at = done
             # run-to-completion decodes the full scan regardless; honor the
             # per-request budget by truncation (the wasted steps are the cost
             # continuous batching removes)
@@ -586,6 +634,8 @@ class ServingEngine:
             self._slots[s] = _Slot(req=r, budget=self._budget(r),
                                    produced=[int(tok0[i, 0])])
             r.dispatched_at = now
+            r.first_token_at = now  # TTFT: prefill emits the first token
+            self.stats["prefix_prompt_tokens"] += lens[i]
         self.stats["admitted"] += len(reqs)
         self._retire_finished(now)  # budget-1 / instant-EOS requests
 
@@ -599,13 +649,53 @@ class ServingEngine:
         resident = sum(1 for s in self._slots if s is not None)
         waiting = self.slot_scheduler.backlog() + self.batcher.pending()
         c = pick_chunk_len(self._chunk_lens, resident=resident,
-                           waiting=waiting)
+                           waiting=waiting,
+                           profile=self._profile_for(lp))
         return c if c < lp else 0
+
+    def _profile_for(self, lp: int):
+        """Knee profile for a prompt bucket (nearest-bucket fallback like
+        BatchPolicy.batch_max_for); None without profiles — pick_chunk_len
+        then keeps the pure pool-pressure heuristic."""
+        if not self._knee_profiles:
+            return None
+        b = int(lp / self.policy.bucket_width)
+        key = min(self._knee_profiles, key=lambda k: abs(k - b))
+        return self._knee_profiles[key]
+
+    def prefix_peek(self, lp: int, tokens: np.ndarray) -> int:
+        """Longest stored prefix match for affinity routing (multi-slice
+        dispatch prefers the slice whose store knows the prompt best)."""
+        if self.prefix_store is None:
+            return 0
+        return self.prefix_store.peek(lp, tokens)
+
+    def prefix_peek_req(self, r: Request) -> int:
+        """prefix_peek for a whole request: derives the prompt bucket and
+        token ids the engine itself would use at admission, so the affinity
+        router and the admission path can never disagree on the match."""
+        if self.prefix_store is None:
+            return 0
+        n = max(1, int(r.length))
+        lp = max(self.ec.min_prompt_len, _next_pow2(n))
+        return self.prefix_store.peek(lp, self._prompt_tokens(r, n))
 
     def _begin_chunked(self, reqs: List[Request], lp: int, chunk: int) -> None:
         """Reserve slots for a chunked admission group and queue its prompt
         block; chunks run one per engine step (_advance_chunks), interleaved
-        with decode segments."""
+        with decode segments.
+
+        With a prefix store, each request's prompt is first looked up in the
+        radix tree: a hit pins the matched path (lease held until retire or
+        cancel), scatters the stored K/V into the row's true positions
+        [0, m) in one batched per-bucket scatter program, and resumes chunk
+        prefill at padded column off + m — a chunk multiple, so the suffix
+        rides the existing (chunk, lp) executables with no new shapes. m is
+        the largest usable match: m <= n-1 (the final chunk must still run
+        to produce the first token at column lp-1) and m ≡ n (mod chunk)
+        (off = lp - n, lp ≡ 0 mod chunk, so the resume column lands on the
+        chunk grid). The group splits into one _ChunkAdmission per resume
+        column; same-class admissions still merge into one call per step."""
         self._ensure_pool()
         free = [i for i, s in enumerate(self._slots) if s is None]
         assert len(reqs) <= len(free), (len(reqs), len(free))
@@ -616,19 +706,100 @@ class ServingEngine:
         off = np.full(bp, lp, np.int32)  # sentinel: rows not ours stay masked
         slots = free[: len(reqs)]
         now = time.monotonic()
+        by_base: Dict[int, Tuple[List[Request], List[int]]] = {}
+        hits: List[Tuple[int, int, Any]] = []  # (slot, m, host K/V tree)
         for i, r in enumerate(reqs):
             n = max(1, int(r.length))
             s = slots[i]
-            toks[s, lp - n:] = self._prompt_tokens(r, n)
+            prompt = self._prompt_tokens(r, n)
+            toks[s, lp - n:] = prompt
             off[s] = lp - n
+            m = self._prefix_match(r, lp, chunk, n, prompt, hits, s)
             self._slots[s] = _Slot(req=r, budget=self._budget(r), produced=[],
-                                   live=False, filled=0)
-            self._pool_off[s] = self._clock  # filled=0; refreshed per segment
+                                   live=False, filled=m)
+            self._pool_off[s] = self._clock - m  # refreshed per segment
             r.dispatched_at = now
-        self._chunk_q.append(_ChunkAdmission(
-            reqs=list(reqs), slots=slots, toks=toks, off=off, lp=lp,
-            chunk=chunk,
-        ))
+            # hit rows resume at their aligned column; cold rows start at 0
+            # (left-pad columns are fully masked, same as before)
+            g = by_base.setdefault((lp - n) + m if m else 0, ([], []))
+            g[0].append(r)
+            g[1].append(s)
+        if hits:
+            self._scatter_hits(hits, lp)
+        for base, (greqs, gslots) in sorted(by_base.items()):
+            self._chunk_q.append(_ChunkAdmission(
+                reqs=greqs, slots=gslots, toks=toks, off=off, lp=lp,
+                chunk=chunk, base=base,
+            ))
+
+    def _prefix_match(self, r: Request, lp: int, chunk: int, n: int,
+                      prompt: np.ndarray, hits: List, s: int) -> int:
+        """Radix lookup for one admission row: returns the usable matched
+        length m (0 = cold), records the pinned lease and the assembled
+        host K/V for the batched scatter."""
+        self.stats["prefix_prompt_tokens"] += n
+        if self.prefix_store is None:
+            return 0
+        lease = self.prefix_store.lookup(lp, prompt)
+        if lease is None:
+            return 0
+        cap = min(lease.match_len, n - 1)
+        m = cap - ((cap - n) % chunk)  # largest m <= cap with m ≡ n (mod c)
+        if m <= 0:
+            self.prefix_store.release(lease)
+            return 0
+        self._prefix_leases[r.rid] = lease
+        hits.append((s, m, self.prefix_store.kv_prefix(lease, m)))
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += m
+        return m
+
+    def _get_prefix_scatter(self, lp: int):
+        """Jitted hit-scatter executable, one per prompt bucket (compiled
+        at warmup alongside the bucket's chunk program; the hit path adds
+        no shapes in steady state)."""
+        fn = self._prefix_scatter_cache.get(lp)
+        if fn is not None:
+            self.stats["prefill_cache_hits"] += 1
+            return fn
+
+        def _scatter(pool, pre, sids, _lp=lp):
+            self.stats["prefix_scatter_traces"] += 1  # trace-time only
+            return lm.scatter_prefix_into_slots(pool, pre, sids, _lp)
+
+        fn = jax.jit(_scatter, donate_argnums=(0,))
+        self._prefix_scatter_cache[lp] = fn
+        return fn
+
+    def _scatter_hits(self, hits: List[Tuple[int, int, Any]], lp: int) -> None:
+        """Batched scatter of this admission's prefix hits: assemble one
+        prefill-cache-shaped host tree (hit rows at their slot index, true
+        positions [0, m) filled, rest zero — the zeros land on columns the
+        suffix chunks overwrite or causal masking hides forever) and run
+        the bucket's scatter program with the pool donated."""
+        bp = self.ec.max_slots
+        sids = np.full(bp, bp, np.int32)  # out-of-range rows -> dropped
+
+        def _alloc(leaf):
+            if leaf.ndim == 3:            # per-layer [m, kh, hd]
+                return np.zeros((bp, lp) + leaf.shape[1:], leaf.dtype)
+            return np.zeros((leaf.shape[0], bp, lp) + leaf.shape[2:],
+                            leaf.dtype)  # stacked body [nb, m, kh, hd]
+
+        batch = jax.tree.map(_alloc, hits[0][2])
+        for s, m, kv in hits:
+            sids[s] = s
+
+            def _put(dst, src):
+                if src.ndim == 3:
+                    dst[s, :m] = src
+                else:
+                    dst[:, s, :m] = src
+
+            jax.tree.map(_put, batch, kv)
+        self._pool = self._get_prefix_scatter(lp)(
+            self._pool, jax.tree.map(jnp.asarray, batch), jnp.asarray(sids)
+        )
 
     def _advance_chunks(self) -> bool:
         """Advance every in-flight chunked admission by ONE chunk, merging
@@ -643,7 +814,7 @@ class ServingEngine:
             classes.setdefault((adm.chunk, adm.lp), []).append(adm)
         for (c, lp), adms in classes.items():
             self._chunk_step(c, lp, adms)
-        self._chunk_q = [a for a in self._chunk_q if a.pos < a.lp]
+        self._chunk_q = [a for a in self._chunk_q if a.base + a.pos < a.lp]
         return True
 
     def _get_chunk(self, c: int, lp: int):
@@ -680,9 +851,10 @@ class ServingEngine:
         start = np.zeros(bp, np.int32)
         for adm in adms:
             for s in adm.slots:
-                toks[s] = adm.toks[s, adm.pos:adm.pos + c]
+                col = adm.base + adm.pos  # prefix hits resume past base
+                toks[s] = adm.toks[s, col:col + c]
                 off[s] = adm.off[s]
-                start[s] = adm.pos
+                start[s] = col
         tok0, self._pool = self._get_chunk(c, lp)(
             self.params, jnp.asarray(toks), jnp.asarray(off), self._pool,
             jnp.asarray(start),
@@ -692,8 +864,9 @@ class ServingEngine:
         for adm in adms:
             adm.pos += c
             for s in adm.slots:
-                self._slots[s].filled = max(0, adm.pos - int(adm.off[s]))
-            if adm.pos >= adm.lp:
+                self._slots[s].filled = max(
+                    0, adm.base + adm.pos - int(adm.off[s]))
+            if adm.base + adm.pos >= adm.lp:
                 finished.append(adm)
         if not finished:
             return
@@ -709,6 +882,7 @@ class ServingEngine:
                 self._tok[s] = tok0[s]
                 st.produced = [int(tok0[s, 0])]
                 st.live = True
+                st.req.first_token_at = now  # TTFT: final chunk's greedy tok
             self.stats["admitted"] += len(adm.reqs)
         self._retire_finished(now)
 
@@ -775,10 +949,50 @@ class ServingEngine:
                                        st.budget)
             r.completed_at = now
             self.completed.append(r)
+            # prefix store maintenance BEFORE the slot is freed: the row's
+            # prompt K/V (true positions [0, n), untouched by decode — the
+            # ring never wraps into them) is the donor material for future
+            # shared-prefix hits
+            self._prefix_insert_on_retire(s, st)
             # free the slot; its stale KV stays masked for the next occupant
             # (pos_offset is rewritten at the next admission)
             self._slots[s] = None
             self.stats["retired"] += 1
+
+    def _prefix_insert_on_retire(self, s: int, st: _Slot) -> None:
+        """Release the row's lookup lease and insert its prompt's K/V into
+        the radix store, truncated to the chunk quantum (entries stay
+        aligned with the (chunk, bucket) executables and, on template
+        traffic, the dedupe peek below skips the device->host extraction
+        entirely once the template's blocks are stored — no steady-state
+        syncs)."""
+        if self.prefix_store is None:
+            return
+        r = st.req
+        lease = self._prefix_leases.pop(r.rid, None)
+        if lease is not None:
+            self.prefix_store.release(lease)
+        n = max(1, int(r.length))
+        q = min(self._chunk_lens)
+        m_ins = (n // q) * q
+        lp = max(self.ec.min_prompt_len, _next_pow2(n))
+        if m_ins <= 0:
+            return
+        prompt = self._prompt_tokens(r, n)
+        if self.prefix_store.peek(lp, prompt[:m_ins]) >= m_ins:
+            return  # already stored bit-for-bit; skip the device sync
+        kv = self._extract_prefix(s, m_ins)
+        self.prefix_store.insert(lp, prompt[:m_ins], kv)
+        self.stats["prefix_inserts"] += 1
+
+    def _extract_prefix(self, s: int, m: int):
+        """Host copy of pool row s, true positions [0, m) — shaped like one
+        store payload row (per-layer [m, kh, hd], stacked body [nb, m, ...])."""
+        def f(leaf):
+            if leaf.ndim == 4:                 # [max_slots, wc, kh, hd]
+                return np.asarray(leaf[s, :m])
+            return np.asarray(leaf[:, s, :m])  # stacked body leaves
+        return jax.tree.map(f, self._pool)
 
     def mean_slot_occupancy(self) -> float:
         if not self.slot_occupancy:
@@ -810,4 +1024,4 @@ def build_engine(cfg: ModelConfig, *, seed: int = 0,
         for b in range(8)
     }
     policy = derive_policy(profiles, n_slices=1, bucket_width=ec.bucket_width)
-    return ServingEngine(cfg, params, policy, ec)
+    return ServingEngine(cfg, params, policy, ec, knee_profiles=profiles)

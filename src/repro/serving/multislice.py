@@ -51,6 +51,14 @@ Chunked prefill composes transparently: per-slice engines inherit
 admits chunk-by-chunk between that slice's decode segments — neither the
 resident rows nor the other slices ever wait out a monolithic prefill.
 
+So does the radix prefix cache (`EngineConfig.prefix_cache_bytes`): each
+slice engine owns its own PrefixStore (K/V never crosses slice meshes),
+and stream dispatch becomes PREFIX-AFFINE — a request prefers the slice
+whose store holds the longest match for its prompt (ties and zero-match
+fall back to least-loaded), so a template's traffic concentrates where its
+cached prefill lives. Hedging still works: a hedge twin on a cold slice
+simply prefills from scratch — outputs are bit-identical either way.
+
 On a single shared device (CPU CI) the replicas serialize, so sweeps
 measure scheduling behaviour, not slice parallelism; on a real pod each
 engine owns a disjoint sub-mesh.
@@ -119,7 +127,8 @@ class MultiSliceEngine:
     def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
                  ec: Optional[EngineConfig] = None, *, n_slices: int,
                  devices: Optional[Sequence] = None,
-                 hedge_factor: float = 3.0, dispatch: str = "stream"):
+                 hedge_factor: float = 3.0, dispatch: str = "stream",
+                 knee_profiles: Optional[Dict[int, Any]] = None):
         import jax
 
         from repro.models import lm
@@ -136,6 +145,7 @@ class MultiSliceEngine:
         self.ec = ec
         self.hedge_factor = hedge_factor
         self.dispatch_mode = dispatch
+        self._knee_profiles = knee_profiles or {}
         self._devices = list(jax.devices() if devices is None else devices)
         self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
         self.batcher = BucketedBatcher(policy)
@@ -181,7 +191,8 @@ class MultiSliceEngine:
         # batcher is a pass-through
         ec_s = dc_replace(self.ec, continuous=True, preprocess="none")
         pol = dc_replace(self.policy, time_queue=0.0)
-        return ServingEngine(self.cfg, self._params_for(ps), pol, ec_s)
+        return ServingEngine(self.cfg, self._params_for(ps), pol, ec_s,
+                             knee_profiles=self._knee_profiles)
 
     def _params_for(self, ps: PodSlice):
         """Replicate params onto the slice's mesh when it owns real devices;
@@ -338,7 +349,7 @@ class MultiSliceEngine:
         leftovers: List[Request] = []
         for group in plan.admissions:
             for r in group:
-                sid = self.sched.pick_slice(load, cap)
+                sid = self._pick_slice_for(r, load, cap)
                 if sid is None:
                     leftovers.append(r)
                     continue
@@ -348,6 +359,36 @@ class MultiSliceEngine:
         if leftovers:  # capacity raced away (shouldn't normally happen)
             self.slot_scheduler.requeue(leftovers)
         return did
+
+    def _pick_slice_for(self, r: Request, load: Dict[int, int],
+                        cap: int) -> Optional[int]:
+        """Slice choice for one streamed request. With per-slice prefix
+        stores, prefer the slice whose radix tree holds the LONGEST match
+        for this prompt (ties broken least-loaded by pick_slice) — prefix
+        affinity concentrates a template's traffic so its cached K/V is
+        where the hits are, without ever copying K/V across slices. A slice
+        at capacity never wins on affinity (a stale cache entry must not
+        queue-jump a free slice), and zero-match dispatch falls through to
+        the plain least-loaded scheduler unchanged — as does everything
+        when the prefix cache is off."""
+        if self.ec.prefix_cache_bytes:
+            best: List[int] = []
+            best_m = 0
+            for sid, s in self.sched.slices.items():
+                if not s.healthy or load.get(sid, 0) >= cap:
+                    continue
+                m = self.engines[sid].prefix_peek_req(r)
+                if m > best_m:
+                    best, best_m = [sid], m
+                elif m == best_m and best_m > 0:
+                    best.append(sid)
+            if best_m > 0:
+                exclude = [sid for sid in self.sched.slices
+                           if sid not in best]
+                sid = self.sched.pick_slice(load, cap, exclude=exclude)
+                if sid is not None:
+                    return sid
+        return self.sched.pick_slice(load, cap)
 
     def _dispatch_batch_mode(self, now: float) -> bool:
         cap = self.ec.max_slots
@@ -444,6 +485,7 @@ class MultiSliceEngine:
         if res is not orig:  # hedge twin ran a clone: copy results back
             orig.payload = res.payload
             orig.dispatched_at = res.dispatched_at
+            orig.first_token_at = res.first_token_at
             orig.completed_at = res.completed_at
         self._done_rids.add(orig.rid)
         self.completed.append(orig)
@@ -498,6 +540,25 @@ class MultiSliceEngine:
                   + e.stats["segment_traces"] + e.stats["decode_step_traces"])
             for sid, e in self.engines.items()
         }
+
+    def prefix_peek_req(self, r: Request) -> int:
+        """Best stored-prefix match for a request across every slice (the
+        runtime's SLO shed model: the affinity router will land the request
+        on the best-matching slice, so the fleet-wide max IS the expected
+        hit)."""
+        return max((e.prefix_peek_req(r) for e in self.engines.values()),
+                   default=0)
+
+    def prefix_stats(self) -> Dict[str, int]:
+        """Aggregated prefix-cache counters across slices (all zero with the
+        cache off — prefix_scatter_traces is deliberately NOT part of
+        trace_counts(), so the parts 2-5 compile-once gates are unaffected;
+        the prefix bench bounds it separately: one scatter program per
+        prompt bucket that ever took a hit, per slice)."""
+        keys = ("prefix_hits", "prefix_hit_tokens", "prefix_prompt_tokens",
+                "prefix_inserts", "prefix_scatter_traces")
+        return {k: sum(e.stats[k] for e in self.engines.values())
+                for k in keys}
 
     def slice_stats(self) -> Dict[int, Dict[str, Any]]:
         out: Dict[int, Dict[str, Any]] = {}
@@ -560,4 +621,4 @@ def build_multislice_engine(
                            bucket_width=ec.bucket_width)
     return MultiSliceEngine(cfg, params, policy, ec, n_slices=n_slices,
                             devices=devices, hedge_factor=hedge_factor,
-                            dispatch=dispatch)
+                            dispatch=dispatch, knee_profiles=profiles)

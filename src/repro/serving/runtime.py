@@ -42,7 +42,16 @@ decode-backlog term (`decode_backlog_s`) — admission depth and slot
 occupancy scaled by the measured per-dispatch execution EMA — so a
 saturated slice pool sheds at the front door instead of accepting work
 that will time out waiting for a KV slot (the DPU-only model shed too
-late under slice saturation).
+late under slice saturation). On top of the queue-wait term, the shed
+model is per-request and PROMPT-BUCKET aware (`request_service_s`): a
+request's own service time is its bucket's prefill dispatch count (chunk
+calls for ITS padded prompt length, not a fleet average) plus its decode
+segments, scaled by the same EMA — and the prefill term is DISCOUNTED by
+the expected prefix-cache hit (the radix store is peeked for this exact
+prompt; chunk calls the hit would skip are not charged). Two requests at
+the same deadline therefore shed differently: the long cold prompt goes,
+the template-sharing one stays — shedding work the cache makes cheap
+wastes exactly the capacity the cache freed.
 
 Clocks: `clock="virtual"` is deterministic (tests/simulation drive `now`
 explicitly; idle gaps jump to the next modeled event). `clock="wall"` is
@@ -61,7 +70,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Union
 
-from repro.core.batching.buckets import Request
+from repro.core.batching.buckets import Request, next_pow2
 from repro.core.dpu.service import DpuService
 from repro.serving.engine import ServingEngine, validate_requests
 from repro.serving.multislice import MultiSliceEngine
@@ -176,6 +185,8 @@ class PipelinedRuntime:
         for r in reqs:
             self.stats["submitted"] += 1
             est = backlog_est
+            if has_slo:
+                est += self.request_service_s(r)
             if has_slo and self.service is not None and r.payload is not None:
                 # cost-model estimate only matters when an SLO is set (it
                 # also assumes a well-formed payload — malformed ones are
@@ -323,6 +334,40 @@ class PipelinedRuntime:
         ec = self.engine.ec
         segs = max(1, -(-ec.max_new_tokens // max(1, ec.segment_len)))
         return self.seg_ema * segs * waiting / cap
+
+    def request_service_s(self, r: Request) -> float:
+        """Per-request decode-side service estimate, prompt-bucket aware:
+        prefill dispatches for THIS request's padded prompt length (chunk
+        calls when the engine chunks, one monolithic admit otherwise) plus
+        its decode segments, scaled by the measured per-dispatch EMA. The
+        prefill term is discounted by the EXPECTED PREFIX HIT — the radix
+        store is peeked for this exact prompt and the chunk calls a hit
+        would skip are not charged — so the front door never sheds a
+        template-sharing request on the cost of prefill work the cache
+        already paid for. Uncalibrated (no EMA yet) it returns 0.0: the
+        request-independent backlog model remains the fallback."""
+        if self.seg_ema is None:
+            return 0.0
+        ec = self.engine.ec
+        budget = (ec.max_new_tokens if r.max_new_tokens is None
+                  else min(r.max_new_tokens, ec.max_new_tokens))
+        segs = max(1, -(-budget // max(1, ec.segment_len)))
+        n = max(1, int(r.length))
+        lp = max(ec.min_prompt_len, next_pow2(n))
+        if self._chunked():
+            q = min(ec.chunk_lens)
+            chunks = max(1, lp // q)
+            if ec.prefix_cache_bytes:
+                chunks = max(1, chunks - self.engine.prefix_peek_req(r) // q)
+        else:
+            chunks = 1
+        return self.seg_ema * (chunks + segs)
+
+    def _chunked(self) -> bool:
+        """Whether the underlying engines really chunk (family-gated)."""
+        if isinstance(self.engine, MultiSliceEngine):
+            return self.engine._chunked
+        return bool(getattr(self.engine, "_chunk_lens", None))
 
     def _observe_exec(self) -> None:
         """Fold fresh engine execution timings into `seg_ema` (multi-slice

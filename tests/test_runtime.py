@@ -390,8 +390,12 @@ def test_decode_backlog_folds_into_slo_shed(setup):
     assert rt.submit([probe], now=0.0) == 1
     rt.run_until_idle()
     rt.completed.clear()
-    # saturate: every slot occupied / queued, then pin the execution EMA so
-    # the estimate is deterministic (wall-measured timings vary per host)
+    # saturate: every slot occupied / queued. Pin the execution EMA BEFORE
+    # submitting so the estimate is deterministic (wall-measured timings
+    # vary per host): the per-request service term (chunks + segments,
+    # <= 3 x EMA each here) must stay well under slo_s for the batch to be
+    # accepted, then a larger pinned EMA below drives the backlog shed.
+    rt.seg_ema = 0.01
     reqs = [_mk(i) for i in range(1, len(SPEC))]
     rt.submit(reqs, now=0.0)
     rt.step(0.0)
