@@ -30,12 +30,18 @@ tracked per request id):
   slice ids for mid-flight cancellation (`ServingEngine.cancel`); a later
   completion of the same rid is a no-op (returns None).
 * failure — evicting a slice returns the rids whose ONLY healthy holder it
-  was (the caller requeues those requests exactly once); a rid with a
-  surviving healthy holder is NOT requeued — the survivor simply carries
-  on, re-armed for hedging (hedged=False). An elastic RESIZE rebuilds the
-  whole pool (every engine is torn down, so no holder can survive): the
-  caller requeues every tracked original exactly once — they are unique
-  per rid — and discards this scheduler wholesale.
+  was (the caller requeues those requests); a rid with a surviving healthy
+  holder is NOT requeued — the survivor simply carries on, re-armed for
+  hedging (hedged=False). An elastic RESIZE rebuilds the whole pool (every
+  engine is torn down, so no holder can survive): the caller requeues
+  every tracked original — unique per rid — and the rebuilt scheduler
+  adopts the old one's retry accounting.
+* retry budget — every failure/resize requeue charges `note_requeue(rid)`;
+  once a rid has been requeued more than `max_retries` times the caller
+  dead-letters it (typed reason) instead of requeueing, so a request
+  caught in a failure loop is bounded-total-retries, not retried forever.
+  With `retry_backoff_s`, each retry pushes the rid's earliest redispatch
+  out exponentially and the dispatch loop holds it back until then.
 
 The scheduler tracks ids and timing only; Request objects, slot pools, and
 execution live in serving/multislice.py. The simulator's analytic
@@ -194,15 +200,58 @@ class SliceScheduler:
     wins, and failure/resize requeue that never duplicates a request whose
     other hedge holder is still healthy."""
 
-    def __init__(self, n_slices: int, *, hedge_factor: float = 3.0):
+    def __init__(self, n_slices: int, *, hedge_factor: float = 3.0,
+                 max_retries: int = 3, retry_backoff_s: float = 0.0):
         self.slices = {i: SliceState(i) for i in range(n_slices)}
         self.hedge_factor = hedge_factor
         self.hedges = 0
         self._holders: Dict[int, List[_Holder]] = {}
+        # bounded-total-retries accounting: a rid requeued by slice failure
+        # or resize more than max_retries times is dead-lettered by the
+        # caller instead of cycling forever. Counts survive resize (the
+        # rebuilt scheduler adopts them) so "exactly once per event" really
+        # is "bounded total per rid".
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retries: Dict[int, int] = {}
+        self.not_before: Dict[int, float] = {}  # rid -> earliest redispatch
 
     # --- introspection -----------------------------------------------------
     def holders(self, rid: int) -> List[int]:
         return [h.slice_id for h in self._holders.get(rid, ())]
+
+    # --- retry budget ------------------------------------------------------
+    def note_requeue(self, rid: int, now: float) -> bool:
+        """Charge one retry against `rid`'s budget (called when a failure
+        or resize requeues it). Returns False when the budget is exhausted
+        — the caller must dead-letter instead of requeueing. With
+        retry_backoff_s > 0, each retry also pushes the rid's earliest
+        redispatch out exponentially (2^(n-1) x base)."""
+        n = self.retries.get(rid, 0) + 1
+        self.retries[rid] = n
+        if n > self.max_retries:
+            return False
+        if self.retry_backoff_s > 0:
+            self.not_before[rid] = now + self.retry_backoff_s * (2 ** (n - 1))
+        return True
+
+    def ready_for_dispatch(self, rid: int, now: float) -> bool:
+        return now >= self.not_before.get(rid, 0.0)
+
+    def next_retry_at(self) -> Optional[float]:
+        """Earliest pending backoff expiry (virtual-clock idle-jump hint)."""
+        return min(self.not_before.values()) if self.not_before else None
+
+    def forget(self, rid: int) -> None:
+        """Drop retry bookkeeping for a rid that reached a terminal state
+        (completed or dead-lettered)."""
+        self.retries.pop(rid, None)
+        self.not_before.pop(rid, None)
+
+    def adopt_retries(self, other: "SliceScheduler") -> None:
+        """Carry retry accounting across a resize rebuild."""
+        self.retries.update(other.retries)
+        self.not_before.update(other.not_before)
 
     # --- slice lifecycle ---------------------------------------------------
     def fail_slice(self, slice_id: int) -> List[int]:
@@ -262,6 +311,7 @@ class SliceScheduler:
         hs = self._holders.pop(rid, None)
         if hs is None:
             return None
+        self.forget(rid)  # terminal: retry budget no longer applies
         st = self.slices.get(slice_id)
         if st is not None:
             st.completed += 1

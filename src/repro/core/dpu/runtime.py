@@ -52,6 +52,43 @@ def group_key(x: Any) -> Any:
 _shape_key = group_key  # backward-compatible alias
 
 
+def payload_error(x: Any, modality: str = "audio") -> Optional[str]:
+    """Structural front-door validation of a RAW payload, cheap enough to
+    run per request at ingest: returns a reason string when the payload
+    would crash (or poison) a batched CU launch, None when well-formed.
+    audio: a non-empty 1-D float array (the waveform the resample/VAD/
+    feature CUs expect). image: the decoded-JPEG dict analogue of a
+    parseable header — `coeffs` a non-empty 4-D numeric block array and an
+    8x8 `qtable`. The point is to shed garbage with a typed reason at the
+    door instead of killing a whole same-shape group mid-batch."""
+    import numpy as np
+
+    if modality == "image":
+        if not isinstance(x, dict):
+            return "image payload must be a dict with coeffs/qtable"
+        for k in ("coeffs", "qtable"):
+            if k not in x:
+                return f"image payload missing {k!r}"
+            v = x[k]
+            if not isinstance(v, np.ndarray) or v.size == 0 \
+                    or not np.issubdtype(v.dtype, np.number):
+                return f"image {k} must be a non-empty numeric ndarray"
+        if x["coeffs"].ndim != 4:
+            return "image coeffs must be 4-D (blocks_h, blocks_w, 8, 8)"
+        if x["qtable"].shape != (8, 8):
+            return "image qtable must be 8x8"
+        return None
+    if not isinstance(x, np.ndarray):
+        return "audio payload must be a 1-D float ndarray"
+    if x.ndim != 1:
+        return f"audio payload must be 1-D, got ndim={x.ndim}"
+    if x.size == 0:
+        return "audio payload is empty"
+    if not np.issubdtype(x.dtype, np.floating):
+        return f"audio payload must be float, got {x.dtype}"
+    return None
+
+
 class _CuPool:
     """Instances of one CU type with earliest-free scheduling."""
 

@@ -139,6 +139,11 @@ class DpuService:
         # wedge the pipeline (see _worker_loop)
         self._failed: List[Request] = []
         self.last_error: Optional[BaseException] = None
+        # fault injection (serving/faults.py FaultPlan dpu_fail events): the
+        # next N batched launches raise through the EXACT failure path a
+        # real CU crash takes, on both clock modes — counter guarded by
+        # _cond because the wall worker decrements it off-thread
+        self._fail_next_launches = 0
         # wall clock: one worker = the DPU device; work/done guarded by _cond
         self._cond = threading.Condition()
         self._work: Deque[List[Request]] = deque()
@@ -245,6 +250,21 @@ class DpuService:
             self._worker.join(timeout=5.0)
             self._worker = None
 
+    # --- fault injection ----------------------------------------------------
+    def inject_launch_failures(self, n: int) -> None:
+        """Arm the next `n` batched CU launches to raise (deterministic
+        chaos harness): each armed launch fails its whole group through the
+        same take_failed() contract a real kernel crash uses."""
+        with self._cond:
+            self._fail_next_launches += int(n)
+
+    def _injected_failure(self) -> bool:
+        with self._cond:
+            if self._fail_next_launches > 0:
+                self._fail_next_launches -= 1
+                return True
+        return False
+
     # --- internals ----------------------------------------------------------
     def _process_group(self, group: List[Request]) -> List[Any]:
         """One batched CU pass over a group's payloads; with pow2 bucketing
@@ -258,6 +278,8 @@ class DpuService:
         same-shape fields by group_key, and the fused path additionally
         requires one shared qtable, falling back to the per-FU batch path
         when the tables differ)."""
+        if self._injected_failure():
+            raise RuntimeError("injected DPU CU launch failure (fault plan)")
         xs = [r.payload for r in group]
         n = len(xs)
         if self._bucket:

@@ -1008,6 +1008,13 @@ class ServingEngine:
     def slot_capacity(self) -> int:
         return self.ec.max_slots if self.ec.continuous else 0
 
+    def prefix_lease_count(self) -> int:
+        """Prefix-store pins currently held by this engine's in-flight
+        requests. Failure-semantics invariant (regression-tested): after
+        cancel/fail/dead-letter of every owner this must be 0 — a ghost pin
+        would make the store's leaf-only eviction unable to reach budget."""
+        return len(getattr(self, "_prefix_leases", {}) or {})
+
 
 def build_engine(cfg: ModelConfig, *, seed: int = 0,
                  ec: Optional[EngineConfig] = None) -> ServingEngine:

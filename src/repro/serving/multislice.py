@@ -39,12 +39,35 @@ Per-request semantics (contract in core/batching/scheduler.py):
   deterministic per rid and decode is greedy.
 * `fail_slice` — evicts a slice; each of its in-flight requests is
   requeued into the shared admission backlog UNLESS a hedge twin still
-  runs it elsewhere (the surviving copy completes alone).
+  runs it elsewhere (the surviving copy completes alone). Cancellation
+  routes through `ServingEngine.cancel`, which releases the victims'
+  prefix-store leases — a failed slice never leaves ghost pins that would
+  deadlock eviction.
 * `resize` — elastic MIG reconfiguration mid-trace: cancel in-flight work,
   re-partition the pod to a different menu entry, rebuild the per-slice
-  engines, and requeue every in-flight request exactly once (hedge pairs
-  deduped by rid). Completed requests are unaffected; re-run requests
-  produce the same tokens (deterministic), so a resize loses nothing.
+  engines, and requeue every in-flight request (hedge pairs deduped by
+  rid). Completed requests are unaffected; re-run requests produce the
+  same tokens (deterministic), so a resize loses nothing.
+
+Failure semantics (detect -> quarantine -> probe -> readmit; ISSUE 7):
+
+* retry budget — every failure/resize requeue charges the rid's budget in
+  `SliceScheduler.note_requeue` (counts survive resize); past
+  `max_retries` the request is DEAD-LETTERED into `self.dead` with a
+  typed reason instead of cycling forever, and with `retry_backoff_s` a
+  requeued rid is held out of dispatch until its exponential backoff
+  expires.
+* watchdog — with `watchdog_rounds > 0`, a slice that stays busy without
+  its engine advancing for that many consecutive dispatch rounds (a
+  SILENT hang: nothing announced the loss) is quarantined through the
+  same `fail_slice` path the explicit signal uses.
+* probe / readmit — with `probe_interval_s > 0`, every evicted slice is
+  probed periodically; once the probe succeeds (default probe: the slice
+  is no longer externally stalled), `readmit_slice` rebuilds its engine
+  from scratch — fresh executable caches and an EMPTY prefix store (the
+  old K/V is on a device we just declared unreliable) — and the slice
+  rejoins dispatch. This closes the loop `healthy=False` used to leave
+  permanently open.
 
 Chunked prefill composes transparently: per-slice engines inherit
 `EngineConfig.chunk_lens`, so a long prompt streamed into a busy slice
@@ -83,6 +106,7 @@ from repro.core.slicing.mig import (
 from repro.serving.engine import (
     EngineConfig, ServingEngine, enqueue_requests,
 )
+from repro.serving.faults import ShedReason
 
 
 def _slice_pod(devices: Sequence, n_slices: int):
@@ -128,7 +152,9 @@ class MultiSliceEngine:
                  ec: Optional[EngineConfig] = None, *, n_slices: int,
                  devices: Optional[Sequence] = None,
                  hedge_factor: float = 3.0, dispatch: str = "stream",
-                 knee_profiles: Optional[Dict[int, Any]] = None):
+                 knee_profiles: Optional[Dict[int, Any]] = None,
+                 max_retries: int = 3, retry_backoff_s: float = 0.0,
+                 watchdog_rounds: int = 0, probe_interval_s: float = 0.0):
         import jax
 
         from repro.models import lm
@@ -151,9 +177,26 @@ class MultiSliceEngine:
         self.batcher = BucketedBatcher(policy)
         self.completed: List[Request] = []
         self._done_rids: Set[int] = set()
+        # dead-letter queue: requests that exhausted their retry budget —
+        # terminal, typed-reason, drained by the pipelined runtime into its
+        # own `dead` list (conservation: completed + shed + dead == submitted)
+        self.dead: List[Request] = []
+        self.dead_reasons: Dict[int, ShedReason] = {}
+        # failure-semantics knobs: bounded total retries per rid (with
+        # optional exponential backoff), silent-hang detection after
+        # watchdog_rounds busy-no-advance rounds (0 = off), and periodic
+        # probing / re-admission of evicted slices (0 = off, legacy
+        # permanent eviction)
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.watchdog_rounds = watchdog_rounds
+        self.probe_interval_s = probe_interval_s
+        self._stall_rounds: Dict[int, int] = {}
+        self._quarantined: Dict[int, float] = {}  # sid -> next probe time
         self.stats: Dict[str, int] = {
             "dispatched": 0, "hedge_wins": 0, "cancelled": 0,
             "requeued": 0, "resizes": 0, "dpu_batches": 0,
+            "quarantined": 0, "readmitted": 0, "dead_lettered": 0,
         }
         self._hedges_base = 0
         self._seg_ema: Optional[float] = None
@@ -172,7 +215,11 @@ class MultiSliceEngine:
     def _build(self, n_slices: int) -> None:
         self.pod, self.replicated = _slice_pod(self._devices, n_slices)
         self.sched = SliceScheduler(len(self.pod.slices),
-                                    hedge_factor=self.hedge_factor)
+                                    hedge_factor=self.hedge_factor,
+                                    max_retries=self.max_retries,
+                                    retry_backoff_s=self.retry_backoff_s)
+        self._stall_rounds = {}
+        self._quarantined = {}
         # global admission capacity = every slice's slot pool
         self.slot_scheduler = SlotScheduler(
             self.policy, max_slots=len(self.pod.slices) * self.ec.max_slots,
@@ -215,18 +262,29 @@ class MultiSliceEngine:
         return self._hedges_base + self.sched.hedges
 
     def resize(self, n_slices: Optional[int] = None, *,
-               chips_per_slice: Optional[int] = None) -> int:
+               chips_per_slice: Optional[int] = None,
+               now: Optional[float] = None) -> int:
         """Elastic re-slice mid-trace (MIG reconfiguration): cancel in-flight
         work, re-partition to a different menu entry, rebuild the per-slice
-        engines, and requeue every in-flight request exactly once (hedge
-        copies dedupe by rid — tracks hold one original each). Returns the
-        number of requeued requests."""
+        engines, and requeue every in-flight request (hedge copies dedupe
+        by rid — tracks hold one original each). Each requeue charges the
+        rid's retry budget — carried across the scheduler rebuild — and a
+        rid past its budget dead-letters instead (a mid-resize abort that
+        re-slices straight back must not launder unlimited retries).
+        Returns the number of requeued requests."""
         assert (n_slices is None) != (chips_per_slice is None), (
             "pass exactly one of n_slices / chips_per_slice"
         )
+        now = time.monotonic() if now is None else now
         if n_slices is None:
             n_slices = max(1, len(self._devices) // max(1, chips_per_slice))
-        carry = [tr.req for tr in self._inflight.values()]
+        carry: List[Request] = []
+        dead: List[Request] = []
+        for tr in self._inflight.values():
+            if self.sched.note_requeue(tr.req.rid, now):
+                carry.append(tr.req)
+            else:
+                dead.append(tr.req)
         rids = set(self._inflight)
         for sid, e in self.engines.items():
             self.stats["cancelled"] += e.cancel(rids)
@@ -235,17 +293,28 @@ class MultiSliceEngine:
         # scheduler rebuild or they would simply vanish
         backlog = self.slot_scheduler.drain()
         self._hedges_base += self.sched.hedges
+        old_sched = self.sched
         self._build(n_slices)
+        self.sched.adopt_retries(old_sched)
+        for r in dead:
+            self._dead_letter(r, ShedReason.RETRIES_EXHAUSTED)
         self.slot_scheduler.requeue(carry + backlog)
         self.stats["resizes"] += 1
         self.stats["requeued"] += len(carry)
         return len(carry)
 
-    def fail_slice(self, slice_id: int) -> List[Request]:
-        """Evict a slice (fault injection / real device loss): cancel its
-        engine's work; each of its in-flight requests is requeued into the
-        shared backlog unless a hedge twin still runs it elsewhere (the
-        surviving copy completes alone). Returns the requeued requests."""
+    def fail_slice(self, slice_id: int,
+                   now: Optional[float] = None) -> List[Request]:
+        """Evict a slice (explicit loss signal / watchdog quarantine): cancel
+        its engine's work — `ServingEngine.cancel` releases the victims'
+        prefix-store leases, so no ghost pin survives the owner; each
+        in-flight request is requeued into the shared backlog unless a
+        hedge twin still runs it elsewhere (the surviving copy completes
+        alone). Every requeue charges the rid's retry budget; past the
+        budget it dead-letters. With probing enabled the slice enters the
+        quarantine loop (probe -> readmit once healed). Returns the
+        requeued requests."""
+        now = time.monotonic() if now is None else now
         requeue_rids = self.sched.fail_slice(slice_id)
         self.pod.fail(slice_id)
         victims = [rid for rid, tr in self._inflight.items()
@@ -258,15 +327,74 @@ class MultiSliceEngine:
             tr.copies.pop(slice_id, None)
             if rid in requeue_rids:
                 del self._inflight[rid]
-                requeued.append(tr.req)
+                if self.sched.note_requeue(rid, now):
+                    requeued.append(tr.req)
+                else:
+                    self._dead_letter(tr.req, ShedReason.RETRIES_EXHAUSTED)
         if requeued:
             self.slot_scheduler.requeue(requeued)
             self.stats["requeued"] += len(requeued)
+        self._stall_rounds.pop(slice_id, None)
+        if self.probe_interval_s > 0 and slice_id not in self._quarantined:
+            self._quarantined[slice_id] = now + self.probe_interval_s
+            self.stats["quarantined"] += 1
         return requeued
 
     def recover_slice(self, slice_id: int) -> None:
         self.sched.recover_slice(slice_id)
         self.pod.recover(slice_id)
+        self._quarantined.pop(slice_id, None)
+        self._stall_rounds.pop(slice_id, None)
+
+    def readmit_slice(self, slice_id: int,
+                      now: Optional[float] = None) -> None:
+        """Re-admit a healed slice: rebuild its engine from scratch (fresh
+        executable caches and an EMPTY prefix store — cached K/V lives on a
+        device we just declared unreliable) and rejoin dispatch. The
+        rebuilt engine recompiles on first use; that is the price of
+        recovery, not a violation of the steady-state compile-once gates."""
+        now = time.monotonic() if now is None else now
+        ps = next(p for p in self.pod.slices if p.slice_id == slice_id)
+        self.engines[slice_id] = self._make_engine(ps)
+        self._exec_seen[slice_id] = 0
+        self.sched.recover_slice(slice_id)
+        self.pod.recover(slice_id)
+        self._quarantined.pop(slice_id, None)
+        self._stall_rounds.pop(slice_id, None)
+        self.stats["readmitted"] += 1
+
+    def _probe_slice(self, slice_id: int) -> bool:
+        """Health probe for a quarantined slice. The default models a device
+        liveness check: healed unless an injected stall window still holds
+        it (FaultInjector keeps `stalled_slices` populated for the fault's
+        duration)."""
+        return slice_id not in self.stalled_slices
+
+    def _check_quarantine(self, now: float) -> bool:
+        did = False
+        for sid in sorted(self._quarantined):
+            if now < self._quarantined[sid]:
+                continue
+            if self._probe_slice(sid):
+                self.readmit_slice(sid, now)
+                did = True
+            else:
+                self._quarantined[sid] = now + self.probe_interval_s
+        return did
+
+    def _dead_letter(self, req: Request, reason: ShedReason) -> None:
+        """Terminal verdict for a request that exhausted its retry budget:
+        record it in the dead-letter queue with a typed reason, drop its
+        retry bookkeeping, and cancel any residual copy on any engine —
+        cancellation releases prefix leases, so a dead rid never leaves a
+        ghost pin."""
+        self.dead.append(req)
+        self.dead_reasons[req.rid] = reason
+        self.sched.forget(req.rid)
+        self._inflight.pop(req.rid, None)
+        for e in self.engines.values():
+            self.stats["cancelled"] += e.cancel([req.rid])
+        self.stats["dead_lettered"] += 1
 
     # --- shared admission queue --------------------------------------------
     def submit(self, req: Request) -> None:
@@ -307,20 +435,31 @@ class MultiSliceEngine:
         segment iteration, harvest completions, and hedge stragglers.
         Returns True if anything moved."""
         now = time.monotonic() if now is None else now
-        progressed = self._dispatch(now)
+        progressed = self._check_quarantine(now) if self._quarantined else False
+        progressed |= self._dispatch(now)
         progressed |= self._advance(now)
         self._check_hedges(now)
         return progressed
 
     def run_until_idle(self) -> List[Request]:
         while self.busy():
-            if not any(s.healthy for s in self.sched.slices.values()):
+            if not any(s.healthy for s in self.sched.slices.values()) \
+                    and not self._quarantined:
                 raise RuntimeError("work pending but every slice has failed")
             if not self.step():
                 deadline = self.batcher.next_deadline()
                 self.step(deadline if deadline is not None
                           else time.monotonic())
         return self.completed
+
+    def next_wakeup(self) -> Optional[float]:
+        """Earliest self-driven future transition (quarantine probe or retry
+        backoff expiry) — the virtual-clock runtime's idle-jump hint."""
+        ts = list(self._quarantined.values())
+        t = self.sched.next_retry_at()
+        if t is not None:
+            ts.append(t)
+        return min(ts) if ts else None
 
     def _loads(self) -> Dict[int, int]:
         """Per-slice slot pressure: occupied pool rows plus requests already
@@ -349,6 +488,9 @@ class MultiSliceEngine:
         leftovers: List[Request] = []
         for group in plan.admissions:
             for r in group:
+                if not self.sched.ready_for_dispatch(r.rid, now):
+                    leftovers.append(r)  # retry backoff still running
+                    continue
                 sid = self._pick_slice_for(r, load, cap)
                 if sid is None:
                     leftovers.append(r)
@@ -356,7 +498,7 @@ class MultiSliceEngine:
                 self._send(r, sid, now)
                 load[sid] += 1
                 did = True
-        if leftovers:  # capacity raced away (shouldn't normally happen)
+        if leftovers:  # capacity raced away, or backoff held the rid out
             self.slot_scheduler.requeue(leftovers)
         return did
 
@@ -446,9 +588,13 @@ class MultiSliceEngine:
 
     def _advance(self, now: float) -> bool:
         did = False
+        stuck: List[int] = []
         for sid, engine in self.engines.items():
             if sid in self.stalled_slices:
-                continue  # hung device: no progress; hedging covers it
+                # hung device: no progress; hedging covers short stalls and
+                # the watchdog quarantines a busy slice that stays silent
+                self._watch(sid, engine, stuck)
+                continue
             moved = False
             if engine.busy():
                 moved = bool(engine.step(now))
@@ -458,13 +604,36 @@ class MultiSliceEngine:
                 # advanced (or has nothing to do) is healthy, however long
                 # its streamed residents wall-clock wait behind each other
                 self.sched.note_progress(sid, now)
+                self._stall_rounds.pop(sid, None)
+            else:
+                self._watch(sid, engine, stuck)
             self._update_ema(sid, engine)
             if engine.completed:
                 done, engine.completed = engine.completed, []
                 for res in done:
                     self._record(res, sid)
                 did = True
+        for sid in stuck:
+            self.fail_slice(sid, now)  # watchdog verdict: quarantine
+            did = True
         return did
+
+    def _watch(self, sid: int, engine: ServingEngine,
+               stuck: List[int]) -> None:
+        """Progress-based failure detection: count consecutive rounds in
+        which a HEALTHY slice stayed busy without its engine advancing; at
+        `watchdog_rounds` the slice is quarantined through `fail_slice`
+        (its work requeues under the retry budget) and, with probing
+        enabled, later probed and re-admitted."""
+        if not self.watchdog_rounds:
+            return
+        st = self.sched.slices.get(sid)
+        if st is None or not st.healthy or not engine.busy():
+            return
+        n = self._stall_rounds.get(sid, 0) + 1
+        self._stall_rounds[sid] = n
+        if n >= self.watchdog_rounds:
+            stuck.append(sid)
 
     def _update_ema(self, sid: int, engine: ServingEngine) -> None:
         seen = self._exec_seen.get(sid, 0)
@@ -522,6 +691,8 @@ class MultiSliceEngine:
         measured trace."""
         self.completed = []
         self._done_rids = set()
+        self.dead = []
+        self.dead_reasons = {}
         for e in self.engines.values():
             e.completed.clear()
             e.batch_exec_s.clear()
@@ -591,6 +762,8 @@ def build_multislice_engine(
     ec: Optional[EngineConfig] = None, hedge_factor: float = 3.0,
     devices: Optional[Sequence] = None, params=None,
     dispatch: str = "stream",
+    max_retries: int = 3, retry_backoff_s: float = 0.0,
+    watchdog_rounds: int = 0, probe_interval_s: float = 0.0,
 ) -> MultiSliceEngine:
     """Mirror of engine.build_engine for the multi-slice system: same param
     init (bit-identical outputs vs a single engine), knee-derived policy
@@ -621,4 +794,8 @@ def build_multislice_engine(
                            bucket_width=ec.bucket_width)
     return MultiSliceEngine(cfg, params, policy, ec, n_slices=n_slices,
                             devices=devices, hedge_factor=hedge_factor,
-                            dispatch=dispatch, knee_profiles=profiles)
+                            dispatch=dispatch, knee_profiles=profiles,
+                            max_retries=max_retries,
+                            retry_backoff_s=retry_backoff_s,
+                            watchdog_rounds=watchdog_rounds,
+                            probe_interval_s=probe_interval_s)

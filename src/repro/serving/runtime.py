@@ -30,8 +30,34 @@ architecture"):
 
 Backpressure chain: slots full -> backlog fills -> ready fills -> service
 stops launching -> pending fills -> ingest fills -> front door sheds. No
-queue is unbounded, and every request is either completed, still queued, or
-recorded in `self.shed` — nothing vanishes.
+queue is unbounded, and every request is either completed, still queued,
+recorded in `self.shed`, or dead-lettered in `self.dead` — nothing
+vanishes (`conservation_ok()` checks exactly this).
+
+Failure semantics (ISSUE 7; every exit is typed with a ShedReason):
+
+  shed   front-door / stage rejections a client may retry elsewhere:
+         `slo` (deadline already blown), `overflow` (bounded ingest full),
+         `malformed` (structurally invalid raw payload, validated at the
+         door via core/dpu/runtime.payload_error instead of crashing a CU
+         batch), `preprocess_error` (a launch raised and no retry budget
+         is configured — the legacy contract).
+  dead   the DEAD-LETTER queue, terminal server-side verdicts:
+         `retries_exhausted` (requeued by slice failure/flap/resize past
+         the per-rid budget in SliceScheduler) and `poison` (kept killing
+         preprocessing launches past `preprocess_retries`, or failed the
+         degraded CPU path too).
+  breaker  when DpuService launches fail repeatedly
+         (`breaker_threshold` consecutive failed groups), the runtime
+         trips a circuit breaker and routes payload requests through the
+         SYNCHRONOUS CPU preprocessing path (slower, not dead — outputs
+         are unaffected: payloads never influence decode tokens); after
+         `breaker_probe_s` one probe request is offered to the service,
+         and a success closes the breaker.
+
+The fault-injection harness (serving/faults.py) drives all of this
+deterministically on the virtual clock; `attach_faults(plan)` arms a
+FaultPlan whose events fire inside step().
 
 SLO-aware shedding: with RuntimeConfig.slo_s set, a request whose modeled
 completion already overruns `arrival + slo_s` is shed immediately — the
@@ -71,8 +97,10 @@ from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Union
 
 from repro.core.batching.buckets import Request, next_pow2
+from repro.core.dpu.runtime import payload_error
 from repro.core.dpu.service import DpuService
 from repro.serving.engine import ServingEngine, validate_requests
+from repro.serving.faults import FaultInjector, FaultPlan, ShedReason, reason_counts
 from repro.serving.multislice import MultiSliceEngine
 
 Engine = Union[ServingEngine, MultiSliceEngine]
@@ -111,6 +139,14 @@ class RuntimeConfig:
     max_backlog: int = 64           # admission backlog bound
     slo_s: float = float("inf")     # front-door latency SLO (inf = no shed)
     clock: str = "virtual"          # virtual (tests/sim) | wall (serving)
+    # --- failure semantics (ISSUE 7) ---
+    validate_payloads: bool = True  # structural front-door payload check
+    preprocess_retries: int = 0     # failed-launch retries per rid before
+    #                                 dead-lettering as poison (0 = legacy:
+    #                                 shed on first failure)
+    breaker_threshold: int = 0      # consecutive failed launches that trip
+    #                                 the CPU-fallback breaker (0 = off)
+    breaker_probe_s: float = 0.25   # open-breaker probe interval
 
 
 class PipelinedRuntime:
@@ -134,10 +170,27 @@ class PipelinedRuntime:
         self.rc = rc
         self._ingest: Deque[Request] = deque()
         self.shed: List[Request] = []
+        # dead-letter queue: terminal server-side verdicts (typed reasons in
+        # dead_reasons) — retries exhausted, poison. Conservation invariant:
+        # once idle, completed + shed + dead == submitted.
+        self.dead: List[Request] = []
+        self.shed_reasons: Dict[int, ShedReason] = {}
+        self.dead_reasons: Dict[int, ShedReason] = {}
         self.stats: Dict[str, int] = {
             "submitted": 0, "accepted": 0, "offered": 0,
             "shed_slo": 0, "shed_backpressure": 0, "shed_error": 0,
+            "shed_malformed": 0, "dead": 0,
+            "breaker_trips": 0, "cpu_fallback": 0, "pp_retries": 0,
         }
+        # preprocess retry accounting + DPU circuit breaker state
+        self._pp_retries: Dict[int, int] = {}
+        self._brk_consec = 0            # consecutive failed launches
+        self._brk_open = False
+        self._brk_probing = False       # one probe in flight to the service
+        self._brk_retry_at = 0.0
+        self._proc_mark = 0             # service processed-counter watermark
+        self._cpu_dpu = None            # lazily-built synchronous CPU DPU
+        self.injector: Optional[FaultInjector] = None
         # per-stage queue-depth accumulators, fed once per step() (telemetry
         # for BENCH_serve.json's preprocess_overlap section)
         self._depths: Dict[str, _StageStat] = {
@@ -161,6 +214,34 @@ class PipelinedRuntime:
             self._now = max(self._now, now)
         return self._now
 
+    # --- typed shed / dead-letter bookkeeping -------------------------------
+    def _shed(self, r: Request, reason: ShedReason, stat_key: str) -> None:
+        self.stats[stat_key] += 1
+        self.shed.append(r)
+        self.shed_reasons[r.rid] = reason
+
+    def _dead_letter(self, r: Request, reason: ShedReason) -> None:
+        self.dead.append(r)
+        self.dead_reasons[r.rid] = reason
+        self.stats["dead"] += 1
+        self._pp_retries.pop(r.rid, None)
+
+    def shed_counts(self) -> Dict[str, int]:
+        """{reason -> count} over the shed list (bench telemetry)."""
+        return reason_counts(self.shed_reasons)
+
+    def dead_counts(self) -> Dict[str, int]:
+        """{reason -> count} over the dead-letter queue (bench telemetry)."""
+        return reason_counts(self.dead_reasons)
+
+    def conservation_ok(self) -> bool:
+        """Nothing lost, nothing stuck: every submitted request is either
+        completed, shed, or dead-lettered, and no queue still holds work.
+        (Meaningful once idle; while serving, busy() accounts for the
+        difference.)"""
+        accounted = len(self.completed) + len(self.shed) + len(self.dead)
+        return not self.busy() and accounted == self.stats["submitted"]
+
     # --- front door (ingest + shedding) -------------------------------------
     def submit(self, reqs: Union[Request, List[Request]],
                now: Optional[float] = None) -> int:
@@ -182,22 +263,27 @@ class PipelinedRuntime:
         accepted = 0
         has_slo = self.rc.slo_s != float("inf")
         backlog_est = self.decode_backlog_s() if has_slo else 0.0
+        check = self.rc.validate_payloads and self.service is not None
+        modality = self.service.cfg.dpu.modality if check else "audio"
         for r in reqs:
             self.stats["submitted"] += 1
+            if check and r.payload is not None \
+                    and payload_error(r.payload, modality) is not None:
+                # structurally invalid raw payload: typed shed at the door
+                # instead of crashing a whole same-shape CU batch later
+                self._shed(r, ShedReason.MALFORMED, "shed_malformed")
+                continue
             est = backlog_est
             if has_slo:
                 est += self.request_service_s(r)
             if has_slo and self.service is not None and r.payload is not None:
-                # cost-model estimate only matters when an SLO is set (it
-                # also assumes a well-formed payload — malformed ones are
-                # shed by the worker, not crashed on at the front door)
+                # cost-model estimate only matters when an SLO is set (the
+                # payload is already structurally validated above)
                 est += self.service.estimate_s(r.payload)
             if now + est > r.arrival + self.rc.slo_s:
-                self.stats["shed_slo"] += 1
-                self.shed.append(r)
+                self._shed(r, ShedReason.SLO, "shed_slo")
             elif len(self._ingest) >= self.rc.max_ingest:
-                self.stats["shed_backpressure"] += 1
-                self.shed.append(r)
+                self._shed(r, ShedReason.OVERFLOW, "shed_backpressure")
             else:
                 self._ingest.append(r)
                 self.stats["accepted"] += 1
@@ -219,10 +305,30 @@ class PipelinedRuntime:
         now = self._tick(now)
         progressed = False
 
+        # fault harness — due FaultPlan events fire before the stages see
+        # this tick (deterministic on the virtual clock)
+        if self.injector is not None:
+            self.injector.step(self, now)
+
         # stages 4+5 — decode + emit: the engine's own admit -> segment ->
-        # retire iteration; completions land on engine.completed
-        if self.engine.busy():
+        # retire iteration; completions land on engine.completed. A drained
+        # multi-slice engine still steps while slices sit in quarantine —
+        # the probe/readmit loop must finish even after the last request
+        if self.engine.busy() or getattr(self.engine, "_quarantined", None):
             progressed |= bool(self.engine.step(now))
+
+        # a multi-slice engine dead-letters requests that exhausted their
+        # retry budget; drain them into the runtime's queue so conservation
+        # has a single ledger
+        eng_dead = getattr(self.engine, "dead", None)
+        if eng_dead:
+            reasons = getattr(self.engine, "dead_reasons", {})
+            for r in eng_dead:
+                self._dead_letter(
+                    r, reasons.pop(r.rid, ShedReason.RETRIES_EXHAUSTED)
+                )
+            eng_dead.clear()
+            progressed = True
 
         # stage 3 — admission pulls from the preprocess-complete queue,
         # bounded by the backlog (full slot pool => backlog stays full =>
@@ -238,24 +344,73 @@ class PipelinedRuntime:
 
         # stage 2 — the DPU service drains same-shape groups into batched
         # CU launches and harvests completions into its ready buffer; a
-        # group whose launch raised is shed HERE (recorded, never lost —
-        # the worker keeps serving later groups)
+        # group whose launch raised is handled HERE (recorded, never lost —
+        # the worker keeps serving later groups): with no retry budget the
+        # legacy contract sheds it, with one it re-enters ingest (routed to
+        # the CPU path once the breaker is open) until the budget runs out
+        # and the request dead-letters as poison
         if self.service is not None:
             progressed |= self.service.step(now)
+            proc = self.service.stats["processed"]
+            if proc > self._proc_mark:
+                self._brk_consec = 0
+                if self._brk_probing or self._brk_open:
+                    # a launch went through: the DPU is back — close
+                    self._brk_open = False
+                    self._brk_probing = False
+            self._proc_mark = proc
             failed = self.service.take_failed()
             if failed:
-                self.stats["shed_error"] += len(failed)
-                self.shed.extend(failed)
+                self._brk_consec += 1
+                if self._brk_probing:
+                    # the probe died: re-open, try again after the interval
+                    self._brk_probing = False
+                    self._brk_retry_at = now + self.rc.breaker_probe_s
+                if self.rc.breaker_threshold and not self._brk_open \
+                        and self._brk_consec >= self.rc.breaker_threshold:
+                    self._brk_open = True
+                    self._brk_retry_at = now + self.rc.breaker_probe_s
+                    self.stats["breaker_trips"] += 1
+                for r in failed:
+                    n = self._pp_retries.get(r.rid, 0) + 1
+                    self._pp_retries[r.rid] = n
+                    if n > self.rc.preprocess_retries:
+                        if self.rc.preprocess_retries > 0:
+                            # kept killing launches: poison verdict
+                            self._dead_letter(r, ShedReason.POISON)
+                        else:
+                            self._shed(r, ShedReason.PREPROCESS_ERROR,
+                                       "shed_error")
+                    else:
+                        self.stats["pp_retries"] += 1
+                        self._ingest.appendleft(r)  # retry at queue head
                 progressed = True
 
         # stage 1 — ingest feeds the service (raw payloads) or admission
         # directly (already-tokenized requests), FIFO, stopping at the
-        # first request the downstream stage cannot take
+        # first request the downstream stage cannot take. With the breaker
+        # open, payload requests degrade to the synchronous CPU
+        # preprocessing path (slower, not dead) except for a single probe
+        # offered to the service every breaker_probe_s.
         direct: List[Request] = []
         while self._ingest:
             r = self._ingest[0]
             if r.payload is not None and self.service is not None:
-                if not self.service.submit(r):
+                if self._brk_open:
+                    if now >= self._brk_retry_at and not self._brk_probing:
+                        if not self.service.submit(r):
+                            break
+                        self._brk_probing = True
+                    else:
+                        if space <= 0:
+                            break
+                        self._ingest.popleft()
+                        if self._cpu_preprocess(r, now):
+                            direct.append(r)
+                            space -= 1
+                        progressed = True
+                        continue
+                elif not self.service.submit(r):
                     break
             else:
                 if space <= 0:
@@ -271,6 +426,28 @@ class PipelinedRuntime:
 
         self._sample()
         return progressed
+
+    def _cpu_preprocess(self, r: Request, now: float) -> bool:
+        """Degraded-mode synchronous CPU preprocessing (breaker open): run
+        the same functional pipeline inline on the CPU. Returns True when
+        the request is ready for admission; a payload that fails even here
+        is dead-lettered as poison (False). Bit-identity is unaffected —
+        payloads never influence decode tokens."""
+        try:
+            if self._cpu_dpu is None:
+                from dataclasses import replace as dc_replace
+
+                from repro.core.dpu.runtime import DPU
+
+                self._cpu_dpu = DPU(dc_replace(self.service.cfg.dpu,
+                                               backend="cpu"))
+            r.payload = self._cpu_dpu.process(r.payload)
+        except Exception:
+            self._dead_letter(r, ShedReason.POISON)
+            return False
+        r.preprocessed_at = now
+        self.stats["cpu_fallback"] += 1
+        return True
 
     def run_until_idle(self) -> List[Request]:
         """Drain the pipeline. Virtual clock: idle iterations jump to the
@@ -385,6 +562,14 @@ class PipelinedRuntime:
                             else 0.7 * self.seg_ema + 0.3 * x)
         self._exec_seen = len(xs)
 
+    # --- fault harness ------------------------------------------------------
+    def attach_faults(self, plan: FaultPlan, t0: float = 0.0) -> FaultInjector:
+        """Arm a FaultPlan: its events fire inside step() as the clock
+        passes them (virtual: exact replay; wall: sampled against elapsed
+        time from `t0`)."""
+        self.injector = FaultInjector(plan, t0=t0)
+        return self.injector
+
     # --- internals ----------------------------------------------------------
     def _next_event(self) -> Optional[float]:
         ts = []
@@ -395,6 +580,22 @@ class PipelinedRuntime:
         dl = self.engine.batcher.next_deadline()
         if dl is not None:
             ts.append(dl)
+        # self-driven future transitions: quarantine probes / retry
+        # backoffs (multi-slice), the breaker's next service probe, and
+        # pending fault-plan events — without these the virtual clock
+        # would grind through 1e-4 stall ticks (or give up) waiting for
+        # a recovery that is only time-gated
+        nw = getattr(self.engine, "next_wakeup", None)
+        if nw is not None:
+            t = nw()
+            if t is not None:
+                ts.append(t)
+        if self._brk_open and not self._brk_probing:
+            ts.append(self._brk_retry_at)
+        if self.injector is not None:
+            t = self.injector.next_at()
+            if t is not None:
+                ts.append(t)
         return min(ts) if ts else None
 
     def _sample(self) -> None:
@@ -433,29 +634,41 @@ class PipelinedRuntime:
         }
 
     def reset_metrics(self) -> None:
-        """Clear telemetry, shed records, and every counter that pairs with
-        them (benchmark warmup boundary) — stats must stay consistent with
-        the shed list (shed_slo + shed_backpressure + shed_error ==
-        len(shed)) across the reset."""
+        """Clear telemetry, shed/dead records, and every counter that pairs
+        with them (benchmark warmup boundary) — stats must stay consistent
+        with the shed list (shed_slo + shed_backpressure + shed_error +
+        shed_malformed == len(shed), dead == len(dead)) across the reset.
+        Breaker open/probing state is deliberately KEPT (a reset must not
+        silently close an open breaker); only its counters restart."""
         for st in self._depths.values():
             st.reset()
         self._pre_busy.reset()
         self.shed = []
+        self.dead = []
+        self.shed_reasons = {}
+        self.dead_reasons = {}
+        self._pp_retries = {}
+        self._brk_consec = 0
         for k in self.stats:
             self.stats[k] = 0
         if self.service is not None:
             self.service.reset_metrics()
+            self._proc_mark = 0
 
 
 def build_pipelined_runtime(
     cfg, *, n_slices: int = 1, seed: int = 0, ec=None,
     service: Optional[DpuService] = None, rc: Optional[RuntimeConfig] = None,
     params=None, hedge_factor: float = 3.0,
+    max_retries: int = 3, retry_backoff_s: float = 0.0,
+    watchdog_rounds: int = 0, probe_interval_s: float = 0.0,
 ) -> PipelinedRuntime:
     """Convenience mirror of build_engine/build_multislice_engine: one
     continuous-batching engine (or a multi-slice pool) behind the pipelined
     stages. The engine's own inline DPU pass is disabled — preprocessing
-    belongs to the service stage here."""
+    belongs to the service stage here. The failure-semantics knobs
+    (retry budget, watchdog, probe/readmit) apply to the multi-slice
+    fleet; single-engine runtimes have no slice to lose."""
     from dataclasses import replace as dc_replace
 
     from repro.serving.engine import EngineConfig, build_engine
@@ -466,7 +679,9 @@ def build_pipelined_runtime(
     if n_slices > 1:
         engine: Engine = build_multislice_engine(
             cfg, n_slices=n_slices, seed=seed, ec=ec, params=params,
-            hedge_factor=hedge_factor,
+            hedge_factor=hedge_factor, max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s, watchdog_rounds=watchdog_rounds,
+            probe_interval_s=probe_interval_s,
         )
     else:
         engine = build_engine(cfg, seed=seed, ec=ec)

@@ -1,0 +1,512 @@
+"""Fault-injection harness + self-healing fleet proofs (ISSUE 7):
+typed shed/dead-letter bookkeeping, front-door payload validation,
+watchdog quarantine -> probe -> readmit, bounded retry budgets with
+backoff, the DPU circuit breaker's CPU-fallback degradation, prefix-lease
+reconciliation on slice failure, hedge-vs-failure exactly-once semantics,
+and the deterministic chaos-soak replay's conservation + bit-identity
+invariants."""
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import reduced
+from repro.core.batching import kv_bytes_per_token
+from repro.core.batching.buckets import Request
+from repro.core.batching.policy import BatchPolicy
+from repro.core.dpu.runtime import payload_error
+from repro.core.dpu.service import DpuService, DpuServiceConfig
+from repro.models import api
+from repro.serving.engine import EngineConfig, build_engine
+from repro.serving.faults import (
+    DPU_FAIL, MALFORMED, SLICE_FLAP, FaultEvent, FaultPlan, ShedReason,
+    reason_counts, replay_virtual,
+)
+from repro.serving.multislice import MultiSliceEngine
+from repro.serving.runtime import RuntimeConfig, build_pipelined_runtime
+
+# canonical request set shared with test_runtime.py: prompts are
+# deterministic per rid, so the sync single-engine reference covers every
+# chaos scenario (fault recovery must never change WHAT is computed)
+SPEC = [(17, 8), (23, 5), (19, 8), (25, 6), (21, 3), (30, 7),
+        (18, 4), (28, 8), (22, 2), (26, 6)]
+
+
+def _ec():
+    return EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                        max_new_tokens=8, max_prompt_len=32)
+
+
+def _mk(i, *, arrival=0.0, audio=None):
+    n, b = SPEC[i]
+    payload = None
+    if audio is not None:
+        rng = np.random.default_rng(4000 + i)
+        payload = rng.standard_normal(audio).astype(np.float32)
+    return Request(rid=6000 + i, arrival=arrival, length=float(n),
+                   max_new_tokens=b, payload=payload)
+
+
+def _policy(n_slices):
+    return BatchPolicy(batch_max={0: 4}, time_queue=0.0, time_knee=0.1,
+                       n_slices=n_slices, bucket_width=64.0)
+
+
+def _svc():
+    return DpuService(DpuServiceConfig(clock="virtual", max_group=8))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced("tinyllama-1.1b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=cfg.dtype)
+    sync = build_engine(cfg, ec=_ec())
+    sync.params = params
+    sync.submit_many([_mk(i) for i in range(len(SPEC))])
+    sync.run_until_idle()
+    ref = {r.rid: np.asarray(r.payload) for r in sync.completed}
+    assert len(ref) == len(SPEC)
+    return cfg, params, ref
+
+
+def _check(done, ref):
+    rids = [r.rid for r in done]
+    assert len(rids) == len(set(rids))  # exactly once each
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.payload), ref[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / payload validation (no model required)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_generate_deterministic_and_corrupt():
+    rates = {SLICE_FLAP: 4.0, DPU_FAIL: 3.0, MALFORMED: 5.0}
+    a = FaultPlan.generate(11, horizon_s=2.0, n_slices=3, rates=rates,
+                           n_requests=20)
+    b = FaultPlan.generate(11, horizon_s=2.0, n_slices=3, rates=rates,
+                           n_requests=20)
+    assert a.to_json() == b.to_json()
+    assert a.events and a.events == sorted(a.events, key=lambda e: e.at)
+    c = FaultPlan.generate(12, horizon_s=2.0, n_slices=3, rates=rates,
+                           n_requests=20)
+    assert a.to_json() != c.to_json()
+    # corrupt_payloads targets trace indices and reports the victim rids
+    reqs = [_mk(i, audio=1600) for i in range(len(SPEC))]
+    plan = FaultPlan([FaultEvent(at=0.0, kind=MALFORMED, target=3)])
+    bad = plan.corrupt_payloads(reqs)
+    assert bad == [reqs[3].rid]
+    assert payload_error(reqs[3].payload) is not None
+    with pytest.raises(ValueError):
+        FaultEvent(at=0.0, kind="meteor_strike")
+
+
+def test_payload_error_rejects_structural_garbage():
+    ok = np.zeros(1600, np.float32)
+    assert payload_error(ok) is None
+    assert payload_error(None) is not None
+    assert payload_error(object()) is not None
+    assert payload_error(np.zeros((2, 2), np.float32)) is not None  # rank
+    assert payload_error(np.zeros(16, np.int32)) is not None        # dtype
+    assert payload_error(np.zeros(0, np.float32)) is not None       # empty
+    # image modality: DCT coefficient blocks + quantization table
+    img = {"coeffs": np.zeros((4, 4, 8, 8), np.int32),
+           "qtable": np.ones((8, 8), np.int32)}
+    assert payload_error(img, "image") is None
+    assert payload_error({"coeffs": img["coeffs"]}, "image") is not None
+    assert payload_error(ok, "image") is not None
+
+
+def test_reason_counts_collapses_typed_reasons():
+    reasons = {1: ShedReason.SLO, 2: ShedReason.SLO, 3: ShedReason.MALFORMED}
+    assert reason_counts(reasons) == {"slo": 2, "malformed": 1}
+
+
+# ---------------------------------------------------------------------------
+# Front door: typed shedding
+# ---------------------------------------------------------------------------
+
+
+def test_front_door_sheds_malformed_with_typed_reason(setup):
+    """Structurally invalid payloads are shed AT THE DOOR with
+    ShedReason.MALFORMED — the DpuService never sees them (a garbage
+    payload inside a same-shape CU batch would kill the whole launch) —
+    while well-formed traffic completes bit-identically."""
+    cfg, params, ref = setup
+    svc = _svc()
+    rt = build_pipelined_runtime(cfg, ec=_ec(), params=params, service=svc)
+    good = [_mk(i, audio=1600) for i in range(4)]
+    bad_rank = _mk(4)
+    bad_rank.payload = np.zeros((2, 2), np.float32)
+    bad_type = _mk(5)
+    bad_type.payload = object()
+    rt.submit(good + [bad_rank, bad_type], now=0.0)
+    done = rt.run_until_idle()
+    _check(done, ref)
+    assert {r.rid for r in done} == {r.rid for r in good}
+    assert {r.rid for r in rt.shed} == {bad_rank.rid, bad_type.rid}
+    assert rt.shed_reasons[bad_rank.rid] is ShedReason.MALFORMED
+    assert rt.shed_counts() == {"malformed": 2}
+    assert rt.stats["shed_malformed"] == 2
+    assert svc.stats["submitted"] == 4  # the garbage never reached the CUs
+    assert rt.conservation_ok()
+
+
+def test_slo_and_overflow_sheds_are_typed(setup):
+    """The pre-existing shed paths now carry enumerated reasons instead of
+    bare counters: slo for a blown deadline, overflow for a full ingest."""
+    cfg, params, ref = setup
+    rt = build_pipelined_runtime(
+        cfg, ec=_ec(), params=params,
+        rc=RuntimeConfig(slo_s=0.5, max_ingest=2),
+    )
+    rt.seg_ema = 10.0  # calibrated: any request models as over-deadline
+    late = _mk(0)
+    rt.submit(late, now=0.0)
+    assert rt.shed_reasons[late.rid] is ShedReason.SLO
+    rt.seg_ema = None
+    over = [_mk(i) for i in range(1, 5)]
+    rt.submit(over, now=0.0)            # ingest bound 2: two overflow
+    counts = rt.shed_counts()
+    assert counts["slo"] == 1 and counts["overflow"] == 2
+    rt.run_until_idle()
+    _check(rt.completed, ref)
+    assert rt.conservation_ok()
+
+
+# ---------------------------------------------------------------------------
+# Retry budgets + backoff (multi-slice)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_budget_exhaustion_dead_letters(setup):
+    """A request requeued by slice failures past max_retries lands in the
+    dead-letter queue with RETRIES_EXHAUSTED instead of cycling forever;
+    its retry bookkeeping is dropped."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(1), _ec(), n_slices=1,
+                          max_retries=1)
+    reqs = [Request(rid=7100 + i, arrival=0.0, length=17.0 + i,
+                    max_new_tokens=4) for i in range(2)]
+    ms.submit_many(reqs)
+    ms._dispatch(time.monotonic())      # streamed, not yet advanced
+    assert len(ms._inflight) == 2
+    assert len(ms.fail_slice(0)) == 2   # retry 1/1: still within budget
+    ms.recover_slice(0)
+    ms._dispatch(time.monotonic())
+    assert len(ms._inflight) == 2
+    assert ms.fail_slice(0) == []       # retry 2 > budget: nothing requeued
+    assert len(ms.dead) == 2
+    assert all(ms.dead_reasons[r.rid] is ShedReason.RETRIES_EXHAUSTED
+               for r in ms.dead)
+    assert ms.stats["dead_lettered"] == 2
+    assert ms.sched.retries == {}       # forget() dropped the bookkeeping
+    ms.recover_slice(0)
+    assert not ms.busy()                # dead rids left no queued residue
+    assert ms.run_until_idle() == []
+
+
+def test_retry_backoff_holds_redispatch(setup):
+    """With retry_backoff_s set, a requeued rid is held out of dispatch
+    until its exponential backoff expires (deterministic on an explicit
+    clock)."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+                          retry_backoff_s=0.5)
+    req = Request(rid=7200, arrival=0.0, length=17.0, max_new_tokens=4)
+    ms.submit_many([req])
+    # explicit clock anchored to the submit stamp (admission stamps
+    # preprocessed_at with the wall clock); every `now` below is explicit,
+    # so the backoff window is deterministic without sleeping
+    t0 = time.monotonic()
+    ms._dispatch(t0)
+    sid = next(iter(ms._inflight[req.rid].copies))
+    ms.fail_slice(sid, now=t0)          # backoff: not before t0 + 0.5
+    assert ms._inflight == {}
+    assert ms.next_wakeup() == pytest.approx(t0 + 0.5)
+    ms._dispatch(t0 + 0.2)
+    assert ms._inflight == {}           # held back (other slice is healthy!)
+    ms._dispatch(t0 + 0.6)
+    assert req.rid in ms._inflight      # backoff expired: redispatched
+    ms.recover_slice(sid)
+    done = ms.run_until_idle()
+    assert [r.rid for r in done] == [req.rid] and ms.dead == []
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: silent-hang detection -> quarantine -> probe -> readmit
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_quarantines_probes_and_readmits(setup):
+    """A slice that stays busy without advancing (a SILENT hang — nothing
+    called fail_slice) is quarantined by the watchdog after
+    watchdog_rounds no-advance rounds; its work requeues and completes
+    elsewhere; once the stall clears, the periodic probe re-admits the
+    slice with a REBUILT engine, and it serves traffic again."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+                          watchdog_rounds=3, probe_interval_s=0.05)
+    ms.submit_many([_mk(i) for i in range(4)])
+    now = time.monotonic()              # explicit clock from here on
+    ms._dispatch(now)
+    sid = next(iter(next(iter(ms._inflight.values())).copies))
+    ms.stalled_slices.add(sid)          # hung device: silent, un-announced
+    old_engine = ms.engines[sid]
+    for _ in range(3):                  # 3 busy-no-advance rounds
+        now += 1e-3
+        ms.step(now)
+    assert not ms.sched.slices[sid].healthy     # watchdog verdict
+    assert sid in ms._quarantined
+    assert ms.stats["quarantined"] == 1
+    # stalled: the probe keeps failing, quarantine persists
+    now = ms._quarantined[sid] + 1e-3
+    ms.step(now)
+    assert sid in ms._quarantined and ms.stats["readmitted"] == 0
+    ms.stalled_slices.discard(sid)      # device heals
+    now = ms._quarantined[sid] + 1e-3
+    ms.step(now)
+    assert sid not in ms._quarantined
+    assert ms.sched.slices[sid].healthy
+    assert ms.stats["readmitted"] == 1
+    assert ms.engines[sid] is not old_engine    # rebuilt from scratch
+    done = ms.run_until_idle()
+    assert len(done) == 4
+    _check(done, ref)
+    assert ms.dead == []                # requeues stayed within budget
+    # the readmitted slice genuinely rejoins dispatch
+    ms.submit_many([_mk(i) for i in range(4, 8)])
+    ms.run_until_idle()
+    assert ms.engines[sid].stats["admitted"] > 0
+
+
+def test_runtime_flap_quarantine_recovers_and_stays_bit_identical(setup):
+    """End-to-end through the pipelined runtime on the virtual clock: a
+    slice flap (silent stall window from a FaultPlan) is detected,
+    quarantined, and re-admitted after the fault heals; every request
+    completes bit-identically and conservation holds."""
+    cfg, params, ref = setup
+    rt = build_pipelined_runtime(cfg, n_slices=2, ec=_ec(), params=params,
+                                 watchdog_rounds=5, probe_interval_s=0.02)
+    plan = FaultPlan([FaultEvent(at=0.0, kind=SLICE_FLAP, target=0,
+                                 duration=0.1)])
+    reqs = [_mk(i) for i in range(len(SPEC))]
+    done = replay_virtual(rt, reqs, plan)
+    assert len(done) == len(SPEC)
+    _check(done, ref)
+    ms = rt.engine
+    assert ms.stats["quarantined"] >= 1
+    assert ms.stats["readmitted"] >= 1
+    assert ms._quarantined == {}        # the soak ends with the fleet healed
+    assert all(s.healthy for s in ms.sched.slices.values())
+    assert rt.conservation_ok()
+
+
+# ---------------------------------------------------------------------------
+# DPU circuit breaker: degrade to CPU, probe, recover
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_trips_degrades_to_cpu_and_recovers(setup):
+    """Repeated DPU launch failures trip the breaker: payload traffic
+    degrades to the synchronous CPU preprocessing path (slower, NOT shed),
+    a later probe launch succeeds and closes the breaker, and every
+    request completes bit-identically — payloads never influence decode
+    tokens."""
+    cfg, params, ref = setup
+    svc = _svc()
+    rt = build_pipelined_runtime(
+        cfg, ec=_ec(), params=params, service=svc,
+        rc=RuntimeConfig(preprocess_retries=3, breaker_threshold=1,
+                         breaker_probe_s=0.05),
+    )
+    wave1 = [_mk(i, audio=1600) for i in range(3)]
+    wave2 = [_mk(i, arrival=0.2, audio=1600) for i in range(3, 6)]
+    plan = FaultPlan([FaultEvent(at=0.0, kind=DPU_FAIL, param=1)])
+    done = replay_virtual(rt, wave1 + wave2, plan)
+    assert len(done) == 6
+    _check(done, ref)
+    assert rt.stats["breaker_trips"] == 1
+    assert rt.stats["pp_retries"] >= 1      # the failed group re-entered
+    assert rt.stats["cpu_fallback"] >= 1    # degraded mode really served
+    assert not rt._brk_open                 # wave-2 probe closed the breaker
+    assert rt.dead == [] and rt.shed == []
+    assert rt.conservation_ok()
+
+
+def test_poison_requests_dead_letter_after_preprocess_retries(setup):
+    """A request whose launches keep failing past preprocess_retries is
+    dead-lettered as POISON (terminal server-side verdict), while
+    unaffected traffic completes."""
+    cfg, params, ref = setup
+    svc = _svc()
+    rt = build_pipelined_runtime(
+        cfg, ec=_ec(), params=params, service=svc,
+        rc=RuntimeConfig(preprocess_retries=1),
+    )
+    poisoned = [_mk(i, audio=1600) for i in range(2)]   # one shape group
+    clean = [_mk(5)]                                    # no payload
+    svc.inject_launch_failures(2)   # group fails, retries once, fails again
+    rt.submit(poisoned + clean, now=0.0)
+    done = rt.run_until_idle()
+    assert {r.rid for r in done} == {clean[0].rid}
+    _check(done, ref)
+    assert {r.rid for r in rt.dead} == {r.rid for r in poisoned}
+    assert rt.dead_counts() == {"poison": 2}
+    assert rt.stats["dead"] == 2
+    assert rt.conservation_ok()
+
+
+def test_legacy_shed_contract_without_retry_budget(setup):
+    """preprocess_retries=0 keeps the legacy contract: the first failed
+    launch sheds the group — now with a typed PREPROCESS_ERROR reason."""
+    cfg, params, ref = setup
+    svc = _svc()
+    rt = build_pipelined_runtime(cfg, ec=_ec(), params=params, service=svc)
+    reqs = [_mk(i, audio=1600) for i in range(2)]
+    svc.inject_launch_failures(1)
+    rt.submit(reqs, now=0.0)
+    rt.run_until_idle()
+    assert rt.shed_counts() == {"preprocess_error": 2}
+    assert rt.stats["shed_error"] == 2
+    assert rt.conservation_ok()
+
+
+# ---------------------------------------------------------------------------
+# Prefix-lease reconciliation on slice failure
+# ---------------------------------------------------------------------------
+
+
+def test_fail_slice_releases_prefix_leases_under_eviction_pressure(setup):
+    """Failing a slice mid-prefill releases every prefix lease its victims
+    pinned — eviction afterwards drains the store to ANY budget instead of
+    deadlocking on a ghost pin — and the requeued requests complete
+    elsewhere with identical tokens."""
+    cfg, params, _ = setup
+    ec = EngineConfig(continuous=True, max_slots=4, segment_len=4,
+                      max_new_tokens=8, max_prompt_len=128,
+                      chunk_lens=(8,), prefix_cache_bytes=64 << 20)
+    rng = np.random.default_rng(42)
+    template = rng.integers(0, cfg.vocab, 80).astype(np.int32)
+    prompts = [np.concatenate([template,
+                               rng.integers(0, cfg.vocab, s).astype(np.int32)])
+               for s in (5, 11, 23)]
+
+    def _wave(wave):
+        return [Request(rid=7300 + 100 * wave + i, arrival=0.0,
+                        length=float(len(p)), prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+
+    ms = MultiSliceEngine(cfg, params, _policy(2), ec, n_slices=2)
+    ms.submit_many(_wave(1))            # warm the per-slice stores
+    wave1 = list(ms.run_until_idle())   # snapshot: completed is live
+    assert len(wave1) == 3
+    by_idx = {r.rid % 100: np.asarray(r.payload) for r in wave1}
+    warm = [sid for sid, e in ms.engines.items()
+            if e.prefix_store.bytes_used > 0]
+    assert warm
+    ms.submit_many(_wave(2))            # same templates: these take leases
+    ms._dispatch(time.monotonic())
+    ms.step(time.monotonic() + 60)      # admit a chunk: leases get pinned
+    pinned = [sid for sid, e in ms.engines.items()
+              if e.prefix_lease_count() > 0]
+    assert pinned                       # affinity landed hits on a warm slice
+    sid = pinned[0]
+    store = ms.engines[sid].prefix_store
+    ms.fail_slice(sid)
+    assert ms.engines[sid].prefix_lease_count() == 0
+    assert store._leases == []          # no ghost pin survives the owner
+    store.bytes_budget = kv_bytes_per_token(cfg) * 8
+    store._evict_to_budget()            # would loop forever under a pin held
+    assert store.bytes_used <= store.bytes_budget
+    done = ms.run_until_idle()          # requeued work completes elsewhere
+    assert len(done) == 6               # both waves, exactly once each
+    for r in done:
+        if r.rid >= 7400:
+            np.testing.assert_array_equal(np.asarray(r.payload),
+                                          by_idx[r.rid % 100])
+
+
+# ---------------------------------------------------------------------------
+# Hedge in flight + slice failure: exactly-once
+# ---------------------------------------------------------------------------
+
+
+def test_hedged_request_survives_primary_slice_failure(setup):
+    """Satellite: a request hedged onto a twin while its primary slice
+    FAILS (and later recovers) completes exactly once via the surviving
+    copy — no double-requeue, no retry charge, and cancelling the dead
+    copy again is an idempotent no-op."""
+    cfg, params, ref = setup
+    ms = MultiSliceEngine(cfg, params, _policy(2), _ec(), n_slices=2,
+                          hedge_factor=1.5)
+    ms.fixed_expected_s = 1e-4          # deterministic straggler detection
+    ms.submit_many([_mk(0), _mk(1)])
+    ms._dispatch(time.monotonic())
+    assert len(ms._inflight) == 2
+    sid = next(iter(next(iter(ms._inflight.values())).copies))
+    victim_rids = [rid for rid, tr in ms._inflight.items()
+                   if sid in tr.copies]
+    ms.stalled_slices.add(sid)          # stall -> hedge clones fire
+    t0 = time.monotonic()
+    while ms.hedges == 0 and time.monotonic() - t0 < 30:
+        ms.step()
+    assert ms.hedges >= 1
+    requeued = ms.fail_slice(sid)       # primary dies mid-hedge
+    assert requeued == []               # twin still runs them: no requeue
+    assert ms.stats["requeued"] == 0
+    assert all(ms.sched.retries.get(rid, 0) == 0 for rid in victim_rids)
+    ms.stalled_slices.discard(sid)
+    ms.recover_slice(sid)               # device comes back
+    done = ms.run_until_idle()
+    assert len(done) == 2
+    _check(done, ref)
+    assert ms.dead == [] and ms._inflight == {}
+    # idempotent twin cancel: the victims are long gone from that engine
+    assert ms.engines[sid].cancel(victim_rids) == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos soak (smoke): conservation + bit-identity under a published plan
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_soak_smoke_conserves_and_stays_bit_identical(setup):
+    """The bench section's invariants in miniature: under a combined plan
+    (slice flap + DPU launch failures + a malformed payload) every
+    submitted request ends exactly one of completed / shed / dead, the
+    quarantined slice is re-admitted, and every survivor's tokens are
+    bit-identical to the fault-free synchronous reference."""
+    cfg, params, ref = setup
+    svc = _svc()
+    rt = build_pipelined_runtime(
+        cfg, n_slices=2, ec=_ec(), params=params, service=svc,
+        rc=RuntimeConfig(preprocess_retries=2, breaker_threshold=1,
+                         breaker_probe_s=0.05),
+        watchdog_rounds=5, probe_interval_s=0.02,
+    )
+    reqs = [_mk(i, arrival=0.01 * i, audio=1600 if i % 2 else None)
+            for i in range(len(SPEC))]
+    plan = FaultPlan([
+        FaultEvent(at=0.0, kind=DPU_FAIL, param=1),
+        FaultEvent(at=0.02, kind=SLICE_FLAP, target=0, duration=0.15),
+        FaultEvent(at=0.0, kind=MALFORMED, target=1),
+    ], seed=7)
+    bad = plan.corrupt_payloads(reqs)
+    assert len(bad) == 1
+    done = replay_virtual(rt, reqs, plan)
+    # conservation: nothing lost, nothing stuck, every exit typed
+    assert rt.conservation_ok()
+    all_rids = {r.rid for r in reqs}
+    out = [r.rid for r in done] + [r.rid for r in rt.shed] \
+        + [r.rid for r in rt.dead]
+    assert sorted(out) == sorted(all_rids)  # exactly-once partition
+    assert rt.shed_reasons[bad[0]] is ShedReason.MALFORMED
+    ms = rt.engine
+    assert ms.stats["quarantined"] >= 1 and ms.stats["readmitted"] >= 1
+    assert all(s.healthy for s in ms.sched.slices.values())
+    assert rt.stats["breaker_trips"] >= 1
+    _check(done, ref)                   # survivors bit-identical

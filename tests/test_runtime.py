@@ -214,8 +214,11 @@ def test_wall_worker_failure_sheds_group_and_keeps_serving(setup):
     and the pipeline drains instead of wedging busy() forever."""
     cfg, ref = setup
     svc = DpuService(DpuServiceConfig(clock="wall", max_group=1))
+    # validation off: this test pins the IN-SERVICE failure contract (the
+    # front-door validator would shed the bad payload before the worker)
     rt = build_pipelined_runtime(
-        cfg, ec=_ec(), service=svc, rc=RuntimeConfig(clock="wall"))
+        cfg, ec=_ec(), service=svc,
+        rc=RuntimeConfig(clock="wall", validate_payloads=False))
     bad = _mk(0)
     bad.payload = object()              # numpy pipeline will raise on this
     good = _mk(1, audio=8000)
@@ -236,7 +239,8 @@ def test_worker_failure_as_last_work_still_recorded(setup):
     cfg, ref = setup
     svc = DpuService(DpuServiceConfig(clock="wall"))
     rt = build_pipelined_runtime(
-        cfg, ec=_ec(), service=svc, rc=RuntimeConfig(clock="wall"))
+        cfg, ec=_ec(), service=svc,
+        rc=RuntimeConfig(clock="wall", validate_payloads=False))
     bad = _mk(2)
     bad.payload = object()
     rt.submit([bad])
@@ -252,7 +256,9 @@ def test_virtual_clock_failure_sheds_group_too(setup):
     and later groups still preprocess."""
     cfg, ref = setup
     svc = DpuService(DpuServiceConfig(clock="virtual", max_group=1))
-    rt = build_pipelined_runtime(cfg, ec=_ec(), service=svc)
+    rt = build_pipelined_runtime(
+        cfg, ec=_ec(), service=svc,
+        rc=RuntimeConfig(validate_payloads=False))
     bad = _mk(3)
     bad.payload = object()
     good = _mk(4, audio=8000)
