@@ -72,6 +72,16 @@ shed/dead reasons, surviving outputs bit-identical to the fault-free run,
 the quarantined slice re-admitted, and post-recovery useful tokens/s >=
 0.9x fault-free.
 
+Part 8 — multi-tenant fleet (PR 8): two different model families (the
+attention LM + a Mamba2 SSM) behind ONE shared admission queue,
+slice-as-tenancy-unit: each tenant's model owns a disjoint slice set with
+its own engines/params/executables, the model router tags and steers every
+request. A mixed two-stream Poisson trace (the shared multi-tenant
+generator from serving/requests.py) replays through the fleet. Gates
+(absolute): per-tenant conservation, per-tenant bit-identity vs that
+model's own single-slice engine, zero cross-tenant routing, and per-slice
+steady-state executables bounded by the tenant's own 2 programs.
+
 Measures useful tokens/s (per-request budgets only — run-to-completion's
 overshoot doesn't count), p50/p99 request latency (completed - arrival),
 p50/p99 TTFT (first_token_at - arrival, in every section), and trace
@@ -93,6 +103,7 @@ from repro.core.batching.buckets import Batch, Request
 from repro.core.dpu.service import DpuService, DpuServiceConfig
 from repro.serving.engine import EngineConfig, ServingEngine, build_engine
 from repro.serving.multislice import MultiSliceEngine, build_multislice_engine
+from repro.serving.requests import WorkloadSpec, generate_requests
 from repro.serving.runtime import PipelinedRuntime, RuntimeConfig
 
 ARCH = "tinyllama-1.1b"
@@ -1192,6 +1203,197 @@ def bench_chaos_soak(cfg) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Part 8 — multi-tenant multi-model fleet (ISSUE 8)
+# ---------------------------------------------------------------------------
+#
+# Two DIFFERENT model families (the attention LM + a Mamba2 SSM) share one
+# fleet: slice-as-tenancy-unit, each tenant's model gets its own slice set
+# (its own engines, params, slot pools, executables) behind ONE shared
+# admission queue with the model router tagging and steering every request.
+# Gates are ABSOLUTE (routing, conservation, and bit-identity are
+# deterministic; there is no tokens/s floor because two models on the one
+# CI device serialize, which measures scheduling, not capacity):
+#
+#   conservation_per_tenant  — every generated request of every tenant
+#                              completes (nothing shed, dead, or stuck);
+#   bit_identical_per_tenant — fleet outputs == that model's own
+#                              single-slice engine on the same requests;
+#   no_cross_tenant_routing  — the routing audit (tenant_stats) shows each
+#                              tenant's requests only ever landed on its
+#                              own disjoint slice set;
+#   executables_bounded      — nothing compiles during the measured trace
+#                              and each slice holds at most its own
+#                              tenant's 2 steady-state programs.
+
+MT_TENANT_B_ARCH = "mamba2-370m"
+MT_TRACE_N = 32
+MT_RATE_QPS = 40.0       # per tenant; the merged stream arrives ~2x that
+MT_SLICES_EACH = 2       # fine partition: 2 slices per tenant, 4 total
+MT_MAX_NEW = 16
+# one prompt bucket per tenant: lognormal(mean 24, sigma 0.05) stays inside
+# 18..31 at 6 sigma, so every prompt lands in the (16, 32] admit bucket and
+# each slice's steady state is exactly admit + segment (2 programs)
+MT_MEAN_LEN = 24.0
+MT_SIGMA = 0.05
+
+
+def _mt_specs(cfgs):
+    """One Poisson stream per tenant, equal weights. This is satellite 2's
+    shared generator (serving/requests.py): rids live in disjoint per-tenant
+    namespaces and every request carries its tenant's model id plus a REAL
+    tokenized prompt drawn from that tenant's own vocab."""
+    return [
+        (WorkloadSpec(modality="text", rate_qps=MT_RATE_QPS,
+                      mean_len=MT_MEAN_LEN, sigma=MT_SIGMA, max_len=32.0,
+                      vocab=c.vocab, model=name, seed=61 + k), 1.0)
+        for k, (name, c) in enumerate(sorted(cfgs.items()))
+    ]
+
+
+def _warmup_tenants(ms: MultiSliceEngine, names, seed: int = 129):
+    """Per-tenant warm wave (one full admission batch per slice of that
+    tenant's set), so every slice engine compiles ITS model's admit bucket
+    + segment program outside the measured window."""
+    rng = np.random.default_rng(seed)
+    rid = 985000
+    reqs = []
+    for name in names:
+        n = len(ms.slices_of(name)) * MAX_SLOTS
+        reqs += [
+            Request(rid=(rid := rid + 1), arrival=0.0,
+                    length=float(rng.integers(*PROMPT_RANGE)),
+                    max_new_tokens=int(min(BUDGETS)), model=name)
+            for _ in range(n)
+        ]
+    ms.submit_many(reqs)
+    ms.run_until_idle()
+    ms.reset_metrics()
+
+
+def bench_multi_tenant(cfg) -> dict:
+    import jax
+
+    from repro.models import api
+    from repro.serving.multislice import TenantSpec
+
+    cfg_b = reduced(MT_TENANT_B_ARCH)
+    cfgs = {ARCH: cfg, MT_TENANT_B_ARCH: cfg_b}
+    ec = EngineConfig(
+        max_new_tokens=MT_MAX_NEW, continuous=True, max_slots=MAX_SLOTS,
+        segment_len=SEGMENT_LEN, max_prompt_len=32)
+    specs = _mt_specs(cfgs)
+
+    # per-tenant single-slice references: same PRNGKey(0) init, the same
+    # requests (the generator is deterministic), arrivals zeroed — the
+    # fleet's per-request outputs must match these bit-for-bit
+    refs, ref_counts = {}, {}
+    for name, c in cfgs.items():
+        single = build_engine(c, ec=ec)
+        mine = [r for r in generate_requests(specs, MT_TRACE_N)
+                if r.model == name]
+        ref_counts[name] = len(mine)
+        for r in mine:
+            r.arrival = 0.0
+        single.submit_many(mine)
+        single.run_until_idle()
+        refs[name] = {r.rid: np.asarray(r.payload) for r in single.completed}
+    assert sum(ref_counts.values()) == MT_TRACE_N, ref_counts
+
+    params = {name: api.init_params(c, jax.random.PRNGKey(0), dtype=c.dtype)
+              for name, c in cfgs.items()}
+    ms = build_multislice_engine(
+        n_slices=len(cfgs) * MT_SLICES_EACH, ec=ec,
+        tenants=[TenantSpec(cfg=c, name=name, n_slices=MT_SLICES_EACH,
+                            params=params[name])
+                 for name, c in cfgs.items()])
+    _warmup_tenants(ms, list(cfgs))
+    traces_before = ms.trace_counts()
+    stats_before = ms.slice_stats()
+    hedges_before = ms.hedges
+
+    def _factory(_rel, _spec, t0):
+        reqs = generate_requests(specs, MT_TRACE_N)
+        for r in reqs:
+            r.arrival += t0
+        return reqs
+
+    makespan, reqs = _replay(ms, None, None, factory=_factory)
+    traces_after = ms.trace_counts()
+    stats = ms.slice_stats()
+
+    done = ms.completed
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    bit_identical = all(
+        np.array_equal(np.asarray(r.payload), refs[r.model][r.rid])
+        for r in done)
+    ts = ms.tenant_stats()
+    by_tenant = {}
+    for name in cfgs:
+        mine = [r for r in done if r.model == name]
+        by_tenant[name] = {
+            "requests": ref_counts[name],
+            "completed": len(mine),
+            "useful_tokens": sum(len(r.payload) for r in mine),
+            "slices": sorted(ts[name]["slices"]),
+            "routed_to": sorted(set(ts[name]["routed_to"])),
+        }
+    slice_sets = [set(t["slices"]) for t in by_tenant.values()]
+    disjoint = all(a.isdisjoint(b) for i, a in enumerate(slice_sets)
+                   for b in slice_sets[i + 1:])
+
+    useful = sum(len(r.payload) for r in done)
+    q = _latency_quantile(done)
+    tq = _ttft_quantile(done)
+    per_slice = {  # counters diffed to the measured window (warmup excluded)
+        str(sid): {
+            "model": stats[sid]["model"],
+            "admitted": stats[sid]["admitted"] - stats_before[sid]["admitted"],
+            "segments": stats[sid]["segments"] - stats_before[sid]["segments"],
+            "mean_slot_occupancy": stats[sid]["mean_slot_occupancy"],
+            "steady_state_traces": traces_after[sid],
+        }
+        for sid in sorted(traces_after)
+    }
+    return {
+        "trace": {
+            "requests": MT_TRACE_N,
+            "per_tenant_rate_qps": MT_RATE_QPS,
+            "tenants": {name: MT_SLICES_EACH for name in cfgs},
+            "max_new_tokens": MT_MAX_NEW,
+            "max_slots": MAX_SLOTS,
+            "segment_len": SEGMENT_LEN,
+            "prompt_bucket": 32,
+        },
+        "n_slices": len(ms.engines),
+        "requests": len(done),
+        "makespan_s": round(makespan, 4),
+        "useful_tokens": useful,
+        "tokens_per_s": round(useful / makespan, 1),
+        "p50_latency_ms": round(1e3 * q(0.50), 2),
+        "p99_latency_ms": round(1e3 * q(0.99), 2),
+        "ttft_p50_ms": round(1e3 * tq(0.50), 2),
+        "ttft_p99_ms": round(1e3 * tq(0.99), 2),
+        "hedges": ms.hedges - hedges_before,
+        "trace_count_during_trace": sum(traces_after.values())
+        - sum(traces_before.values()),
+        "per_tenant": by_tenant,
+        "per_slice": per_slice,
+        # --- gates ---
+        "conservation_per_tenant": bool(
+            not ms.dead and not ms.busy()
+            and all(t["completed"] == t["requests"] > 0
+                    for t in by_tenant.values())),
+        "bit_identical_per_tenant": bool(bit_identical),
+        "no_cross_tenant_routing": bool(disjoint and all(
+            set(t["routed_to"]) <= set(t["slices"])
+            for t in by_tenant.values())),
+        "executables_bounded": bool(
+            sum(traces_after.values()) == sum(traces_before.values())
+            and all(c <= 2 for c in traces_after.values())),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -1237,6 +1439,8 @@ def main():
             cfg, TRACE_N, MEAN_INTERARRIVAL_S),
         # deterministic virtual-clock replay: same size in smoke and full
         "chaos_soak": bench_chaos_soak(cfg),
+        # two-model fleet: same size in smoke and full (gates are absolute)
+        "multi_tenant": bench_multi_tenant(cfg),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -1284,6 +1488,13 @@ def main():
           f"breaker={ch['breaker_exercised']}, "
           f"post_recovery={ch['post_recovery_ratio']:.3f}x "
           f"(ok={ch['post_recovery_ok']})")
+    mt = result["multi_tenant"]
+    print(f"tenants:      {mt['tokens_per_s']:.1f} useful tokens/s, "
+          f"{len(mt['per_tenant'])} models x {MT_SLICES_EACH} slices each, "
+          f"conservation={mt['conservation_per_tenant']}, "
+          f"bit_identical={mt['bit_identical_per_tenant']}, "
+          f"isolation={mt['no_cross_tenant_routing']}, "
+          f"executables_bounded={mt['executables_bounded']}")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,8 @@ class BatchPolicy:
         return self.batch_max[nearest]
 
 
-def pick_segment_len(choices: Sequence[int], *, waiting: int, free_slots: int) -> int:
+def pick_segment_len(choices: Sequence[int], *, waiting: int, free_slots: int,
+                     profile: Optional[KneeProfile] = None) -> int:
     """Decode-segment length for continuous batching, against the knee.
 
     Segment length is the join/leave granularity: queued requests can only be
@@ -46,9 +47,24 @@ def pick_segment_len(choices: Sequence[int], *, waiting: int, free_slots: int) -
       * requests waiting but slots free   -> middle S (they join next
         boundary anyway; don't give up all the fusion);
       * idle queue                        -> longest S (pure throughput).
+
+    With a knee `profile` for the workload's prompt bucket
+    (core/batching/knee.py), the waiting cases stop guessing — the same
+    wiring pick_chunk_len got in PR 6: a segment of S steps stalls
+    admission for roughly the latency of S sequential token positions, so
+    the MEASURED batch knee (the largest size whose latency is still
+    ~flat) bounds the interruption. We take the largest choice at or under
+    the knee while requests wait with slots still free (throughput without
+    blowing the queueing budget), dropping to the smallest knee-safe
+    choice when the pool is full; the pressure heuristic above remains the
+    fallback when no profile is available, and an idle queue always takes
+    the longest segment (nobody is waiting on the boundary).
     """
     cs = sorted(set(int(c) for c in choices))
     assert cs and cs[0] > 0, choices
+    if waiting and profile is not None:
+        safe = [c for c in cs if c <= profile.batch_knee] or cs[:1]
+        return safe[0] if free_slots == 0 else safe[-1]
     if waiting and free_slots == 0:
         return cs[0]
     if waiting:

@@ -10,10 +10,16 @@ tracked per request id):
 
 * dispatch — the caller streams individual requests into any slice with a
   free slot; `pick_slice` chooses the least-loaded healthy slice (by the
-  caller-supplied load map, i.e. `slots_in_use() + admission_depth()`), so
-  later admission groups join a busy slice's pool mid-flight instead of
-  queueing behind a resident batch. `dispatch(rid, sid, ...)` records a
-  *holder*: (slice, dispatched_at, expected_s).
+  caller-supplied load map, i.e. `slots_in_use() + admission_depth()`;
+  `capacity` may be a scalar or a per-slice map for fleets whose tenants
+  size their slot pools differently), so later admission groups join a
+  busy slice's pool mid-flight instead of queueing behind a resident
+  batch. `dispatch(rid, sid, ...)` records a *holder*: (slice,
+  dispatched_at, expected_s). TENANCY is the caller's invariant, enforced
+  via `exclude`: in a multi-tenant fleet (serving/multislice.py) every
+  pick — stream dispatch, hedge twin, failure/resize redispatch — excludes
+  all slices not owned by the request's model, so a request can only ever
+  hold slots on its own tenant's slices.
 * hedging — PROGRESS-GATED straggler detection: the caller stamps
   `note_progress(sid, now)` whenever a slice's engine advances, and a
   holder is a straggler only once `hedge_factor x` its expected execution
@@ -51,8 +57,15 @@ batch-granularity scheduler survives as `BatchSliceScheduler` below.
 engine. Pulls knee-formed batches from the BucketedBatcher as they come due,
 keeps an oldest-deadline-first backlog, and each engine iteration plans which
 requests join free KV slots and how long the next decode segment runs
-(policy.pick_segment_len). Admission groups stay bucketed + left-padded, so
-the prefill half of the engine remains one executable per prompt bucket.
+(policy.pick_segment_len, knee-profile bounded when profiles are wired in).
+Admission groups stay bucketed + left-padded AND tenant-pure: the group key
+is (Request.model, pow2 prompt bucket), so in a multi-tenant fleet two
+models' same-length prompts never share an admission group — each group is
+executable-compatible with exactly one tenant's engines. `plan()` accepts
+either a scalar `free_slots` (single-tenant pool) or a per-tenant
+{model: free slots} map; with the map, EDF order is preserved PER TENANT
+and a tenant whose slices are all full never blocks another tenant's
+requests sitting behind it in the backlog (no cross-tenant head-of-line).
 """
 from __future__ import annotations
 
@@ -89,11 +102,17 @@ class SlotScheduler:
     """
 
     def __init__(self, policy: BatchPolicy, *, max_slots: int,
-                 segment_len: int = 8, segment_lens: Sequence[int] = ()):
+                 segment_len: int = 8, segment_lens: Sequence[int] = (),
+                 profile_for: Optional[Callable[[int], Any]] = None):
         self.policy = policy
         self.max_slots = max_slots
         self.segment_len = segment_len
         self.segment_lens = tuple(sorted(set(segment_lens))) or (segment_len,)
+        # padded prompt length -> KneeProfile (or None): lets
+        # pick_segment_len bound the segment by the measured batch knee
+        # instead of the pure pool-pressure heuristic — the same wiring
+        # pick_chunk_len got (ServingEngine._profile_for supplies it)
+        self._profile_for = profile_for
         self._backlog: List[Request] = []
 
     def backlog(self) -> int:
@@ -127,11 +146,14 @@ class SlotScheduler:
             self._backlog.sort(key=Request.ready_at)
 
     @staticmethod
-    def _lp_bucket(req: Request) -> int:
-        """Power-of-two prompt-length bucket (the engine's admit-executable
-        key); admission groups are kept bucket-pure so a short prompt never
-        pays a long neighbor's padded prefill."""
-        return next_pow2(max(1, int(req.length)))
+    def _lp_bucket(req: Request) -> Tuple[Optional[str], int]:
+        """Per-tenant admission-group key: (model id, power-of-two
+        prompt-length bucket — the engine's admit-executable key).
+        Admission groups are kept bucket-pure so a short prompt never pays
+        a long neighbor's padded prefill, and TENANT-pure so a group is
+        only ever executable on its own model's engines (model=None is the
+        single-tenant default and groups exactly as before)."""
+        return (getattr(req, "model", None), next_pow2(max(1, int(req.length))))
 
     def cancel(self, rids) -> int:
         """Drop backlogged requests by rid (hedge-twin cancellation or an
@@ -155,21 +177,51 @@ class SlotScheduler:
         self._backlog.sort(key=Request.ready_at)
 
     def plan(self, batcher: BucketedBatcher, now: float, *,
-             free_slots: int) -> SlotPlan:
+             free_slots) -> SlotPlan:
+        """`free_slots` is a scalar (single pool) or a {model: free slots}
+        map (multi-tenant fleet). With the map, requests are taken in EDF
+        order but only against THEIR tenant's quota — a tenant whose
+        slices are all full leaves its requests in the backlog without
+        blocking another tenant's requests queued behind them."""
         self.pull(batcher, now)
-        free_slots = min(free_slots, self.max_slots)  # pool capacity bound
         admissions: List[List[Request]] = []
-        if free_slots and self._backlog:
-            take = self._backlog[:free_slots]
-            del self._backlog[:free_slots]
-            groups: Dict[int, List[Request]] = {}
-            for r in take:  # bucket-pure groups, EDF order preserved
+        if isinstance(free_slots, dict):
+            quota = {m: max(0, int(v)) for m, v in free_slots.items()}
+            budget = min(sum(quota.values()), self.max_slots)
+            take, keep = [], []
+            for r in self._backlog:
+                m = getattr(r, "model", None)
+                if len(take) < budget and quota.get(m, 0) > 0:
+                    take.append(r)
+                    quota[m] -= 1
+                else:
+                    keep.append(r)
+            self._backlog = keep
+            free_after = budget - len(take)
+        else:
+            free_slots = min(free_slots, self.max_slots)  # pool capacity
+            take = self._backlog[:free_slots] if free_slots else []
+            if take:
+                del self._backlog[:len(take)]
+            free_after = free_slots - len(take)
+        if take:
+            groups: Dict[Tuple[Optional[str], int], List[Request]] = {}
+            for r in take:  # tenant- and bucket-pure groups, EDF preserved
                 groups.setdefault(self._lp_bucket(r), []).append(r)
             admissions.extend(groups.values())
         waiting = len(self._backlog) + batcher.pending()
-        free_after = free_slots - sum(len(g) for g in admissions)
+        prof = None
+        if self._profile_for is not None and waiting:
+            # knee profile of the dominant waiting/admitted prompt bucket:
+            # the largest padded length in play bounds the stall a long
+            # segment imposes on the queue
+            lps = [self._lp_bucket(r)[1] for r in self._backlog]
+            lps.extend(self._lp_bucket(r)[1] for g in admissions for r in g)
+            if lps:
+                prof = self._profile_for(max(lps))
         seg = pick_segment_len(
-            self.segment_lens, waiting=waiting, free_slots=free_after
+            self.segment_lens, waiting=waiting, free_slots=free_after,
+            profile=prof,
         )
         return SlotPlan(admissions=admissions, segment_len=seg)
 
@@ -279,17 +331,23 @@ class SliceScheduler:
         self.slices[slice_id].healthy = True
 
     # --- dispatch ----------------------------------------------------------
-    def pick_slice(self, load: Dict[int, int], capacity: int, *,
+    def pick_slice(self, load: Dict[int, int], capacity, *,
                    exclude: Iterable[int] = ()) -> Optional[int]:
         """Least-loaded healthy slice with a free slot (`load` is the
         caller's occupancy map — slots in use plus admission backlog;
-        `capacity` the per-slice slot count). Ties break toward the slice
-        that has completed the fewest requests, then the lowest id."""
+        `capacity` the per-slice slot count, a scalar or a {sid: slots}
+        map for fleets whose tenants size their pools differently). Ties
+        break toward the slice that has completed the fewest requests,
+        then the lowest id. Tenant constraints arrive via `exclude` — the
+        multi-slice caller excludes every slice the request's model does
+        not own, so this stays a pure capacity/health chooser."""
         exclude = set(exclude)
+        if not isinstance(capacity, dict):
+            capacity = {sid: capacity for sid in self.slices}
         cands = [
             sid for sid, s in self.slices.items()
             if s.healthy and sid not in exclude
-            and load.get(sid, 0) < capacity
+            and load.get(sid, 0) < capacity.get(sid, 0)
         ]
         if not cands:
             return None

@@ -8,9 +8,10 @@ service wrapper for the serving runtime (serving/runtime.py):
 * ONE CU pool (`DPU`) shared across every slice — the paper's DPU is a
   board-level resource, not a per-slice one;
 * a bounded input queue of raw requests; `step()` drains it into same-shape
-  groups (grouping key: `runtime.group_key`) and launches each group as one
-  batched CU pass (`DPU.process_batch` — one Pallas launch per functional
-  unit per stack);
+  same-tenant groups (grouping key: `(Request.model, runtime.group_key)` —
+  a tenant's preprocessing recipe is part of its model, so launches never
+  mix tenants) and launches each group as one batched CU pass
+  (`DPU.process_batch` — one Pallas launch per functional unit per stack);
 * a bounded double-buffered ready queue toward admission: the service fills
   the back buffer while admission drains the front, so neither side ever
   iterates a buffer the other is mutating.
@@ -310,16 +311,21 @@ class DpuService:
         return outs
 
     def _form_group(self) -> List[Request]:
-        """Pop the head-of-line request plus every same-shape follower (up
-        to max_group), preserving FIFO priority of the head. Same key as
-        DPU.process_batch's internal grouping (runtime.group_key)."""
+        """Pop the head-of-line request plus every same-shape SAME-TENANT
+        follower (up to max_group), preserving FIFO priority of the head.
+        The launch key is (Request.model, runtime.group_key): shape
+        compatibility alone is not enough in a multi-tenant fleet — each
+        tenant's preprocessing recipe belongs to its model, so two models'
+        same-shape payloads never share one batched CU launch
+        (model=None, the single-tenant default, groups exactly as
+        before)."""
         head = self._pending.popleft()
-        key = group_key(head.payload)
+        key = (getattr(head, "model", None), group_key(head.payload))
         group = [head]
         kept: Deque[Request] = deque()
         while self._pending and len(group) < self.cfg.max_group:
             r = self._pending.popleft()
-            if group_key(r.payload) == key:
+            if (getattr(r, "model", None), group_key(r.payload)) == key:
                 group.append(r)
             else:
                 kept.append(r)

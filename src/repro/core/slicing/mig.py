@@ -109,3 +109,114 @@ def partition_pod(devices: Sequence, chips_per_slice: int) -> SlicedPod:
     ]
     spec = SliceSpec(slice_name(cps, n_slices), cps, n_slices)
     return SlicedPod(spec=spec, slices=slices, stranded_chips=stranded)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant placement (ISSUE 8): right-sized, fragmentation-aware
+# ---------------------------------------------------------------------------
+#
+# MIGPerf (arxiv 2301.00407): MIG wins when slices are right-sized PER
+# MODEL — a tenant asks for a slice size (chips_per_slice) or a replica
+# count (n_slices). ParvaGPU (arxiv 2409.14447): what makes multi-tenant
+# GPU sharing viable at scale is fragmentation-aware placement — pack the
+# biggest slice asks first (best-fit decreasing over one contiguous chip
+# pool) and account for every stranded chip instead of hiding it.
+
+
+@dataclass(frozen=True)
+class PlacementAsk:
+    """One tenant's slice ask: `n_slices` replicas of `chips_per_slice`
+    chips each (chips_per_slice=0 = "whatever the pod's uniform slice size
+    is" — the replicated/CPU-CI case where slices are logical)."""
+
+    tenant: str
+    n_slices: int = 1
+    chips_per_slice: int = 0
+
+
+@dataclass
+class Placement:
+    """Result of a placement pass: per-tenant contiguous chip runs (one
+    (start, chips) span per slice, in slice order), plus the fragmentation
+    accounting the pass optimized for."""
+
+    assignments: Dict[str, List[Tuple[int, int]]]
+    stranded_chips: int
+    pod_chips: int
+
+    @property
+    def fragmentation(self) -> float:
+        """Stranded fraction of the pod — the ParvaGPU packing objective;
+        0.0 is a perfect pack."""
+        return self.stranded_chips / self.pod_chips if self.pod_chips else 0.0
+
+    def slice_counts(self) -> Dict[str, int]:
+        return {t: len(spans) for t, spans in self.assignments.items()}
+
+
+def plan_placement(pod_chips: int,
+                   asks: Sequence[PlacementAsk]) -> Placement:
+    """Fragmentation-aware placement of tenant slice asks onto one pod.
+
+    Best-fit decreasing: tenants with the LARGEST chips_per_slice place
+    first (a big slice fits only while the pool is still contiguous and
+    large; small slices pack into whatever remains), each taking contiguous
+    chip runs from a single free pool. Ask order breaks ties
+    deterministically. Raises when the asks cannot all fit — the caller
+    (resize / the future partition controller) must shrink an ask rather
+    than silently over-subscribe the pod. Chips no ask covers are stranded
+    and REPORTED (the MIG 2g.10gb(3x) idiom: fragmentation is a measured
+    cost, never hidden)."""
+    order = sorted(
+        range(len(asks)),
+        key=lambda i: (-max(1, asks[i].chips_per_slice), i),
+    )
+    total_ask = sum(max(1, a.chips_per_slice) * max(0, a.n_slices)
+                    for a in asks)
+    if total_ask > pod_chips:
+        raise ValueError(
+            f"placement asks need {total_ask} chips; pod has {pod_chips}"
+        )
+    assignments: Dict[str, List[Tuple[int, int]]] = {
+        a.tenant: [] for a in asks
+    }
+    cursor = 0
+    for i in order:
+        a = asks[i]
+        cps = max(1, a.chips_per_slice)
+        for _ in range(max(0, a.n_slices)):
+            assignments[a.tenant].append((cursor, cps))
+            cursor += cps
+    return Placement(assignments=assignments,
+                     stranded_chips=pod_chips - cursor,
+                     pod_chips=pod_chips)
+
+
+def rebalance_slices(n_slices: int, asks: Dict[str, int]) -> Dict[str, int]:
+    """Re-balance `n_slices` uniform slices between tenants proportionally
+    to their original asks (largest-remainder apportionment), every tenant
+    keeping at least one slice — the elastic-resize path: a fleet resized
+    to a different menu entry re-divides the new slice count between its
+    tenants instead of rebuilding them all onto one model. Deterministic:
+    ties break by larger ask, then tenant-name order."""
+    names = sorted(asks, key=lambda t: (-asks[t], t))
+    if not names:
+        return {}
+    if n_slices < len(names):
+        raise ValueError(
+            f"cannot place {len(names)} tenants on {n_slices} slices"
+        )
+    total = sum(max(1, asks[t]) for t in names)
+    quotas = {t: max(1, asks[t]) * n_slices / total for t in names}
+    counts = {t: max(1, int(quotas[t])) for t in names}
+    # largest remainder fills what the floors (and the >=1 floor) left
+    while sum(counts.values()) < n_slices:
+        t = sorted(names,
+                   key=lambda x: (-(quotas[x] - counts[x]), -asks[x], x))[0]
+        counts[t] += 1
+    # the >=1 floor can over-fill on tiny pods: shave the largest holders
+    while sum(counts.values()) > n_slices:
+        t = sorted((x for x in names if counts[x] > 1),
+                   key=lambda x: (-(counts[x] - quotas[x]), -counts[x], x))[0]
+        counts[t] -= 1
+    return counts

@@ -5,6 +5,9 @@ Local smoke: PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
 Continuous batching (slot pool + segmented decode): add --continuous
                  [--max-slots 8 --segment-len 8]
 Multi-slice (one continuous engine per MIG-analogue slice): --slices N
+Multi-tenant fleet (slice-as-tenancy-unit, one model per slice set,
+one shared admission queue + model router):
+                 --tenants tinyllama-1.1b:2,mamba2-370m:2 --reduced
 Stage-pipelined runtime (decoupled DPU preprocessing overlapped with
 decode, bounded queues + SLO shedding): add --pipelined
                  [--preprocess dpu --slo 2.0]
@@ -36,7 +39,16 @@ def main():
         epilog=MENU_HELP,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--tenants", default="",
+                    help="comma-separated model:slices asks (e.g. "
+                         "'tinyllama-1.1b:2,mamba2-370m:1'): a multi-tenant "
+                         "fleet — every tenant's model gets its own slice "
+                         "set (its own engines, slot pools, executables) "
+                         "behind ONE shared admission queue, requests are "
+                         "tagged and routed per model, and the total slice "
+                         "count is the sum of the asks; replaces "
+                         "--arch/--slices")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=50.0)
@@ -78,7 +90,26 @@ def main():
     from repro.serving.engine import EngineConfig, build_engine
     from repro.serving.requests import WorkloadSpec, generate_requests
 
-    cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    tenant_asks = []
+    for part in args.tenants.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        arch, _, n = part.partition(":")
+        try:
+            n = int(n) if n else 1
+        except ValueError:
+            ap.error(f"--tenants entries are model:slices (got {part!r})")
+        if n < 1:
+            ap.error(f"--tenants slice asks must be >= 1 (got {part!r})")
+        tenant_asks.append((arch.strip(), n))
+    if args.tenants and not tenant_asks:
+        ap.error("--tenants given but holds no model:slices entries")
+    if not tenant_asks and not args.arch:
+        ap.error("--arch is required unless --tenants is given")
+
+    cfg = (reduced(args.arch) if args.reduced else get_config(args.arch)) \
+        if args.arch else None
     chunk_lens = tuple(
         int(c) for c in args.chunk_lens.split(",") if c.strip()
     )
@@ -89,18 +120,44 @@ def main():
             ap.error(f"--chunk-lens entries must be positive powers of two "
                      f"(got {c})")
     ec = EngineConfig(
-        max_new_tokens=args.max_new, continuous=args.continuous,
+        max_new_tokens=args.max_new, continuous=args.continuous or bool(tenant_asks),
         max_slots=args.max_slots, segment_len=args.segment_len,
         max_prompt_len=128,  # covers the workload's max_len=120 prompt bucket
         preprocess=args.preprocess if not args.pipelined else "none",
         chunk_lens=chunk_lens,
     )
-    reqs = generate_requests(
-        WorkloadSpec(modality="text", rate_qps=args.rate, mean_len=48,
-                     max_len=120, vocab=cfg.vocab,  # real tokenized prompts
-                     payload_samples=48000 if args.preprocess == "dpu" else 0),
-        args.requests,
-    )
+
+    tenants = None
+    if tenant_asks:
+        from repro.serving.multislice import TenantSpec
+
+        # duplicate archs get @k-suffixed tenant names (tenant names must
+        # be unique even when two tenants serve the same model config)
+        seen: dict = {}
+        tenants, specs = [], []
+        for i, (arch, n) in enumerate(tenant_asks):
+            tcfg = reduced(arch) if args.reduced else get_config(arch)
+            k = seen.get(arch, 0)
+            seen[arch] = k + 1
+            name = arch if k == 0 else f"{arch}@{k}"
+            tenants.append(TenantSpec(cfg=tcfg, name=name, n_slices=n,
+                                      seed=i))
+            # one Poisson stream per tenant, traffic share ~ slice ask
+            specs.append((WorkloadSpec(
+                modality="text", rate_qps=args.rate, mean_len=48,
+                max_len=120, vocab=tcfg.vocab, model=name, seed=i,
+                payload_samples=48000 if args.preprocess == "dpu" else 0,
+            ), float(n)))
+        n_slices = sum(n for _, n in tenant_asks)
+        reqs = generate_requests(specs, args.requests)
+    else:
+        n_slices = args.slices
+        reqs = generate_requests(
+            WorkloadSpec(modality="text", rate_qps=args.rate, mean_len=48,
+                         max_len=120, vocab=cfg.vocab,  # real tokenized prompts
+                         payload_samples=48000 if args.preprocess == "dpu" else 0),
+            args.requests,
+        )
 
     if args.pipelined:
         from repro.core.dpu.service import DpuService, DpuServiceConfig
@@ -118,10 +175,10 @@ def main():
             service = DpuService(DpuServiceConfig(
                 clock="wall", dpu=DpuConfig(backend="dpu")))
         rt = build_pipelined_runtime(
-            cfg, n_slices=args.slices, ec=ec, service=service,
+            cfg, n_slices=n_slices, ec=ec, service=service,
             rc=RuntimeConfig(clock="wall", slo_s=args.slo,
                              max_ingest=max(64, 2 * args.requests)),
-            hedge_factor=args.hedge_factor,
+            hedge_factor=args.hedge_factor, tenants=tenants,
         )
         # rebase the workload's 0-based arrival times onto the wall clock:
         # the SLO check compares time.monotonic() against arrival + slo, so
@@ -150,11 +207,12 @@ def main():
               f"slots={occ['slots']:.3f}")
         return
 
-    if args.slices > 1:
+    if n_slices > 1 or tenants:
         from repro.serving.multislice import build_multislice_engine
 
         engine = build_multislice_engine(
-            cfg, n_slices=args.slices, ec=ec, hedge_factor=args.hedge_factor
+            cfg, n_slices=n_slices, ec=ec, hedge_factor=args.hedge_factor,
+            tenants=tenants,
         )
         engine.submit_many(reqs)
         done = engine.run_until_idle()
@@ -169,9 +227,14 @@ def main():
             f"p95={1e3*np.percentile(lats,95):.1f}ms"
         )
         for sid, st in sorted(engine.slice_stats().items()):
-            print(f"  slice {sid}: admitted={st['admitted']} "
+            print(f"  slice {sid} [{st['model']}]: admitted={st['admitted']} "
                   f"segments={st['segments']} "
                   f"occupancy={st['mean_slot_occupancy']:.3f}")
+        if tenants:
+            for name, ts in sorted(engine.tenant_stats().items()):
+                print(f"  tenant {name}: slices={sorted(ts['slices'])} "
+                      f"completed={ts['completed']} dead={ts['dead']} "
+                      f"routed_to={sorted(ts['routed_to'])}")
         return
 
     engine = build_engine(cfg, ec=ec)

@@ -277,9 +277,14 @@ class ServingEngine:
             assert self.pool_len >= ec.max_prompt_len + ec.max_new_tokens, (
                 "pool_cache_len too small for max_prompt_len + max_new_tokens"
             )
+            # profile_for lets pick_segment_len bound the segment by the
+            # measured batch knee (same wiring as pick_chunk_len): a long
+            # segment stalls queued admissions for S sequential steps, so
+            # the knee of the dominant waiting prompt bucket caps S
             self.slot_scheduler = SlotScheduler(
                 policy, max_slots=ec.max_slots,
                 segment_len=ec.segment_len, segment_lens=ec.segment_lens,
+                profile_for=self._profile_for,
             )
             self._pool = None                     # allocated on first admit
             self._slots: List[Optional[_Slot]] = [None] * ec.max_slots

@@ -16,17 +16,34 @@ beats one monolithic GPU. This module composes:
                                       with per-request straggler hedging
                                       and failure/resize requeue
 
+THE SLICE IS THE UNIT OF TENANCY. A fleet hosts one or more tenants, each
+a (model config, params, policy, EngineConfig) bundle with its own slice
+ask; `rebalance_slices` (core/slicing/mig.py) apportions the pod's slices
+between tenants and `plan_placement` accounts the chips (fragmentation is
+measured, never hidden). Every slice's engine is built for ITS tenant —
+its own prefill/chunk/segment executables, slot-pool geometry, and prefix
+store — so heterogeneous models (a dense LM next to an SSM) share one pod
+and ONE admission queue without sharing a single compiled program. A model
+ROUTER at the front door (`route`) stamps every Request with its tenant's
+model id; from there tenancy is structural: bucket queues, admission
+groups, DPU launch groups, and slice routing are all keyed by model, and
+`_send` raises on any cross-tenant dispatch rather than serving a request
+on the wrong weights. The single-tenant construction (one cfg/params/
+policy, the legacy signature) is the one-tenant special case of the same
+machinery and behaves exactly as before.
+
 Admission is ONE shared queue — and dispatch is REQUEST -> SLOT streaming:
-`submit_many` runs one batched `DPU.process_batch` preprocessing pass, the
-shared `BucketedBatcher` forms knee-driven batches, the shared
-`SlotScheduler` keeps an EDF backlog, and each `step()` streams individual
-due requests into whichever slice has free slot capacity (least-loaded by
-`slots_in_use() + admission_depth()`). A slice is never reserved for one
-formed batch: later admission groups join a busy slice's pool mid-flight,
-so slot occupancy does not collapse between dispatches (the
-batch-granularity head-of-line the old dispatcher had). The old behaviour
-survives as `dispatch="batch"` — a slice only receives work when fully
-idle — as the benchmark baseline.
+`submit_many` runs one batched `DPU.process_batch` preprocessing pass per
+tenant group, the shared `BucketedBatcher` forms knee-driven batches
+(per-tenant policies, tenant-pure queues), the shared `SlotScheduler`
+keeps an EDF backlog with per-tenant slot quotas, and each `step()`
+streams individual due requests into whichever of THEIR TENANT'S slices
+has free slot capacity (least-loaded by `slots_in_use() +
+admission_depth()`). A slice is never reserved for one formed batch: later
+admission groups join a busy slice's pool mid-flight, so slot occupancy
+does not collapse between dispatches (the batch-granularity head-of-line
+the old dispatcher had). The old behaviour survives as `dispatch="batch"`
+— a slice only receives work when fully idle — as the benchmark baseline.
 
 Per-request semantics (contract in core/batching/scheduler.py):
 
@@ -35,19 +52,24 @@ Per-request semantics (contract in core/batching/scheduler.py):
   engines never race on shared Request fields) onto another slice with a
   free slot; the first copy to complete wins, the loser is cancelled
   mid-flight (`ServingEngine.cancel`), and results are recorded exactly
-  once per rid. Outputs are bit-identical either way: prompts are
-  deterministic per rid and decode is greedy.
+  once per rid. The twin is always a slice of the request's OWN tenant
+  (other tenants' slices are excluded), and outputs are bit-identical
+  either way: prompts are deterministic per rid and decode is greedy.
 * `fail_slice` — evicts a slice; each of its in-flight requests is
   requeued into the shared admission backlog UNLESS a hedge twin still
-  runs it elsewhere (the surviving copy completes alone). Cancellation
+  runs it elsewhere (the surviving copy completes alone). A requeued
+  request redispatches only onto its own tenant's slices. Cancellation
   routes through `ServingEngine.cancel`, which releases the victims'
   prefix-store leases — a failed slice never leaves ghost pins that would
   deadlock eviction.
 * `resize` — elastic MIG reconfiguration mid-trace: cancel in-flight work,
-  re-partition the pod to a different menu entry, rebuild the per-slice
-  engines, and requeue every in-flight request (hedge pairs deduped by
-  rid). Completed requests are unaffected; re-run requests produce the
-  same tokens (deterministic), so a resize loses nothing.
+  re-partition the pod to a different menu entry, RE-BALANCE the new
+  slice count between tenants (largest-remainder over their original
+  asks, every tenant keeping >= 1 slice), rebuild each slice's engine for
+  its newly assigned tenant, and requeue every in-flight request (hedge
+  pairs deduped by rid). Completed requests are unaffected; re-run
+  requests produce the same tokens (deterministic), so a resize loses
+  nothing.
 
 Failure semantics (detect -> quarantine -> probe -> readmit; ISSUE 7):
 
@@ -64,23 +86,25 @@ Failure semantics (detect -> quarantine -> probe -> readmit; ISSUE 7):
 * probe / readmit — with `probe_interval_s > 0`, every evicted slice is
   probed periodically; once the probe succeeds (default probe: the slice
   is no longer externally stalled), `readmit_slice` rebuilds its engine
-  from scratch — fresh executable caches and an EMPTY prefix store (the
-  old K/V is on a device we just declared unreliable) — and the slice
-  rejoins dispatch. This closes the loop `healthy=False` used to leave
-  permanently open.
+  from scratch — FOR THE TENANT THAT OWNS THE SLICE — with fresh
+  executable caches and an EMPTY prefix store (the old K/V is on a device
+  we just declared unreliable), and the slice rejoins dispatch. This
+  closes the loop `healthy=False` used to leave permanently open.
 
-Chunked prefill composes transparently: per-slice engines inherit
-`EngineConfig.chunk_lens`, so a long prompt streamed into a busy slice
-admits chunk-by-chunk between that slice's decode segments — neither the
-resident rows nor the other slices ever wait out a monolithic prefill.
+Chunked prefill composes transparently: per-slice engines inherit THEIR
+TENANT'S `EngineConfig.chunk_lens` (and its model-family gate), so a long
+prompt streamed into a busy slice admits chunk-by-chunk between that
+slice's decode segments — neither the resident rows nor the other slices
+ever wait out a monolithic prefill.
 
 So does the radix prefix cache (`EngineConfig.prefix_cache_bytes`): each
 slice engine owns its own PrefixStore (K/V never crosses slice meshes),
-and stream dispatch becomes PREFIX-AFFINE — a request prefers the slice
-whose store holds the longest match for its prompt (ties and zero-match
-fall back to least-loaded), so a template's traffic concentrates where its
-cached prefill lives. Hedging still works: a hedge twin on a cold slice
-simply prefills from scratch — outputs are bit-identical either way.
+and stream dispatch becomes PREFIX-AFFINE WITHIN THE TENANT — a request
+prefers the slice of its own model whose store holds the longest match
+for its prompt (ties and zero-match fall back to least-loaded), so a
+template's traffic concentrates where its cached prefill lives. Hedging
+still works: a hedge twin on a cold slice simply prefills from scratch —
+outputs are bit-identical either way.
 
 On a single shared device (CPU CI) the replicas serialize, so sweeps
 measure scheduling behaviour, not slice parallelism; on a real pod each
@@ -90,7 +114,7 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, replace as dc_replace
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Any, Dict, List, Optional, Sequence, Set
 
 import numpy as np
@@ -101,7 +125,8 @@ from repro.core.batching.policy import BatchPolicy
 from repro.core.batching.scheduler import SliceScheduler, SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
 from repro.core.slicing.mig import (
-    PodSlice, SlicedPod, SliceSpec, partition_pod, slice_name,
+    PlacementAsk, PodSlice, SlicedPod, SliceSpec, partition_pod,
+    plan_placement, rebalance_slices, slice_name,
 )
 from repro.serving.engine import (
     EngineConfig, ServingEngine, enqueue_requests,
@@ -132,6 +157,54 @@ def _slice_pod(devices: Sequence, n_slices: int):
     return SlicedPod(spec=spec, slices=slices, stranded_chips=0), True
 
 
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's ask for `build_multislice_engine(tenants=...)`: which
+    model, how many slices, and how its engines are configured.
+
+    `name` defaults to `cfg.name` (two tenants serving the same config must
+    pass distinct names). `params=None` initializes from `seed` exactly
+    like the single-tenant builder, so a tenant's fleet outputs stay
+    bit-identical to a single-slice engine built with the same seed.
+    `ec=None` inherits the fleet-default EngineConfig; an override
+    right-sizes slot-pool geometry / chunking / prefix cache per model.
+    `chips_per_slice > 0` is a right-sizing CONSTRAINT: the builder
+    rejects a partitioning whose uniform slice is smaller than the ask
+    (MIGPerf: a model on an undersized slice is the configuration the
+    placement pass exists to prevent). `slo_s` is the tenant's SLO class —
+    the pipelined runtime's front-door shed uses it per request."""
+
+    cfg: ModelConfig
+    name: str = ""
+    n_slices: int = 1
+    seed: int = 0
+    params: Any = None
+    ec: Optional[EngineConfig] = None
+    slo_s: float = math.inf
+    chips_per_slice: int = 0
+
+    @property
+    def tenant_name(self) -> str:
+        return self.name or self.cfg.name
+
+
+@dataclass
+class _Tenant:
+    """One tenant, fully resolved: everything a slice engine build needs
+    plus the fleet-level knobs keyed off the tenant (slice ask for
+    rebalance, chunking truth for hedging budgets, SLO class)."""
+
+    name: str
+    cfg: ModelConfig
+    params: Any
+    policy: BatchPolicy
+    ec: EngineConfig
+    chunked: bool
+    knee_profiles: Dict[int, Any] = field(default_factory=dict)
+    slo_s: float = math.inf
+    n_slices_ask: int = 1
+
+
 @dataclass
 class _ReqTrack:
     """One in-flight request's copies. `req` is always the ORIGINAL request
@@ -145,11 +218,15 @@ class _ReqTrack:
 
 class MultiSliceEngine:
     """V per-slice continuous-batching engines behind one admission queue;
-    individual requests stream into any slice with free slot capacity
-    (per-request hedging / failure / elastic resize via `SliceScheduler`)."""
+    individual requests stream into any of THEIR TENANT'S slices with free
+    slot capacity (per-request hedging / failure / elastic resize via
+    `SliceScheduler`, all tenant-constrained). Single-tenant construction
+    (the legacy cfg/params/policy signature) is the one-tenant case."""
 
-    def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
+    def __init__(self, cfg: Optional[ModelConfig] = None, params=None,
+                 policy: Optional[BatchPolicy] = None,
                  ec: Optional[EngineConfig] = None, *, n_slices: int,
+                 tenants: Optional[Sequence[_Tenant]] = None,
                  devices: Optional[Sequence] = None,
                  hedge_factor: float = 3.0, dispatch: str = "stream",
                  knee_profiles: Optional[Dict[int, Any]] = None,
@@ -161,20 +238,43 @@ class MultiSliceEngine:
 
         if dispatch not in ("stream", "batch"):
             raise ValueError(f"unknown dispatch mode {dispatch!r}")
-        ec = EngineConfig() if ec is None else ec
-        self.cfg = cfg
-        # whether the per-slice engines will actually chunk (they apply the
-        # same family gate); the hedging time budget must match reality
-        self._chunked = bool(ec.chunk_lens) and lm.supports_chunked_prefill(cfg)
-        self.params = params
-        self.policy = policy
-        self.ec = ec
+        if tenants is None:
+            # legacy single-tenant construction: wrap the trio into the one
+            # tenant the fleet hosts (same machinery, one special case)
+            assert cfg is not None and policy is not None, (
+                "pass (cfg, params, policy) or tenants="
+            )
+            ec = EngineConfig() if ec is None else ec
+            tenants = [_Tenant(
+                name=getattr(cfg, "name", "default"), cfg=cfg, params=params,
+                policy=policy, ec=ec,
+                chunked=bool(ec.chunk_lens) and lm.supports_chunked_prefill(cfg),
+                knee_profiles=knee_profiles or {}, n_slices_ask=n_slices,
+            )]
+        tenants = list(tenants)
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        self._tenants: Dict[str, _Tenant] = {t.name: t for t in tenants}
+        self._default = tenants[0]
+        # fleet-level aliases = the first tenant's view (legacy callers and
+        # single-tenant telemetry read these; multi-tenant code paths go
+        # through _tenant_of / ec_for_model instead)
+        self.cfg = self._default.cfg
+        self.params = self._default.params
+        self.policy = self._default.policy
+        self.ec = self._default.ec
+        self._chunked = self._default.chunked
+        self._knee_profiles = self._default.knee_profiles
         self.hedge_factor = hedge_factor
         self.dispatch_mode = dispatch
-        self._knee_profiles = knee_profiles or {}
         self._devices = list(jax.devices() if devices is None else devices)
-        self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
-        self.batcher = BucketedBatcher(policy)
+        self.dpu = (DPU(DpuConfig())
+                    if any(t.ec.preprocess == "dpu" for t in tenants) else None)
+        self.batcher = BucketedBatcher(
+            self._default.policy,
+            policy_for={t.name: t.policy for t in tenants},
+        )
         self.completed: List[Request] = []
         self._done_rids: Set[int] = set()
         # dead-letter queue: requests that exhausted their retry budget —
@@ -200,6 +300,7 @@ class MultiSliceEngine:
         }
         self._hedges_base = 0
         self._seg_ema: Optional[float] = None
+        self._tenant_ema: Dict[str, float] = {}
         self._exec_seen: Dict[int, int] = {}
         # --- test/chaos injection knobs ---
         # slices listed here skip their engine step (a hung device): the
@@ -211,9 +312,95 @@ class MultiSliceEngine:
         self.fixed_expected_s: Optional[float] = None
         self._build(n_slices)
 
+    # --- tenancy -------------------------------------------------------------
+    def tenant_names(self) -> List[str]:
+        return list(self._tenants)
+
+    def _tenant_by(self, model: Optional[str]) -> _Tenant:
+        if model is None:
+            if len(self._tenants) > 1:
+                raise ValueError(
+                    f"request has no model; fleet hosts {sorted(self._tenants)}"
+                )
+            return self._default
+        t = self._tenants.get(model)
+        if t is None:
+            raise ValueError(
+                f"unknown model {model!r}; fleet hosts {sorted(self._tenants)}"
+            )
+        return t
+
+    def _tenant_of(self, r: Request) -> _Tenant:
+        return self._tenant_by(getattr(r, "model", None))
+
+    def ec_for_model(self, model: Optional[str]) -> EngineConfig:
+        """Per-tenant EngineConfig (the pipelined runtime's validation and
+        service-time estimates are per tenant, not per fleet)."""
+        return self._tenant_by(model).ec
+
+    def slo_for_model(self, model: Optional[str]) -> float:
+        """Tenant SLO class (seconds; inf = no per-tenant SLO)."""
+        return self._tenant_by(model).slo_s
+
+    def chunked_for_model(self, model: Optional[str]) -> bool:
+        """Whether this tenant's slice engines really chunk prefill (its
+        chunk_lens AND its model family's gate)."""
+        return self._tenant_by(model).chunked
+
+    def slices_of(self, model: str) -> List[int]:
+        return [sid for sid, name in sorted(self.slice_tenant.items())
+                if name == model]
+
+    def route(self, reqs: Sequence[Request]) -> Sequence[Request]:
+        """Model router at the fleet front door: stamp every request with
+        its tenant's model id (single-tenant fleets default-route; a
+        multi-tenant fleet REQUIRES the submitter to say which model) and
+        reject unknown models before any queue sees the request. Runs
+        inside submit_many/offer, so no admission path can skip it."""
+        for r in reqs:
+            m = getattr(r, "model", None)
+            if m is None:
+                if len(self._tenants) > 1:
+                    raise ValueError(
+                        f"request {r.rid} has no model; fleet hosts "
+                        f"{sorted(self._tenants)}"
+                    )
+                r.model = self._default.name
+            elif m not in self._tenants:
+                raise ValueError(
+                    f"request {r.rid} asks for unknown model {m!r}; fleet "
+                    f"hosts {sorted(self._tenants)}"
+                )
+        return reqs
+
     # --- construction / elastic re-slice -----------------------------------
     def _build(self, n_slices: int) -> None:
         self.pod, self.replicated = _slice_pod(self._devices, n_slices)
+        # slice -> tenant assignment: largest-remainder apportionment over
+        # the tenants' original asks (>=1 slice each), contiguous runs in
+        # tenant declaration order; the placement pass accounts every chip
+        counts = rebalance_slices(
+            len(self.pod.slices),
+            {t.name: t.n_slices_ask for t in self._tenants.values()},
+        )
+        self.slice_tenant: Dict[int, str] = {}
+        cursor = 0
+        for t in self._tenants.values():
+            for _ in range(counts[t.name]):
+                self.slice_tenant[cursor] = t.name
+                cursor += 1
+        cps = self.pod.spec.chips_per_slice if not self.replicated else 1
+        pod_chips = (len(self._devices) if not self.replicated
+                     else len(self.pod.slices))
+        self.placement = plan_placement(pod_chips, [
+            PlacementAsk(t.name, counts[t.name], cps)
+            for t in self._tenants.values()
+        ])
+        # per-slice slot capacity comes from the OWNING tenant's config
+        self._cap: Dict[int, int] = {
+            sid: self._tenants[name].ec.max_slots
+            for sid, name in self.slice_tenant.items()
+        }
         self.sched = SliceScheduler(len(self.pod.slices),
                                     hedge_factor=self.hedge_factor,
                                     max_retries=self.max_retries,
@@ -222,40 +409,48 @@ class MultiSliceEngine:
         self._quarantined = {}
         # global admission capacity = every slice's slot pool
         self.slot_scheduler = SlotScheduler(
-            self.policy, max_slots=len(self.pod.slices) * self.ec.max_slots,
+            self.policy, max_slots=sum(self._cap.values()),
             segment_len=self.ec.segment_len, segment_lens=self.ec.segment_lens,
         )
         self.engines: Dict[int, ServingEngine] = {
             ps.slice_id: self._make_engine(ps) for ps in self.pod.slices
         }
+        # routing audit per build (slice ids change meaning on resize):
+        # model -> every slice id that ever received one of its requests.
+        # _send raises on a cross-tenant dispatch, so this records where
+        # requests actually ran — the bench's isolation gate reads it.
+        self.routes: Dict[str, Set[int]] = {name: set()
+                                            for name in self._tenants}
         self._inflight: Dict[int, _ReqTrack] = {}
         self._exec_seen = {}
 
     def _make_engine(self, ps: PodSlice) -> ServingEngine:
         # per-slice engines are always continuous (own slot pool + prefill
-        # cache, chunk_lens inherited); preprocessing already happened once
-        # at the shared queue, and batch formation too — their internal
-        # batcher is a pass-through
-        ec_s = dc_replace(self.ec, continuous=True, preprocess="none")
-        pol = dc_replace(self.policy, time_queue=0.0)
-        return ServingEngine(self.cfg, self._params_for(ps), pol, ec_s,
-                             knee_profiles=self._knee_profiles)
+        # cache, chunk_lens inherited) and are built for the tenant that
+        # OWNS the slice; preprocessing already happened once at the shared
+        # queue, and batch formation too — their internal batcher is a
+        # pass-through
+        t = self._tenants[self.slice_tenant[ps.slice_id]]
+        ec_s = dc_replace(t.ec, continuous=True, preprocess="none")
+        pol = dc_replace(t.policy, time_queue=0.0)
+        return ServingEngine(t.cfg, self._params_for(ps, t.params), pol, ec_s,
+                             knee_profiles=t.knee_profiles)
 
-    def _params_for(self, ps: PodSlice):
+    def _params_for(self, ps: PodSlice, params):
         """Replicate params onto the slice's mesh when it owns real devices;
         logical replicas (CPU CI) share one param tree — no copies."""
         import jax
 
         if self.replicated or ps.devices.size <= 1:
-            return self.params
+            return params
         try:
             mesh = ps.make_mesh()
             sharding = jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec()
             )
-            return jax.device_put(self.params, sharding)
+            return jax.device_put(params, sharding)
         except Exception:
-            return self.params  # mesh/backends that can't place: share
+            return params  # mesh/backends that can't place: share
 
     @property
     def hedges(self) -> int:
@@ -265,19 +460,26 @@ class MultiSliceEngine:
                chips_per_slice: Optional[int] = None,
                now: Optional[float] = None) -> int:
         """Elastic re-slice mid-trace (MIG reconfiguration): cancel in-flight
-        work, re-partition to a different menu entry, rebuild the per-slice
-        engines, and requeue every in-flight request (hedge copies dedupe
-        by rid — tracks hold one original each). Each requeue charges the
-        rid's retry budget — carried across the scheduler rebuild — and a
-        rid past its budget dead-letters instead (a mid-resize abort that
-        re-slices straight back must not launder unlimited retries).
-        Returns the number of requeued requests."""
+        work, re-partition to a different menu entry, RE-BALANCE the new
+        slice count between tenants (each slice's engine is rebuilt for the
+        tenant the placement pass assigns it), and requeue every in-flight
+        request (hedge copies dedupe by rid — tracks hold one original
+        each; each request redispatches onto its own tenant's new slices).
+        Each requeue charges the rid's retry budget — carried across the
+        scheduler rebuild — and a rid past its budget dead-letters instead
+        (a mid-resize abort that re-slices straight back must not launder
+        unlimited retries). Returns the number of requeued requests."""
         assert (n_slices is None) != (chips_per_slice is None), (
             "pass exactly one of n_slices / chips_per_slice"
         )
         now = time.monotonic() if now is None else now
         if n_slices is None:
             n_slices = max(1, len(self._devices) // max(1, chips_per_slice))
+        if n_slices < len(self._tenants):
+            raise ValueError(
+                f"cannot re-slice to {n_slices} slices: fleet hosts "
+                f"{len(self._tenants)} tenants (each keeps >= 1 slice)"
+            )
         carry: List[Request] = []
         dead: List[Request] = []
         for tr in self._inflight.values():
@@ -310,10 +512,11 @@ class MultiSliceEngine:
         prefix-store leases, so no ghost pin survives the owner; each
         in-flight request is requeued into the shared backlog unless a
         hedge twin still runs it elsewhere (the surviving copy completes
-        alone). Every requeue charges the rid's retry budget; past the
-        budget it dead-letters. With probing enabled the slice enters the
-        quarantine loop (probe -> readmit once healed). Returns the
-        requeued requests."""
+        alone). A requeued request re-enters dispatch tenant-constrained —
+        it can only land on another slice of ITS model. Every requeue
+        charges the rid's retry budget; past the budget it dead-letters.
+        With probing enabled the slice enters the quarantine loop (probe ->
+        readmit once healed). Returns the requeued requests."""
         now = time.monotonic() if now is None else now
         requeue_rids = self.sched.fail_slice(slice_id)
         self.pod.fail(slice_id)
@@ -348,11 +551,12 @@ class MultiSliceEngine:
 
     def readmit_slice(self, slice_id: int,
                       now: Optional[float] = None) -> None:
-        """Re-admit a healed slice: rebuild its engine from scratch (fresh
-        executable caches and an EMPTY prefix store — cached K/V lives on a
-        device we just declared unreliable) and rejoin dispatch. The
-        rebuilt engine recompiles on first use; that is the price of
-        recovery, not a violation of the steady-state compile-once gates."""
+        """Re-admit a healed slice: rebuild its engine from scratch FOR THE
+        TENANT THAT OWNS THE SLICE (fresh executable caches and an EMPTY
+        prefix store — cached K/V lives on a device we just declared
+        unreliable) and rejoin dispatch. The rebuilt engine recompiles on
+        first use; that is the price of recovery, not a violation of the
+        steady-state compile-once gates."""
         now = time.monotonic() if now is None else now
         ps = next(p for p in self.pod.slices if p.slice_id == slice_id)
         self.engines[slice_id] = self._make_engine(ps)
@@ -401,17 +605,27 @@ class MultiSliceEngine:
         self.submit_many([req])
 
     def submit_many(self, reqs: List[Request]) -> None:
-        """One batched DPU preprocessing pass for the whole submission, then
-        enqueue into the shared batcher (same contract as ServingEngine)."""
-        enqueue_requests(reqs, ec=self.ec, dpu=self.dpu,
-                         batcher=self.batcher, stats=self.stats,
-                         validate_prompts=True)
+        """Route, then one batched DPU preprocessing pass PER TENANT GROUP
+        (each tenant's requests validate against ITS EngineConfig and form
+        their own DPU launch group), then enqueue into the shared batcher
+        (same contract as ServingEngine)."""
+        self.route(reqs)
+        groups: Dict[str, List[Request]] = {}
+        for r in reqs:
+            groups.setdefault(r.model, []).append(r)
+        for name, group in groups.items():
+            enqueue_requests(group, ec=self._tenants[name].ec, dpu=self.dpu,
+                             batcher=self.batcher, stats=self.stats,
+                             validate_prompts=True)
 
     def offer(self, reqs: List[Request]) -> None:
         """Stage-pipelined admission intake (serving/runtime.py): already-
         preprocessed requests join the shared SlotScheduler's EDF backlog
-        directly; _dispatch() streams them into slice slots as capacity
-        frees, so dispatch/hedging semantics are unchanged."""
+        directly (routed first — tenancy must be stamped before quota
+        accounting sees the request); _dispatch() streams them into slice
+        slots as capacity frees, so dispatch/hedging semantics are
+        unchanged."""
+        self.route(reqs)
         self.slot_scheduler.offer(reqs)
 
     def admission_depth(self) -> int:
@@ -471,19 +685,28 @@ class MultiSliceEngine:
         }
 
     def _dispatch(self, now: float) -> bool:
-        """Stream due requests (EDF order, bucket-grouped by the shared
-        SlotScheduler) into slices. `stream` mode: any healthy slice with
-        free slot capacity, least-loaded first — later groups join a busy
-        slice's pool mid-flight. `batch` mode (benchmark baseline): a slice
-        receives one max_slots-sized group only when fully idle, emulating
-        the old batch-granularity dispatcher."""
+        """Stream due requests (EDF order, tenant+bucket-grouped by the
+        shared SlotScheduler) into slices. `stream` mode: any healthy slice
+        OF THE REQUEST'S TENANT with free slot capacity, least-loaded first
+        — later groups join a busy slice's pool mid-flight. Free-slot
+        accounting is per tenant (a {model: free} map into plan()), so one
+        tenant's full pool never head-of-line blocks another's backlog.
+        `batch` mode (benchmark baseline): a slice receives one
+        max_slots-sized group only when fully idle, emulating the old
+        batch-granularity dispatcher."""
         if self.dispatch_mode == "batch":
             return self._dispatch_batch_mode(now)
         load = self._loads()
-        cap = self.ec.max_slots
         healthy = [sid for sid, s in self.sched.slices.items() if s.healthy]
-        total = sum(max(0, cap - load[sid]) for sid in healthy)
-        plan = self.slot_scheduler.plan(self.batcher, now, free_slots=total)
+        if len(self._tenants) == 1:
+            free = sum(max(0, self._cap[sid] - load[sid]) for sid in healthy)
+        else:
+            free: Dict[str, int] = {name: 0 for name in self._tenants}
+            for sid in healthy:
+                free[self.slice_tenant[sid]] += max(
+                    0, self._cap[sid] - load[sid]
+                )
+        plan = self.slot_scheduler.plan(self.batcher, now, free_slots=free)
         did = False
         leftovers: List[Request] = []
         for group in plan.admissions:
@@ -491,7 +714,7 @@ class MultiSliceEngine:
                 if not self.sched.ready_for_dispatch(r.rid, now):
                     leftovers.append(r)  # retry backoff still running
                     continue
-                sid = self._pick_slice_for(r, load, cap)
+                sid = self._pick_slice_for(r, load)
                 if sid is None:
                     leftovers.append(r)
                     continue
@@ -502,22 +725,29 @@ class MultiSliceEngine:
             self.slot_scheduler.requeue(leftovers)
         return did
 
-    def _pick_slice_for(self, r: Request, load: Dict[int, int],
-                        cap: int) -> Optional[int]:
-        """Slice choice for one streamed request. With per-slice prefix
-        stores, prefer the slice whose radix tree holds the LONGEST match
-        for this prompt (ties broken least-loaded by pick_slice) — prefix
-        affinity concentrates a template's traffic so its cached K/V is
-        where the hits are, without ever copying K/V across slices. A slice
-        at capacity never wins on affinity (a stale cache entry must not
+    def _pick_slice_for(self, r: Request,
+                        load: Dict[int, int]) -> Optional[int]:
+        """Slice choice for one streamed request, WITHIN ITS TENANT (every
+        slice another model owns is excluded — the tenancy invariant of
+        core/batching/scheduler.py). With per-slice prefix stores, prefer
+        the tenant slice whose radix tree holds the LONGEST match for this
+        prompt (ties broken least-loaded by pick_slice) — prefix affinity
+        concentrates a template's traffic so its cached K/V is where the
+        hits are, without ever copying K/V across slices. A slice at
+        capacity never wins on affinity (a stale cache entry must not
         queue-jump a free slice), and zero-match dispatch falls through to
         the plain least-loaded scheduler unchanged — as does everything
-        when the prefix cache is off."""
-        if self.ec.prefix_cache_bytes:
+        when the tenant's prefix cache is off."""
+        t = self._tenant_of(r)
+        foreign = [sid for sid, name in self.slice_tenant.items()
+                   if name != t.name]
+        if t.ec.prefix_cache_bytes:
             best: List[int] = []
             best_m = 0
             for sid, s in self.sched.slices.items():
-                if not s.healthy or load.get(sid, 0) >= cap:
+                if self.slice_tenant.get(sid) != t.name:
+                    continue
+                if not s.healthy or load.get(sid, 0) >= self._cap.get(sid, 0):
                     continue
                 m = self.engines[sid].prefix_peek_req(r)
                 if m > best_m:
@@ -527,25 +757,32 @@ class MultiSliceEngine:
             if best_m > 0:
                 exclude = [sid for sid in self.sched.slices
                            if sid not in best]
-                sid = self.sched.pick_slice(load, cap, exclude=exclude)
+                sid = self.sched.pick_slice(load, self._cap, exclude=exclude)
                 if sid is not None:
                     return sid
-        return self.sched.pick_slice(load, cap)
+        return self.sched.pick_slice(load, self._cap, exclude=foreign)
 
     def _dispatch_batch_mode(self, now: float) -> bool:
-        cap = self.ec.max_slots
-        idle = [
-            sid for sid, s in sorted(self.sched.slices.items())
-            if s.healthy and self.engines[sid].slots_in_use() == 0
-            and self.engines[sid].admission_depth() == 0
-            and not any(sid in tr.copies for tr in self._inflight.values())
-        ]
-        plan = self.slot_scheduler.plan(self.batcher, now,
-                                        free_slots=len(idle) * cap)
+        idle_by: Dict[str, List[int]] = {name: [] for name in self._tenants}
+        for sid, s in sorted(self.sched.slices.items()):
+            if (s.healthy and self.engines[sid].slots_in_use() == 0
+                    and self.engines[sid].admission_depth() == 0
+                    and not any(sid in tr.copies
+                                for tr in self._inflight.values())):
+                idle_by[self.slice_tenant[sid]].append(sid)
+        if len(self._tenants) == 1:
+            free = len(idle_by[self._default.name]) * self._default.ec.max_slots
+        else:
+            free = {name: len(sids) * self._tenants[name].ec.max_slots
+                    for name, sids in idle_by.items()}
+        plan = self.slot_scheduler.plan(self.batcher, now, free_slots=free)
         did = False
         leftovers: List[Request] = []
         for group in plan.admissions:
             group = list(group)
+            t = self._tenant_of(group[0])  # groups are tenant-pure
+            idle = idle_by[t.name]
+            cap = t.ec.max_slots
             while group:
                 if not idle:
                     leftovers.extend(group)
@@ -560,6 +797,15 @@ class MultiSliceEngine:
         return did
 
     def _send(self, r: Request, sid: int, now: float) -> None:
+        t = self._tenant_of(r)
+        if self.slice_tenant.get(sid) != t.name:
+            # structural invariant, not a recoverable condition: a request
+            # must never run on another model's weights
+            raise RuntimeError(
+                f"cross-tenant dispatch: rid {r.rid} ({t.name}) -> slice "
+                f"{sid} ({self.slice_tenant.get(sid)})"
+            )
+        self.routes[t.name].add(sid)
         self.engines[sid].offer([r])
         self.sched.dispatch(r.rid, sid, now, self._expected_s(r))
         self._inflight[r.rid] = _ReqTrack(req=r, primary_sid=sid,
@@ -569,22 +815,29 @@ class MultiSliceEngine:
     def _expected_s(self, r: Request) -> float:
         """Analytic per-request time budget for straggler detection: chunked
         admission dispatches (worst case: smallest chunk length over the
-        prompt bucket) + decode segments + one admission pass, scaled by
-        the EMA of measured per-dispatch execution times."""
+        prompt bucket) + decode segments + one admission pass, from the
+        REQUEST'S TENANT's config (its decode budget, segment length, and
+        chunking truth), scaled by the EMA of that tenant's measured
+        per-dispatch execution times (global EMA until the tenant has its
+        own samples)."""
         if self.fixed_expected_s is not None:
             return self.fixed_expected_s
-        if self._seg_ema is None:
+        t = self._tenant_of(r)
+        ema = self._tenant_ema.get(t.name)
+        if ema is None:
+            ema = self._seg_ema
+        if ema is None:
             return 0.0  # uncalibrated: hedging off until a dispatch is timed
-        cap = self.ec.max_new_tokens
+        cap = t.ec.max_new_tokens
         budget = cap if r.max_new_tokens is None else min(r.max_new_tokens, cap)
-        segs = math.ceil(budget / max(1, self.ec.segment_len))
+        segs = math.ceil(budget / max(1, t.ec.segment_len))
         chunks = 1
-        if self._chunked:  # only when the slice engines really chunk —
+        if t.chunked:  # only when the slice engines really chunk —
             # budgeting phantom chunk dispatches on an unsupported family
             # would delay dead-device detection by the same factor
             lp = next_pow2(max(1, int(r.length)))
-            chunks = max(1, lp // min(self.ec.chunk_lens))
-        return (segs + chunks) * self._seg_ema
+            chunks = max(1, lp // min(t.ec.chunk_lens))
+        return (segs + chunks) * ema
 
     def _advance(self, now: float) -> bool:
         did = False
@@ -639,9 +892,14 @@ class MultiSliceEngine:
         seen = self._exec_seen.get(sid, 0)
         fresh = engine.batch_exec_s[seen:]
         self._exec_seen[sid] = seen + len(fresh)
+        name = self.slice_tenant.get(sid)
         for x in fresh:
             self._seg_ema = (x if self._seg_ema is None
                              else 0.7 * self._seg_ema + 0.3 * x)
+            if name is not None:
+                prev = self._tenant_ema.get(name)
+                self._tenant_ema[name] = (x if prev is None
+                                          else 0.7 * prev + 0.3 * x)
 
     def _record(self, res: Request, sid: int) -> None:
         """First completion wins per rid: record the original exactly once
@@ -674,11 +932,17 @@ class MultiSliceEngine:
                 continue
             if load is None:
                 load = self._loads()
-            twin = self.sched.pick_slice(load, self.ec.max_slots,
-                                         exclude=track.copies)
+            # the twin must be a slice of the request's OWN tenant: exclude
+            # every current holder AND every slice another model owns
+            t = self._tenant_of(track.req)
+            foreign = [s for s, name in self.slice_tenant.items()
+                       if name != t.name]
+            twin = self.sched.pick_slice(load, self._cap,
+                                         exclude=list(track.copies) + foreign)
             if twin is None:
                 continue  # no free capacity: stays un-hedged, retried next step
             clone = dc_replace(track.req)
+            self.routes[t.name].add(twin)
             self.engines[twin].offer([clone])
             track.copies[twin] = clone
             self.sched.hedge(rid, now, twin)
@@ -705,7 +969,9 @@ class MultiSliceEngine:
         + one chunk program per (chunk length, bucket) pair actually
         chunked + ONE segment — e.g. the chunked-prefill bench's mix (one
         monolithic bucket, one chunked bucket) gives exactly 3 per slice;
-        unchunked single-bucket serving gives the classic 2."""
+        unchunked single-bucket serving gives the classic 2. Per-tenant in
+        a multi-tenant fleet: each slice's counts are against its OWN
+        tenant's executables (engines never share compiled programs)."""
         return {
             sid: (e.stats["prefill_traces"] + e.stats["generate_traces"]
                   + e.stats["segment_traces"] + e.stats["decode_step_traces"])
@@ -713,11 +979,15 @@ class MultiSliceEngine:
         }
 
     def prefix_peek_req(self, r: Request) -> int:
-        """Best stored-prefix match for a request across every slice (the
-        runtime's SLO shed model: the affinity router will land the request
-        on the best-matching slice, so the fleet-wide max IS the expected
-        hit)."""
-        return max((e.prefix_peek_req(r) for e in self.engines.values()),
+        """Best stored-prefix match for a request across ITS TENANT'S slices
+        (the runtime's SLO shed model: the affinity router will land the
+        request on the best-matching slice of its model, so the tenant-wide
+        max IS the expected hit — another model's store can never serve
+        it)."""
+        t = self._tenant_of(r)
+        return max((self.engines[sid].prefix_peek_req(r)
+                    for sid, name in self.slice_tenant.items()
+                    if name == t.name),
                    default=0)
 
     def prefix_stats(self) -> Dict[str, int]:
@@ -736,12 +1006,31 @@ class MultiSliceEngine:
         for sid, e in self.engines.items():
             st = self.sched.slices.get(sid)
             out[sid] = {
+                "model": self.slice_tenant.get(sid),
                 "admitted": e.stats["admitted"],
                 "retired": e.stats["retired"],
                 "segments": e.stats["segments"],
                 "mean_slot_occupancy": round(e.mean_slot_occupancy(), 3),
                 "completed_requests": st.completed if st is not None else 0,
                 "healthy": st.healthy if st is not None else False,
+            }
+        return out
+
+    def tenant_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-tenant rollup: slice assignment, completion/dead counts (by
+        each request's stamped model), and the routing audit (every slice
+        that ever received one of this model's requests — the isolation
+        gate asserts it stays within the tenant's own slices)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for name in self._tenants:
+            own = self.slices_of(name)
+            out[name] = {
+                "slices": own,
+                "completed": sum(1 for r in self.completed
+                                 if (r.model or self._default.name) == name),
+                "dead": sum(1 for r in self.dead
+                            if (r.model or self._default.name) == name),
+                "routed_to": sorted(self.routes.get(name, ())),
             }
         return out
 
@@ -757,28 +1046,105 @@ class MultiSliceEngine:
         return sum(e.slot_capacity() for e in self.engines.values())
 
 
+def _resolve_tenants(specs: Sequence[TenantSpec], n_slices: int,
+                     ec: EngineConfig,
+                     devices: Optional[Sequence]) -> List[_Tenant]:
+    """Resolve TenantSpec asks into fully-built tenants: per-tenant params
+    (seeded init unless supplied), per-tenant knee profiles and policy
+    (V = the tenant's apportioned slice count, so Time_queue = Time_knee/V
+    per tenant), chunking truth per model family, and the right-sizing
+    check against the pod's uniform slice size."""
+    import jax
+
+    from repro.core.batching import (
+        analytical_knee, derive_policy, kv_bytes_per_token,
+    )
+    from repro.models import api, lm
+
+    names = [s.tenant_name for s in specs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    counts = rebalance_slices(
+        n_slices, {s.tenant_name: max(1, s.n_slices) for s in specs}
+    )
+    n_devs = len(list(jax.devices() if devices is None else devices))
+    cps_pod = n_devs // n_slices if n_devs >= n_slices else 0
+    out: List[_Tenant] = []
+    for spec in specs:
+        if spec.chips_per_slice > 0 and cps_pod and \
+                spec.chips_per_slice > cps_pod:
+            raise ValueError(
+                f"tenant {spec.tenant_name!r} asks for "
+                f"{spec.chips_per_slice}-chip slices; this partitioning "
+                f"gives {cps_pod} chips per slice"
+            )
+        t_ec = ec if spec.ec is None else spec.ec
+        params = spec.params
+        if params is None:
+            params = api.init_params(spec.cfg, jax.random.PRNGKey(spec.seed),
+                                     dtype=spec.cfg.dtype)
+        n_active = spec.cfg.active_param_count()
+        profiles = {
+            b: analytical_knee(
+                n_active, chips=1,
+                context_len=int((b + 0.5) * t_ec.bucket_width),
+                kv_bytes_per_token=kv_bytes_per_token(spec.cfg),
+            )
+            for b in range(8)
+        }
+        policy = derive_policy(profiles, n_slices=counts[spec.tenant_name],
+                               bucket_width=t_ec.bucket_width)
+        out.append(_Tenant(
+            name=spec.tenant_name, cfg=spec.cfg, params=params, policy=policy,
+            ec=t_ec,
+            chunked=bool(t_ec.chunk_lens)
+            and lm.supports_chunked_prefill(spec.cfg),
+            knee_profiles=profiles, slo_s=spec.slo_s,
+            n_slices_ask=max(1, spec.n_slices),
+        ))
+    return out
+
+
 def build_multislice_engine(
-    cfg: ModelConfig, *, n_slices: int, seed: int = 0,
+    cfg: Optional[ModelConfig] = None, *, n_slices: int, seed: int = 0,
     ec: Optional[EngineConfig] = None, hedge_factor: float = 3.0,
     devices: Optional[Sequence] = None, params=None,
     dispatch: str = "stream",
     max_retries: int = 3, retry_backoff_s: float = 0.0,
     watchdog_rounds: int = 0, probe_interval_s: float = 0.0,
+    tenants: Optional[Sequence[TenantSpec]] = None,
 ) -> MultiSliceEngine:
     """Mirror of engine.build_engine for the multi-slice system: same param
     init (bit-identical outputs vs a single engine), knee-derived policy
     with V = n_slices (Time_queue = Time_knee / V). Pass `params` to reuse
     an already-initialized tree (a partition-menu sweep re-slices the same
     model); `dispatch="batch"` keeps the old batch-granularity dispatcher
-    (benchmark baseline)."""
+    (benchmark baseline).
+
+    Multi-tenant: pass `tenants=[TenantSpec(...), ...]` instead of `cfg`.
+    Each tenant gets its own params/policy/knee profiles derived exactly as
+    the single-tenant path would for its model (V = its apportioned slice
+    count), `ec` becomes the fleet default any TenantSpec may override, and
+    the fleet hosts all of them on disjoint slice sets behind one admission
+    queue."""
     import jax
+
+    ec = EngineConfig() if ec is None else ec
+    if tenants is not None:
+        resolved = _resolve_tenants(list(tenants), n_slices, ec, devices)
+        return MultiSliceEngine(
+            n_slices=n_slices, tenants=resolved, devices=devices,
+            hedge_factor=hedge_factor, dispatch=dispatch,
+            max_retries=max_retries, retry_backoff_s=retry_backoff_s,
+            watchdog_rounds=watchdog_rounds, probe_interval_s=probe_interval_s,
+        )
 
     from repro.core.batching import (
         analytical_knee, derive_policy, kv_bytes_per_token,
     )
     from repro.models import api
 
-    ec = EngineConfig() if ec is None else ec
+    assert cfg is not None, "pass cfg (single tenant) or tenants=[...]"
     if params is None:
         params = api.init_params(cfg, jax.random.PRNGKey(seed),
                                  dtype=cfg.dtype)

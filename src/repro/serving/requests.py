@@ -1,15 +1,28 @@
 """Inference request generation: Poisson arrivals (MLPerf-style, paper §5)
 with LibriSpeech-like length distribution for audio (paper Fig. 13) and
-fixed-size inputs for vision."""
+fixed-size inputs for vision.
+
+Multi-tenant traffic (ISSUE 8): `generate_requests` also accepts a list of
+`(WorkloadSpec, weight)` pairs — one independent Poisson stream per tenant,
+merged by arrival time, with per-tenant rid namespacing so two tenants'
+request ids never collide. The bench and the tests share this one
+generator, so a "mixed trace" means the same thing everywhere.
+"""
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.batching.buckets import Request
+
+# rid namespace stride for multi-tenant traces: tenant k's requests are
+# rid = (k+1) * RID_NAMESPACE + i, so per-tenant ids stay dense (the
+# deterministic per-rid prompt generator depends only on rid) and never
+# collide across tenants for any sane trace length
+RID_NAMESPACE = 1_000_000
 
 
 @dataclass(frozen=True)
@@ -23,14 +36,13 @@ class WorkloadSpec:
     vocab: int = 0                 # text: >0 attaches real token arrays
     payload_samples: int = 0       # >0 attaches raw audio payloads (DPU work)
     seed: int = 0
+    # tenant/model id stamped on every generated Request (multi-tenant
+    # fleets route on it; None = single-tenant default)
+    model: Optional[str] = None
 
 
-def generate_requests(spec: WorkloadSpec, n: int) -> List[Request]:
-    """Poisson request stream. Text workloads with `vocab` set carry REAL
-    tokenized prompts (Request.prompt, exactly int(length) ids) end-to-end
-    through the slot pool instead of relying on the engine's per-rid
-    synthetic generator; `payload_samples` additionally attaches raw audio
-    payloads so the preprocessing stage has actual DPU work."""
+def _generate_single(spec: WorkloadSpec, n: int, *,
+                     rid_base: int = 0) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
     gaps = rng.exponential(1.0 / spec.rate_qps, size=n)
     arrivals = np.cumsum(gaps)
@@ -52,7 +64,62 @@ def generate_requests(spec: WorkloadSpec, n: int) -> List[Request]:
             prompt = rng.integers(0, spec.vocab, int(lengths[i])).astype(np.int32)
         if spec.payload_samples > 0:
             payload = rng.standard_normal(spec.payload_samples).astype(np.float32)
-        out.append(Request(rid=i, arrival=float(arrivals[i]),
+        out.append(Request(rid=rid_base + i, arrival=float(arrivals[i]),
                            length=float(lengths[i]), prompt=prompt,
-                           payload=payload))
+                           payload=payload, model=spec.model))
     return out
+
+
+def _split_counts(weights: Sequence[float], n: int) -> List[int]:
+    """Largest-remainder split of `n` requests across tenant weights —
+    deterministic, sums to n exactly, every positive weight gets >=1 when
+    n >= number of tenants."""
+    total = float(sum(weights))
+    assert total > 0, weights
+    quotas = [w * n / total for w in weights]
+    counts = [int(q) for q in quotas]
+    if n >= len(weights):
+        counts = [max(1, c) if w > 0 else c
+                  for c, w in zip(counts, weights)]
+    while sum(counts) < n:
+        i = max(range(len(counts)),
+                key=lambda j: (quotas[j] - counts[j], weights[j], -j))
+        counts[i] += 1
+    while sum(counts) > n:
+        i = max((j for j in range(len(counts)) if counts[j] > 0),
+                key=lambda j: (counts[j] - quotas[j], counts[j], j))
+        counts[i] -= 1
+    return counts
+
+
+def generate_requests(
+    spec: Union[WorkloadSpec, Sequence[Tuple[WorkloadSpec, float]]],
+    n: int,
+) -> List[Request]:
+    """Poisson request stream(s).
+
+    Single-tenant (`spec` is a WorkloadSpec): unchanged PR 4 contract —
+    rids 0..n-1, one Poisson process. Text workloads with `vocab` set carry
+    REAL tokenized prompts (Request.prompt, exactly int(length) ids)
+    end-to-end through the slot pool instead of relying on the engine's
+    per-rid synthetic generator; `payload_samples` additionally attaches
+    raw audio payloads so the preprocessing stage has actual DPU work.
+
+    Multi-tenant (`spec` is a list of (WorkloadSpec, weight) pairs): `n`
+    total requests are apportioned to tenants by weight (largest
+    remainder), each tenant draws its OWN independent Poisson stream (its
+    spec's seed/rate), rids live in disjoint per-tenant namespaces
+    (tenant k: (k+1)*RID_NAMESPACE + i), and the merged trace is sorted by
+    arrival (stable, so same-instant arrivals keep tenant order). Each
+    request carries its spec's `model` id for the fleet router."""
+    if isinstance(spec, WorkloadSpec):
+        return _generate_single(spec, n)
+    pairs = list(spec)
+    assert pairs, "need at least one (WorkloadSpec, weight) pair"
+    counts = _split_counts([w for _, w in pairs], n)
+    merged: List[Request] = []
+    for k, ((s, _), cnt) in enumerate(zip(pairs, counts)):
+        merged.extend(_generate_single(s, cnt,
+                                       rid_base=(k + 1) * RID_NAMESPACE))
+    merged.sort(key=lambda r: r.arrival)
+    return merged

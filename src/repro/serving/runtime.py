@@ -253,7 +253,22 @@ class PipelinedRuntime:
         if isinstance(reqs, Request):
             reqs = [reqs]
         now = self._tick(now)
-        validate_requests(reqs, self.engine.ec, check_bucket=True)
+        # model router first (multi-tenant fleets stamp/validate
+        # Request.model at the front door), then validate each request
+        # against ITS tenant's EngineConfig — prompt-length and bucket
+        # limits are per model, not per fleet
+        route = getattr(self.engine, "route", None)
+        if route is not None:
+            route(reqs)
+        ec_for = getattr(self.engine, "ec_for_model", None)
+        if ec_for is None:
+            validate_requests(reqs, self.engine.ec, check_bucket=True)
+        else:
+            by_model: Dict[Optional[str], List[Request]] = {}
+            for r in reqs:
+                by_model.setdefault(getattr(r, "model", None), []).append(r)
+            for m, group in by_model.items():
+                validate_requests(group, ec_for(m), check_bucket=True)
         if self.service is None and any(r.payload is not None for r in reqs):
             raise ValueError(
                 "raw payloads submitted to a runtime without a DpuService "
@@ -261,8 +276,8 @@ class PipelinedRuntime:
                 "preprocess upstream"
             )
         accepted = 0
-        has_slo = self.rc.slo_s != float("inf")
-        backlog_est = self.decode_backlog_s() if has_slo else 0.0
+        slo_for = getattr(self.engine, "slo_for_model", None)
+        backlog_est: Optional[float] = None  # computed once, only if needed
         check = self.rc.validate_payloads and self.service is not None
         modality = self.service.cfg.dpu.modality if check else "audio"
         for r in reqs:
@@ -273,14 +288,22 @@ class PipelinedRuntime:
                 # instead of crashing a whole same-shape CU batch later
                 self._shed(r, ShedReason.MALFORMED, "shed_malformed")
                 continue
-            est = backlog_est
+            # effective SLO = the tighter of the runtime-wide knob and the
+            # request's tenant SLO class (multi-tenant fleets)
+            slo = self.rc.slo_s
+            if slo_for is not None:
+                slo = min(slo, slo_for(getattr(r, "model", None)))
+            has_slo = slo != float("inf")
+            est = 0.0
             if has_slo:
-                est += self.request_service_s(r)
+                if backlog_est is None:
+                    backlog_est = self.decode_backlog_s()
+                est = backlog_est + self.request_service_s(r)
             if has_slo and self.service is not None and r.payload is not None:
                 # cost-model estimate only matters when an SLO is set (the
                 # payload is already structurally validated above)
                 est += self.service.estimate_s(r.payload)
-            if now + est > r.arrival + self.rc.slo_s:
+            if now + est > r.arrival + slo:
                 self._shed(r, ShedReason.SLO, "shed_slo")
             elif len(self._ingest) >= self.rc.max_ingest:
                 self._shed(r, ShedReason.OVERFLOW, "shed_backpressure")
@@ -521,24 +544,37 @@ class PipelinedRuntime:
         store is peeked for this exact prompt and the chunk calls a hit
         would skip are not charged — so the front door never sheds a
         template-sharing request on the cost of prefill work the cache
-        already paid for. Uncalibrated (no EMA yet) it returns 0.0: the
+        already paid for. In a multi-tenant fleet the whole estimate is
+        the TENANT'S: its EngineConfig (decode budget, segment/chunk
+        lengths, prefix cache), its family's chunking truth, and its own
+        execution-time EMA (the fleet EMA until the tenant has samples) —
+        an SSM tenant's cheap requests are never shed on a dense tenant's
+        cost model. Uncalibrated (no EMA yet) it returns 0.0: the
         request-independent backlog model remains the fallback."""
         if self.seg_ema is None:
             return 0.0
-        ec = self.engine.ec
+        m = getattr(r, "model", None)
+        ec_for = getattr(self.engine, "ec_for_model", None)
+        ec = self.engine.ec if ec_for is None else ec_for(m)
+        ema = self.seg_ema
+        t_ema = getattr(self.engine, "_tenant_ema", None)
+        if t_ema and m is not None and m in t_ema:
+            ema = t_ema[m]
         budget = (ec.max_new_tokens if r.max_new_tokens is None
                   else min(r.max_new_tokens, ec.max_new_tokens))
         segs = max(1, -(-budget // max(1, ec.segment_len)))
         n = max(1, int(r.length))
         lp = max(ec.min_prompt_len, next_pow2(n))
-        if self._chunked():
+        chunk_for = getattr(self.engine, "chunked_for_model", None)
+        chunked = self._chunked() if chunk_for is None else chunk_for(m)
+        if chunked:
             q = min(ec.chunk_lens)
             chunks = max(1, lp // q)
             if ec.prefix_cache_bytes:
                 chunks = max(1, chunks - self.engine.prefix_peek_req(r) // q)
         else:
             chunks = 1
-        return self.seg_ema * (chunks + segs)
+        return ema * (chunks + segs)
 
     def _chunked(self) -> bool:
         """Whether the underlying engines really chunk (family-gated)."""
@@ -657,18 +693,23 @@ class PipelinedRuntime:
 
 
 def build_pipelined_runtime(
-    cfg, *, n_slices: int = 1, seed: int = 0, ec=None,
+    cfg=None, *, n_slices: int = 1, seed: int = 0, ec=None,
     service: Optional[DpuService] = None, rc: Optional[RuntimeConfig] = None,
     params=None, hedge_factor: float = 3.0,
     max_retries: int = 3, retry_backoff_s: float = 0.0,
     watchdog_rounds: int = 0, probe_interval_s: float = 0.0,
+    tenants=None,
 ) -> PipelinedRuntime:
     """Convenience mirror of build_engine/build_multislice_engine: one
     continuous-batching engine (or a multi-slice pool) behind the pipelined
     stages. The engine's own inline DPU pass is disabled — preprocessing
     belongs to the service stage here. The failure-semantics knobs
     (retry budget, watchdog, probe/readmit) apply to the multi-slice
-    fleet; single-engine runtimes have no slice to lose."""
+    fleet; single-engine runtimes have no slice to lose. Pass
+    `tenants=[TenantSpec(...), ...]` (serving/multislice.py) instead of
+    `cfg` for a multi-tenant fleet — per-tenant EngineConfig overrides are
+    normalized the same way the fleet default is (continuous, no inline
+    preprocessing)."""
     from dataclasses import replace as dc_replace
 
     from repro.serving.engine import EngineConfig, build_engine
@@ -676,8 +717,21 @@ def build_pipelined_runtime(
 
     ec = EngineConfig() if ec is None else ec
     ec = dc_replace(ec, continuous=True, preprocess="none")
-    if n_slices > 1:
+    if tenants is not None:
+        tenants = [
+            t if t.ec is None
+            else dc_replace(t, ec=dc_replace(t.ec, continuous=True,
+                                             preprocess="none"))
+            for t in tenants
+        ]
         engine: Engine = build_multislice_engine(
+            n_slices=n_slices, seed=seed, ec=ec, tenants=tenants,
+            hedge_factor=hedge_factor, max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s, watchdog_rounds=watchdog_rounds,
+            probe_interval_s=probe_interval_s,
+        )
+    elif n_slices > 1:
+        engine = build_multislice_engine(
             cfg, n_slices=n_slices, seed=seed, ec=ec, params=params,
             hedge_factor=hedge_factor, max_retries=max_retries,
             retry_backoff_s=retry_backoff_s, watchdog_rounds=watchdog_rounds,

@@ -24,7 +24,9 @@ from repro.serving.faults import (
     DPU_FAIL, MALFORMED, SLICE_FLAP, FaultEvent, FaultPlan, ShedReason,
     reason_counts, replay_virtual,
 )
-from repro.serving.multislice import MultiSliceEngine
+from repro.serving.multislice import (
+    MultiSliceEngine, TenantSpec, build_multislice_engine,
+)
 from repro.serving.runtime import RuntimeConfig, build_pipelined_runtime
 
 # canonical request set shared with test_runtime.py: prompts are
@@ -467,6 +469,128 @@ def test_hedged_request_survives_primary_slice_failure(setup):
     assert ms.dead == [] and ms._inflight == {}
     # idempotent twin cancel: the victims are long gone from that engine
     assert ms.engines[sid].cancel(victim_rids) == 0
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation under faults (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_readmit_rebuilds_owning_tenants_engine(setup):
+    """In a two-tenant fleet a silently hung slice is quarantined; its work
+    requeues WITHIN its owning tenant; the probe readmits the slice with an
+    engine rebuilt for THAT tenant's model (never the other tenant's); and
+    across the whole fault no request crosses the model boundary — both
+    tenants' outputs stay bit-identical to their single-engine references."""
+    cfg_a, params_a, ref_a = setup
+    name_a, name_b = cfg_a.name, "mamba2-370m-fleet"
+    cfg_b = reduced("mamba2-370m")
+    params_b = api.init_params(cfg_b, jax.random.PRNGKey(0), dtype=cfg_b.dtype)
+
+    def _b(i, model=None):
+        return Request(rid=6500 + i, arrival=0.0, length=float(17 + 2 * i),
+                       max_new_tokens=3 + i, model=model)
+
+    single = build_engine(cfg_b, ec=_ec())
+    single.params = params_b
+    single.submit_many([_b(i) for i in range(3)])
+    single.run_until_idle()
+    ref_b = {r.rid: np.asarray(r.payload) for r in single.completed}
+    assert len(ref_b) == 3
+
+    ms = build_multislice_engine(
+        n_slices=4, ec=_ec(),
+        tenants=[TenantSpec(cfg=cfg_a, name=name_a, n_slices=2,
+                            params=params_a),
+                 TenantSpec(cfg=cfg_b, name=name_b, n_slices=2,
+                            params=params_b)],
+        watchdog_rounds=3, probe_interval_s=0.05,
+    )
+    areqs = [_mk(i) for i in range(4)]
+    for r in areqs:
+        r.model = name_a
+    breqs = [_b(i, model=name_b) for i in range(3)]
+    # offer(): backlog intake with no formation delay, so the stall can be
+    # injected before any engine advances (tenant-derived policies carry a
+    # real Time_queue)
+    ms.offer(areqs + breqs)
+    now = time.monotonic()                  # explicit clock from here on
+    ms._dispatch(now)
+    b_slices = set(ms.slices_of(name_b))
+    sid = next(s for tr in ms._inflight.values()
+               for s in tr.copies if s in b_slices)
+    ms.stalled_slices.add(sid)              # silent hang on a tenant-B slice
+    old_engine = ms.engines[sid]
+    for _ in range(3):                      # busy-no-advance rounds
+        now += 1e-3
+        ms.step(now)
+    assert sid in ms._quarantined
+    ms.stalled_slices.discard(sid)          # device heals
+    now = ms._quarantined[sid] + 1e-3
+    ms.step(now)
+    assert sid not in ms._quarantined
+    assert ms.stats["readmitted"] == 1
+    e = ms.engines[sid]
+    assert e is not old_engine              # rebuilt from scratch...
+    assert e.cfg is cfg_b                   # ...for the slice's OWNING tenant
+    assert e.params is params_b
+    done = ms.run_until_idle()
+    assert len(done) == 7
+    for r in done:
+        ref = ref_a if r.model == name_a else ref_b
+        np.testing.assert_array_equal(np.asarray(r.payload), ref[r.rid])
+    ts = ms.tenant_stats()
+    for name in (name_a, name_b):
+        assert set(ts[name]["routed_to"]) <= set(ms.slices_of(name))
+    assert ms.dead == []                    # requeues stayed within budget
+    # the readmitted slice genuinely rejoins ITS tenant's dispatch
+    more = [Request(rid=6510 + i, arrival=0.0, length=float(18 + i),
+                    max_new_tokens=4, model=name_b) for i in range(4)]
+    ms.submit_many(more)
+    ms.run_until_idle()
+    assert sum(ms.engines[s].stats["admitted"] for s in b_slices) >= 7
+
+
+def test_fail_slice_requeue_waits_for_own_tenant_capacity(setup):
+    """When a tenant's ONLY slice fails, its requeued work WAITS for that
+    tenant's capacity to return (its model's weights live nowhere else)
+    instead of borrowing the other tenant's idle slices; after recovery it
+    completes, and the foreign tenant's engines never saw a single foreign
+    admission."""
+    cfg_a, params_a, ref_a = setup
+    name_a, name_b = cfg_a.name, "mamba2-370m-fleet"
+    cfg_b = reduced("mamba2-370m")
+    params_b = api.init_params(cfg_b, jax.random.PRNGKey(0), dtype=cfg_b.dtype)
+    ms = build_multislice_engine(
+        n_slices=2, ec=_ec(),
+        tenants=[TenantSpec(cfg=cfg_a, name=name_a, params=params_a),
+                 TenantSpec(cfg=cfg_b, name=name_b, params=params_b)],
+    )
+    areqs = [_mk(i) for i in range(3)]
+    for r in areqs:
+        r.model = name_a
+    breqs = [Request(rid=6600 + i, arrival=0.0, length=float(18 + i),
+                     max_new_tokens=4, model=name_b) for i in range(2)]
+    ms.offer(areqs + breqs)
+    ms._dispatch(time.monotonic())
+    (sid_a,) = ms.slices_of(name_a)
+    (sid_b,) = ms.slices_of(name_b)
+    assert ms.fail_slice(sid_b)             # B's work requeued in-tenant
+    ms._dispatch(time.monotonic())
+    # the requeued B work waits in the backlog — A's idle capacity is
+    # never borrowed (it holds the wrong weights)
+    assert not any(rid >= 6600 for rid in ms._inflight)
+    assert ms.slot_scheduler.backlog() >= 2
+    ms.recover_slice(sid_b)
+    done = ms.run_until_idle()
+    assert len({r.rid for r in done}) == 5  # both tenants fully served
+    for r in done:
+        if r.model == name_a:
+            np.testing.assert_array_equal(np.asarray(r.payload), ref_a[r.rid])
+    assert ms.engines[sid_a].stats["admitted"] == 3   # A's 3, nothing else
+    ts = ms.tenant_stats()
+    assert set(ts[name_b]["routed_to"]) <= {sid_b}
+    assert ms.dead == []
 
 
 # ---------------------------------------------------------------------------

@@ -18,9 +18,12 @@ jax = pytest.importorskip("jax")
 from repro.configs import reduced
 from repro.core.batching.buckets import Request
 from repro.core.batching.policy import BatchPolicy
+from repro.core.slicing.mig import PlacementAsk, plan_placement, rebalance_slices
 from repro.models import api
 from repro.serving.engine import EngineConfig, build_engine
-from repro.serving.multislice import MultiSliceEngine, build_multislice_engine
+from repro.serving.multislice import (
+    MultiSliceEngine, TenantSpec, build_multislice_engine,
+)
 
 # canonical request set: every test serves (a prefix of) these; prompts are
 # deterministic per rid, so payloads depend only on (rid, length, budget)
@@ -252,3 +255,229 @@ def test_build_multislice_engine_compile_once_per_slice():
                             max_new_tokens=BUDGETS[i]) for i in range(4)])
     ms.run_until_idle()
     assert ms.trace_counts() == before       # steady state: no retraces
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant fleet (ISSUE 8): slice-as-tenancy-unit
+# ---------------------------------------------------------------------------
+
+TENANT_A = "tinyllama-1.1b"
+TENANT_B = "mamba2-370m"
+T_LENS = [17.0, 19.0, 21.0, 23.0, 25.0, 18.0]
+T_BUDGETS = [4, 6, 3, 8, 5, 7]
+T_BASE = {TENANT_A: 8100, TENANT_B: 8200}
+
+
+def _treqs(model, k=6, rid_off=0):
+    """Fresh request objects per call: engines mutate Request fields, so a
+    reference run and a fleet run must never share objects. `rid_off`
+    namespaces a follow-up wave (rids must be unique per engine)."""
+    return [
+        Request(rid=T_BASE[model] + rid_off + i, arrival=0.0,
+                length=T_LENS[i], max_new_tokens=T_BUDGETS[i], model=model)
+        for i in range(k)
+    ]
+
+
+@pytest.fixture(scope="module")
+def two_tenant():
+    """Two heterogeneous tenants (attention + SSM) with per-model
+    single-slice reference outputs (same seed-0 params the fleet serves)."""
+    out = {}
+    for name in (TENANT_A, TENANT_B):
+        cfg = reduced(name)
+        params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=cfg.dtype)
+        single = build_engine(cfg, ec=_ec())
+        single.params = params
+        single.submit_many(_treqs(name))
+        single.run_until_idle()
+        ref = {r.rid: np.asarray(r.payload) for r in single.completed}
+        assert len(ref) == len(T_LENS)
+        out[name] = (cfg, params, ref)
+    return out
+
+
+def _fleet(two_tenant, *, na=2, nb=2, **kw):
+    cfg_a, params_a, _ = two_tenant[TENANT_A]
+    cfg_b, params_b, _ = two_tenant[TENANT_B]
+    return build_multislice_engine(
+        n_slices=na + nb, ec=_ec(),
+        tenants=[TenantSpec(cfg=cfg_a, name=TENANT_A, n_slices=na,
+                            params=params_a),
+                 TenantSpec(cfg=cfg_b, name=TENANT_B, n_slices=nb,
+                            params=params_b)],
+        **kw,
+    )
+
+
+def _check_tenant_done(done, two_tenant, k_each):
+    assert len(done) == 2 * k_each
+    assert len({r.rid for r in done}) == 2 * k_each
+    for r in done:
+        ref = two_tenant[r.model][2]
+        np.testing.assert_array_equal(np.asarray(r.payload), ref[r.rid])
+
+
+def test_two_tenant_fleet_bit_identical_per_tenant(two_tenant):
+    """The tentpole's core proof: two models on disjoint slice sets behind
+    ONE admission queue, a mixed trace completes with every tenant's
+    outputs bit-identical to a single-slice engine of that model, and the
+    routing audit shows no request ever touched a foreign slice."""
+    ms = _fleet(two_tenant)
+    ms.submit_many(_treqs(TENANT_A) + _treqs(TENANT_B))
+    done = ms.run_until_idle()
+    _check_tenant_done(done, two_tenant, len(T_LENS))
+    # disjoint slice sets, each engine built for its OWNING tenant's model
+    a, b = set(ms.slices_of(TENANT_A)), set(ms.slices_of(TENANT_B))
+    assert a and b and not (a & b) and a | b == set(ms.engines)
+    for sid, e in ms.engines.items():
+        assert e.cfg is two_tenant[ms.slice_tenant[sid]][0]
+    ts = ms.tenant_stats()
+    for name in (TENANT_A, TENANT_B):
+        assert ts[name]["completed"] == len(T_LENS)
+        assert ts[name]["dead"] == 0
+        assert set(ts[name]["routed_to"]) <= set(ms.slices_of(name))
+    # both tenants' slices really served work (least-loaded streaming)
+    assert all(e.stats["admitted"] > 0 for e in ms.engines.values())
+
+
+def test_model_router_stamps_and_validates(two_tenant):
+    """The front door: a multi-tenant fleet REQUIRES a model id and rejects
+    unknown ones before any queue sees the request; a single-tenant fleet
+    default-stamps its one model so tenancy invariants hold uniformly."""
+    ms = _fleet(two_tenant, na=1, nb=1)
+    with pytest.raises(ValueError, match="has no model"):
+        ms.submit(Request(rid=8900, arrival=0.0, length=17.0,
+                          max_new_tokens=2))
+    with pytest.raises(ValueError, match="unknown model"):
+        ms.submit(Request(rid=8901, arrival=0.0, length=17.0,
+                          max_new_tokens=2, model="gpt-17"))
+    assert ms.admission_depth() == 0          # rejected at the door
+    cfg_a, params_a, _ = two_tenant[TENANT_A]
+    single = MultiSliceEngine(cfg_a, params_a, _policy(2), _ec(), n_slices=2)
+    r = Request(rid=8902, arrival=0.0, length=17.0, max_new_tokens=2)
+    single.submit(r)
+    assert r.model == cfg_a.name              # default-routed, stamped
+    done = single.run_until_idle()
+    assert [x.rid for x in done] == [r.rid]
+
+
+def test_hedge_twin_never_crosses_tenant(two_tenant):
+    """Straggler hedging is tenant-constrained: a stalled slice's requests
+    clone onto the SAME tenant's healthy slice (never a foreign model's),
+    complete exactly once, and stay bit-identical."""
+    ms = _fleet(two_tenant, hedge_factor=1.5)
+    ms.fixed_expected_s = 1e-4               # deterministic detection
+    # offer(): backlog intake with no formation delay (tenant-derived
+    # policies carry a real Time_queue, unlike the legacy tests' 0.0), so
+    # the stall can be injected before any engine advances
+    ms.offer(_treqs(TENANT_A, 2) + _treqs(TENANT_B, 2))
+    ms._dispatch(time.monotonic())
+    assert len(ms._inflight) == 4
+    a_slices = set(ms.slices_of(TENANT_A))
+    sid = next(s for tr in ms._inflight.values()
+               for s in tr.copies if s in a_slices)
+    ms.stalled_slices.add(sid)               # tenant A slice hangs
+    done = ms.run_until_idle()
+    _check_tenant_done(done, two_tenant, 2)
+    assert ms.hedges >= 1
+    assert ms.stats["cancelled"] >= 1        # stalled copies were killed
+    ts = ms.tenant_stats()
+    assert set(ts[TENANT_A]["routed_to"]) <= a_slices
+    assert set(ts[TENANT_B]["routed_to"]) <= set(ms.slices_of(TENANT_B))
+
+
+def test_fail_slice_requeues_within_tenant(two_tenant):
+    """fail_slice victims redispatch onto the owning tenant's surviving
+    slices only — a foreign tenant's idle capacity is never borrowed (its
+    engines hold the wrong weights)."""
+    ms = _fleet(two_tenant)
+    ms.offer(_treqs(TENANT_B, 3))            # tenant B traffic only
+    ms._dispatch(time.monotonic())
+    assert ms._inflight
+    b_slices = set(ms.slices_of(TENANT_B))
+    sid = next(s for tr in ms._inflight.values()
+               for s in tr.copies if s in b_slices)
+    assert ms.fail_slice(sid)                # sole holders -> requeued
+    done = ms.run_until_idle()
+    assert len(done) == 3
+    for r in done:
+        np.testing.assert_array_equal(np.asarray(r.payload),
+                                      two_tenant[TENANT_B][2][r.rid])
+    assert set(ms.tenant_stats()[TENANT_B]["routed_to"]) <= b_slices
+    # tenant A's idle slices never admitted tenant B's work
+    for sid_a in ms.slices_of(TENANT_A):
+        assert ms.engines[sid_a].stats["admitted"] == 0
+
+
+def test_resize_rebalances_slices_between_tenants(two_tenant):
+    """Elastic re-slice with tenants: the new slice count is re-divided
+    between tenants (largest remainder, >=1 floor), engines rebuild with
+    the RIGHT tenant's model, in-flight work requeues within its tenant,
+    and shrinking below the tenant count is rejected up front."""
+    ms = _fleet(two_tenant)
+    ms.offer(_treqs(TENANT_A) + _treqs(TENANT_B))
+    ms.step()
+    assert ms._inflight                      # genuinely mid-trace
+    with pytest.raises(ValueError):
+        ms.resize(n_slices=1)                # 2 tenants need >= 2 slices
+    ms.resize(n_slices=3)
+    assert len(ms.engines) == 3
+    counts = {n: len(ms.slices_of(n)) for n in (TENANT_A, TENANT_B)}
+    assert sorted(counts.values()) == [1, 2]  # both kept >= 1
+    for sid, e in ms.engines.items():
+        assert e.cfg is two_tenant[ms.slice_tenant[sid]][0]
+    done = ms.run_until_idle()
+    _check_tenant_done(done, two_tenant, len(T_LENS))
+    for name in (TENANT_A, TENANT_B):
+        assert set(ms.tenant_stats()[name]["routed_to"]) <= \
+            set(ms.slices_of(name))
+    assert ms.stats["resizes"] == 1
+
+
+def test_tenant_compile_isolation(two_tenant):
+    """Each tenant's slices trace THEIR model's executables only: after a
+    mixed trace every slice engine is at the single-tenant steady state
+    (admit bucket + segment), and more traffic retraces nothing."""
+    ms = _fleet(two_tenant, na=1, nb=1)
+    ms.submit_many(_treqs(TENANT_A) + _treqs(TENANT_B))
+    ms.run_until_idle()
+    counts = ms.trace_counts()
+    assert all(c <= 2 for c in counts.values()), counts
+    before = dict(counts)
+    ms.submit_many(_treqs(TENANT_A, 3, rid_off=50)
+                   + _treqs(TENANT_B, 3, rid_off=50))
+    done = ms.run_until_idle()               # cumulative across both waves
+    assert len({r.rid for r in done}) == 2 * len(T_LENS) + 6
+    assert ms.trace_counts() == before       # steady state per tenant
+
+
+# --- placement / apportionment units (core/slicing/mig.py) -----------------
+
+
+def test_rebalance_slices_apportionment():
+    assert rebalance_slices(4, {"a": 2, "b": 2}) == {"a": 2, "b": 2}
+    # largest remainder, deterministic name-order tie-break
+    assert rebalance_slices(3, {"a": 2, "b": 2}) == {"a": 2, "b": 1}
+    # proportional at scale
+    assert rebalance_slices(16, {"a": 3, "b": 1}) == {"a": 12, "b": 4}
+    # >=1 floor: a tiny pod never starves a tenant entirely
+    assert rebalance_slices(2, {"a": 9, "b": 1}) == {"a": 1, "b": 1}
+    with pytest.raises(ValueError):
+        rebalance_slices(1, {"a": 1, "b": 1})
+
+
+def test_plan_placement_fragmentation_accounting():
+    p = plan_placement(256, [PlacementAsk("a", 2, 64),
+                             PlacementAsk("b", 2, 16)])
+    assert p.slice_counts() == {"a": 2, "b": 2}
+    assert p.stranded_chips == 256 - (2 * 64 + 2 * 16)
+    assert p.fragmentation == pytest.approx(96 / 256)
+    # best-fit decreasing: the big ask packs first regardless of ask order
+    q = plan_placement(96, [PlacementAsk("small", 1, 16),
+                            PlacementAsk("big", 1, 64)])
+    assert q.assignments["big"] == [(0, 64)]
+    assert q.assignments["small"] == [(64, 16)]
+    assert q.stranded_chips == 16
+    with pytest.raises(ValueError):
+        plan_placement(64, [PlacementAsk("a", 1, 128)])
