@@ -137,10 +137,14 @@ def make_stream(n_batches: int, batch_size: int, seed: int = 0):
 
 
 def run_path(engine: ServingEngine, stream) -> dict:
-    # warmup: first batch pays tracing/compilation for its shapes
+    # warmup: first batch pays tracing/compilation for its shapes; the
+    # registry-wide reset drops its samples from every histogram so the
+    # measured window starts clean (trace counters are persistent and ride
+    # through — readers diff them)
     t_w0 = time.monotonic()
     engine._execute(stream[0])
     warmup_s = time.monotonic() - t_w0
+    engine.reset_metrics()
 
     t0 = time.monotonic()
     for b in stream[1:]:
@@ -155,10 +159,10 @@ def run_path(engine: ServingEngine, stream) -> dict:
 
     n_steady = len(stream) - 1
     toks = n_steady * BATCH_SIZE * MAX_NEW_TOKENS
-    lat = sorted(engine.batch_exec_s[1:])
-    p95 = lat[max(0, int(round(0.95 * len(lat))) - 1)] if lat else float("nan")
+    h_exec = engine.registry.merged_histogram("engine_batch_exec_seconds")
+    p95 = h_exec.quantile(0.95)
     s = dict(engine.stats)
-    tq = _ttft_quantile([r for b in stream[1:] for r in b.requests])
+    tq = _hist_quantile(engine.registry, "request_ttft_seconds")
     return {
         "batches": len(stream),
         "steady_batches": n_steady,
@@ -233,9 +237,9 @@ def _warmup(engine: ServingEngine, seed: int = 99):
             engine.run_until_idle()
         else:
             engine._execute(Batch(requests=reqs, bucket_id=0, formed_at=0.0))
-    engine.completed.clear()
-    engine.batch_exec_s.clear()
-    engine.slot_occupancy.clear()
+    # one registry-wide reset: counters, histograms, completed list, and
+    # trace stream all restart together at the warmup boundary (PR 9)
+    engine.reset_metrics()
 
 
 def _replay(engine, rel, spec, factory=None):
@@ -262,20 +266,30 @@ def _replay(engine, rel, spec, factory=None):
     return time.monotonic() - t0, reqs
 
 
-def _latency_quantile(done):
-    lat = np.sort([r.completed_at - r.arrival for r in done])
-    return lambda p: float(lat[min(len(lat) - 1, int(np.ceil(p * len(lat))) - 1)])
+def _hist_quantile(registry, name: str):
+    """Quantile reader over a registry histogram, merged across every
+    labeled series and child registry (per-slice engines under a fleet
+    root). Every engine observes request latency / TTFT into streaming
+    sketches at retire time, so the bench quantiles come straight from the
+    telemetry layer instead of a re-derived sample list; each section's
+    warmup ends in a registry-wide reset, so the sketch holds exactly the
+    measured window."""
+    h = registry.merged_histogram(name)
+    return lambda p: float(h.quantile(p))
 
 
-def _ttft_quantile(done):
-    """Time-to-first-token quantiles (first_token_at - arrival): the latency
-    the prefix cache attacks — a hit skips most of prefill, so the first
-    token lands segments earlier even when total decode time is unchanged."""
-    ts = np.sort([r.first_token_at - r.arrival for r in done
-                  if r.first_token_at is not None])
-    if not len(ts):
-        return lambda p: float("nan")
-    return lambda p: float(ts[min(len(ts) - 1, int(np.ceil(p * len(ts))) - 1)])
+def _latency_quantile(engine):
+    """Request-latency quantiles (completed_at - arrival) from the engine's
+    `request_latency_seconds` sketch."""
+    return _hist_quantile(engine.registry, "request_latency_seconds")
+
+
+def _ttft_quantile(engine):
+    """Time-to-first-token quantiles (first_token_at - arrival) from the
+    `request_ttft_seconds` sketch: the latency the prefix cache attacks —
+    a hit skips most of prefill, so the first token lands segments earlier
+    even when total decode time is unchanged."""
+    return _hist_quantile(engine.registry, "request_ttft_seconds")
 
 
 def run_trace(engine: ServingEngine, rel, spec) -> dict:
@@ -294,8 +308,8 @@ def run_trace(engine: ServingEngine, rel, spec) -> dict:
     done = engine.completed
     assert len(done) == len(reqs), (len(done), len(reqs))
     useful = sum(len(r.payload) for r in done)
-    q = _latency_quantile(done)
-    tq = _ttft_quantile(done)
+    q = _latency_quantile(engine)
+    tq = _ttft_quantile(engine)
     out = {
         "requests": len(done),
         "makespan_s": round(makespan, 4),
@@ -391,7 +405,7 @@ def run_trace_multi(ms: MultiSliceEngine, rel, spec) -> dict:
     done = ms.completed
     assert len(done) == len(reqs), (len(done), len(reqs))
     useful = sum(len(r.payload) for r in done)
-    q = _latency_quantile(done)
+    q = _latency_quantile(ms)
     stats = ms.slice_stats()
     per_slice = {  # counters diffed to the measured window (warmup excluded)
         str(sid): {
@@ -414,8 +428,8 @@ def run_trace_multi(ms: MultiSliceEngine, rel, spec) -> dict:
         "tokens_per_s": round(useful / makespan, 1),
         "p50_latency_ms": round(1e3 * q(0.50), 2),
         "p99_latency_ms": round(1e3 * q(0.99), 2),
-        "ttft_p50_ms": round(1e3 * _ttft_quantile(done)(0.50), 2),
-        "ttft_p99_ms": round(1e3 * _ttft_quantile(done)(0.99), 2),
+        "ttft_p50_ms": round(1e3 * _ttft_quantile(ms)(0.50), 2),
+        "ttft_p99_ms": round(1e3 * _ttft_quantile(ms)(0.99), 2),
         "hedges": ms.hedges - hedges_before,
         "dispatched_requests": ms.stats["dispatched"] - dispatched_before,
         "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
@@ -553,7 +567,7 @@ def bench_chunked_prefill(cfg, trace_n: int, mean_gap_s: float) -> dict:
         done = ms.completed
         assert len(done) == len(reqs), (len(done), len(reqs))
         useful = sum(len(r.payload) for r in done)
-        q = _latency_quantile(done)
+        q = _latency_quantile(ms)
         ta = ms.trace_counts()
         res = {
             "requests": len(done),
@@ -562,8 +576,8 @@ def bench_chunked_prefill(cfg, trace_n: int, mean_gap_s: float) -> dict:
             "tokens_per_s": round(useful / makespan, 1),
             "p50_latency_ms": round(1e3 * q(0.50), 2),
             "p99_latency_ms": round(1e3 * q(0.99), 2),
-            "ttft_p50_ms": round(1e3 * _ttft_quantile(done)(0.50), 2),
-            "ttft_p99_ms": round(1e3 * _ttft_quantile(done)(0.99), 2),
+            "ttft_p50_ms": round(1e3 * _ttft_quantile(ms)(0.50), 2),
+            "ttft_p99_ms": round(1e3 * _ttft_quantile(ms)(0.99), 2),
             "mean_slot_occupancy": round(ms.mean_slot_occupancy(), 3),
             "hedges": ms.hedges - hedges_b,
             "trace_count_during_trace": sum(ta.values()) - sum(tb.values()),
@@ -706,9 +720,7 @@ def _warmup_prefix(engine: ServingEngine, cfg, template) -> dict:
                                 max_new_tokens=int(min(PREFIX_BUDGETS))))
         engine.submit_many(reqs)
         engine.run_until_idle()
-    engine.completed.clear()
-    engine.batch_exec_s.clear()
-    engine.slot_occupancy.clear()
+    engine.reset_metrics()
     return dict(engine.stats)
 
 
@@ -734,8 +746,8 @@ def bench_prefix_cache(cfg, trace_n: int, mean_gap_s: float) -> dict:
         done = engine.completed
         assert len(done) == len(reqs), (len(done), len(reqs))
         useful = sum(len(r.payload) for r in done)
-        q = _latency_quantile(done)
-        tq = _ttft_quantile(done)
+        q = _latency_quantile(engine)
+        tq = _ttft_quantile(engine)
         hits = s["prefix_hits"] - before["prefix_hits"]
         hit_toks = s["prefix_hit_tokens"] - before["prefix_hit_tokens"]
         prompt_toks = (s["prefix_prompt_tokens"]
@@ -883,11 +895,12 @@ def _replay_overlap(engine, cfg, rel, spec):
     return time.monotonic() - t0, reqs
 
 
-def _overlap_metrics(done, reqs, makespan, traces_before, traces_after):
+def _overlap_metrics(engine, done, reqs, makespan, traces_before,
+                     traces_after):
     assert len(done) == len(reqs), (len(done), len(reqs))
     useful = sum(len(r.payload) for r in done)
-    q = _latency_quantile(done)
-    tq = _ttft_quantile(done)
+    q = _latency_quantile(engine)
+    tq = _ttft_quantile(engine)
     return {
         "requests": len(done),
         "makespan_s": round(makespan, 4),
@@ -923,7 +936,7 @@ def bench_preprocess_overlap(cfg, trace_n: int, mean_gap_s: float) -> dict:
     tb = inline.trace_counts()
     makespan, reqs = _replay_overlap(inline, cfg, rel, spec)
     inline_res = _overlap_metrics(
-        inline.completed, reqs, makespan, tb, inline.trace_counts())
+        inline, inline.completed, reqs, makespan, tb, inline.trace_counts())
     inline_out = {r.rid: np.asarray(r.payload) for r in inline.completed}
 
     # --- pipelined: decoupled DPU service (batched Pallas CU launches,
@@ -959,13 +972,13 @@ def bench_preprocess_overlap(cfg, trace_n: int, mean_gap_s: float) -> dict:
         [Request(rid=1, arrival=0.0, length=1.0, payload=probe.copy())])[0]
     pre_ok = bool(np.allclose(np.asarray(got), np.asarray(want),
                               rtol=2e-2, atol=2e-2))
-    engine.reset_metrics()
-    rt.reset_metrics()  # also zeroes service.stats: warmup work excluded
+    rt.reset_metrics()  # ONE registry-wide reset: runtime + engines +
+    #                     service + prefix stores; warmup work excluded
     tb = engine.trace_counts()
     makespan, reqs = _replay_overlap(rt, cfg, rel, spec)
     rt.close()
     pipe_res = _overlap_metrics(
-        engine.completed, reqs, makespan, tb, engine.trace_counts())
+        engine, engine.completed, reqs, makespan, tb, engine.trace_counts())
     pipe_res["stage_queue_depth"] = rt.stage_summary()
     pipe_res["stage_occupancy"] = rt.stage_occupancy()
     pipe_res["shed"] = len(rt.shed)
@@ -1146,6 +1159,22 @@ def bench_chaos_soak(cfg) -> dict:
                       + [r.rid for r in rt.dead])
     bit_identical = all(
         np.array_equal(np.asarray(r.payload), ref[r.rid]) for r in done)
+    # telemetry gates (PR 9), captured BEFORE the post-recovery waves add
+    # events: (a) the registry's own submitted counter reconciles with the
+    # conservation ledger, (b) the exported virtual-clock timeline is a
+    # pure function of trace + plan — a second replay of the same seed
+    # must serialize byte-identically
+    registry_reconciles = (
+        rt.registry.value("runtime_submitted")
+        == len(done) + len(rt.shed) + len(rt.dead))
+    trace_json = rt.tracer.to_json(0.0)
+    fault_events_traced = len(rt.tracer.of("fault"))
+    rt2 = _mk_rt()
+    reqs2 = _chaos_requests(cfg, rel, spec)
+    plan.corrupt_payloads(reqs2)
+    replay_virtual(rt2, reqs2, plan, tick=CHAOS_TICK)
+    trace_deterministic = rt2.tracer.to_json(0.0) == trace_json
+    rt2.close()
     post_tps = _post_recovery_tokens_per_s(rt, cfg, 920000)
     rt.close()
     ratio = post_tps / ok_tps if ok_tps else 0.0
@@ -1200,6 +1229,10 @@ def bench_chaos_soak(cfg) -> dict:
         and rt.stats["cpu_fallback"] >= 1,
         "post_recovery_ratio": round(ratio, 3),
         "post_recovery_ok": ratio >= 0.9,
+        # --- telemetry gates (PR 9) ---
+        "registry_reconciles": bool(registry_reconciles),
+        "fault_events_traced": fault_events_traced,
+        "trace_export_deterministic": bool(trace_deterministic),
     }
 
 
@@ -1343,8 +1376,8 @@ def bench_multi_tenant(cfg) -> dict:
                    for b in slice_sets[i + 1:])
 
     useful = sum(len(r.payload) for r in done)
-    q = _latency_quantile(done)
-    tq = _ttft_quantile(done)
+    q = _latency_quantile(ms)
+    tq = _ttft_quantile(ms)
     per_slice = {  # counters diffed to the measured window (warmup excluded)
         str(sid): {
             "model": stats[sid]["model"],
@@ -1487,7 +1520,8 @@ def main():
           f"dead_letter={ch['dead_letter_exercised']}, "
           f"breaker={ch['breaker_exercised']}, "
           f"post_recovery={ch['post_recovery_ratio']:.3f}x "
-          f"(ok={ch['post_recovery_ok']})")
+          f"(ok={ch['post_recovery_ok']}), "
+          f"trace_deterministic={ch['trace_export_deterministic']}")
     mt = result["multi_tenant"]
     print(f"tenants:      {mt['tokens_per_s']:.1f} useful tokens/s, "
           f"{len(mt['per_tenant'])} models x {MT_SLICES_EACH} slices each, "

@@ -46,6 +46,8 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from repro.core.batching.buckets import Request, next_pow2
 from repro.core.dpu.runtime import DPU, DpuConfig, group_key
+from repro.core.metrics import MetricsRegistry
+from repro.serving import telemetry as tm
 
 
 @dataclass(frozen=True)
@@ -114,10 +116,15 @@ class DoubleBuffer:
 class DpuService:
     """Asynchronous preprocessing service over one shared CU pool."""
 
-    def __init__(self, cfg: Optional[DpuServiceConfig] = None):
+    def __init__(self, cfg: Optional[DpuServiceConfig] = None, *,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[tm.Tracer] = None):
         self.cfg = DpuServiceConfig() if cfg is None else cfg
         if self.cfg.clock not in ("virtual", "wall"):
             raise ValueError(f"unknown clock mode {self.cfg.clock!r}")
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("dpu_service")
+        self.tracer = tracer if tracer is not None else tm.Tracer()
         self.dpu = DPU(self.cfg.dpu)
         self._bucket = (self.cfg.dpu.backend == "dpu"
                         if self.cfg.bucket_pow2 is None
@@ -131,10 +138,12 @@ class DpuService:
         # virtual clock: (modeled ready_at, seq, request) min-heap
         self._scheduled: List[Tuple[float, int, Request]] = []
         self._seq = 0
-        self.stats: Dict[str, int] = {
-            "submitted": 0, "groups": 0, "processed": 0, "failed": 0,
-            "max_pending_depth": 0, "max_ready_depth": 0,
-        }
+        # registry-backed counters behind the historical dict interface:
+        # one registry-wide reset() clears them with every other stage
+        self.stats = self.registry.view("dpu", (
+            "submitted", "groups", "processed", "failed",
+            "max_pending_depth", "max_ready_depth",
+        ))
         # requests whose batched launch raised: surfaced via take_failed()
         # so the runtime can shed them — a bad payload must never vanish or
         # wedge the pipeline (see _worker_loop)
@@ -239,9 +248,9 @@ class DpuService:
 
     def reset_metrics(self) -> None:
         """Zero the stat counters (benchmark warmup boundary) — queue
-        contents and worker state are untouched."""
-        for k in self.stats:
-            self.stats[k] = 0
+        contents and worker state are untouched. Delegates to the registry
+        so a composed runtime's single reset() covers this stage too."""
+        self.registry.reset()
 
     def close(self) -> None:
         if self._worker is not None:
@@ -343,6 +352,9 @@ class DpuService:
         ):
             group = self._form_group()
             self.stats["groups"] += 1
+            self.tracer.event(tm.PREPROCESS_LAUNCH, now, n=len(group),
+                              tenant=getattr(group[0], "model", None),
+                              rids=[r.rid for r in group])
             if self.cfg.clock == "virtual":
                 # process FIRST (same shed-the-group contract as the wall
                 # worker: a raising launch must not crash the pipeline or
@@ -361,6 +373,8 @@ class DpuService:
                     self.last_error = e
                     self._failed.extend(group)
                     self.stats["failed"] += len(group)
+                    self.tracer.event(tm.PREPROCESS_FAIL, now, n=len(group),
+                                      rids=[r.rid for r in group])
                     did = True
                     continue
                 for r, t, y in zip(group, ts, outs):
@@ -387,6 +401,8 @@ class DpuService:
                     break
                 heapq.heappop(self._scheduled)
                 self.stats["processed"] += 1
+                self.tracer.event(tm.PREPROCESS_DONE, ready_at, rid=r.rid,
+                                  tenant=getattr(r, "model", None))
                 did = True
         else:
             with self._cond:
@@ -399,6 +415,8 @@ class DpuService:
                     break
                 done.popleft()
                 self.stats["processed"] += 1
+                self.tracer.event(tm.PREPROCESS_DONE, now, rid=r.rid,
+                                  tenant=getattr(r, "model", None))
                 did = True
             if done:  # ready buffer full: keep the rest for the next step
                 with self._cond:

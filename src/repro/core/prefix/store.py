@@ -119,7 +119,8 @@ class PrefixLease:
 class PrefixStore:
     """Refcounted, LRU-evicting radix store of prefix K/V, per-lp forest."""
 
-    def __init__(self, bytes_budget: int, token_bytes: int):
+    def __init__(self, bytes_budget: int, token_bytes: int, registry=None,
+                 labels=None):
         assert token_bytes > 0, token_bytes
         self.bytes_budget = int(bytes_budget)
         self.token_bytes = int(token_bytes)
@@ -127,9 +128,20 @@ class PrefixStore:
         self._tokens_stored = 0                  # sum of len(segment)
         self._tick = 0                           # deterministic LRU clock
         self._leases: List[PrefixLease] = []     # active (unreleased) pins
-        self.stats = {"lookups": 0, "hits": 0, "hit_tokens": 0,
-                      "inserts": 0, "inserted_tokens": 0, "evictions": 0,
-                      "evicted_tokens": 0}
+        # registry-backed counters behind the historical dict interface
+        # (the owning engine passes its registry AND its slice/tenant
+        # labels, so per-slice stores stay distinct series under one fleet
+        # root; standalone stores get a private registry) — store contents
+        # survive a metrics reset, only the counters clear, so readers diff
+        # across warmup boundaries
+        if registry is None:
+            from repro.core.metrics import MetricsRegistry
+
+            registry = MetricsRegistry("prefix_store")
+        self.registry = registry
+        self.stats = registry.view("prefix_store", (
+            "lookups", "hits", "hit_tokens", "inserts", "inserted_tokens",
+            "evictions", "evicted_tokens"), labels=labels)
 
     # -- introspection ----------------------------------------------------
 

@@ -34,6 +34,29 @@ in-flight work without losing requests.
 """
 
 
+def _export(registry, tracer, metrics_out: str, trace_out: str,
+            virtual: bool) -> None:
+    """Write the metrics snapshot and/or the lifecycle timeline. The
+    registry is schema-linted first — a name bound to two kinds or label
+    keysets, or a duplicate series, is a bug worth failing the run over.
+    Virtual clock: the trace is rebased to t=0 so two replays of the same
+    seed export byte-identical files (the CI determinism gate)."""
+    if not (metrics_out or trace_out):
+        return
+    problems = registry.lint()
+    if problems:
+        raise SystemExit("metric schema lint failed:\n  "
+                         + "\n  ".join(problems))
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(registry.to_json())
+        print(f"  metrics -> {metrics_out}")
+    if trace_out:
+        with open(trace_out, "w") as f:
+            f.write(tracer.to_json(0.0 if virtual else None))
+        print(f"  trace   -> {trace_out}")
+
+
 def main():
     ap = argparse.ArgumentParser(
         epilog=MENU_HELP,
@@ -82,6 +105,20 @@ def main():
     ap.add_argument("--slo", type=float, default=float("inf"),
                     help="front-door latency SLO in seconds (--pipelined): "
                          "requests that cannot meet it are shed")
+    ap.add_argument("--clock", choices=("wall", "virtual"), default="wall",
+                    help="--pipelined clock: wall = real serving (the DPU "
+                         "worker overlaps decode in real time); virtual = "
+                         "deterministic replay (arrivals drive the clock — "
+                         "two runs of the same seed export byte-identical "
+                         "timelines, the CI determinism gate)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the full metrics-registry snapshot (every "
+                         "layer: runtime, engines, DPU service, prefix "
+                         "stores) as JSON to this path after serving")
+    ap.add_argument("--trace-out", default="",
+                    help="write the request-lifecycle timeline as Chrome "
+                         "trace-event JSON (chrome://tracing / Perfetto) "
+                         "to this path after serving")
     args = ap.parse_args()
 
     import numpy as np
@@ -173,22 +210,32 @@ def main():
             # fused Pallas launches) — the cpu backend is the inline
             # baseline, not the service
             service = DpuService(DpuServiceConfig(
-                clock="wall", dpu=DpuConfig(backend="dpu")))
+                clock=args.clock, dpu=DpuConfig(backend="dpu")))
         rt = build_pipelined_runtime(
             cfg, n_slices=n_slices, ec=ec, service=service,
-            rc=RuntimeConfig(clock="wall", slo_s=args.slo,
+            rc=RuntimeConfig(clock=args.clock, slo_s=args.slo,
                              max_ingest=max(64, 2 * args.requests)),
             hedge_factor=args.hedge_factor, tenants=tenants,
         )
-        # rebase the workload's 0-based arrival times onto the wall clock:
-        # the SLO check compares time.monotonic() against arrival + slo, so
-        # un-rebased arrivals would make ANY finite --slo shed everything
-        t0 = time.monotonic()
-        for r in reqs:
-            r.arrival += t0
-        rt.submit(reqs)
-        done = rt.run_until_idle()
-        rt.close()
+        if args.clock == "virtual":
+            # deterministic replay: the trace's 0-based arrivals ARE the
+            # clock; everything downstream (timestamps, trace events,
+            # exported timelines) is a pure function of the trace
+            from repro.serving.faults import replay_virtual
+
+            done = replay_virtual(rt, reqs)
+            rt.close()
+        else:
+            # rebase the workload's 0-based arrival times onto the wall
+            # clock: the SLO check compares time.monotonic() against
+            # arrival + slo, so un-rebased arrivals would make ANY finite
+            # --slo shed everything
+            t0 = time.monotonic()
+            for r in reqs:
+                r.arrival += t0
+            rt.submit(reqs)
+            done = rt.run_until_idle()
+            rt.close()
         lats = [r.completed_at - r.dispatched_at for r in done]
         # a tight --slo can shed everything; the summary must still print
         exec_ms = (f"exec p50={1e3*np.percentile(lats,50):.1f}ms "
@@ -205,6 +252,8 @@ def main():
         occ = rt.stage_occupancy()
         print(f"  occupancy: preprocess={occ['preprocess']:.3f} "
               f"slots={occ['slots']:.3f}")
+        _export(rt.registry, rt.tracer, args.metrics_out, args.trace_out,
+                args.clock == "virtual")
         return
 
     if n_slices > 1 or tenants:
@@ -235,6 +284,8 @@ def main():
                 print(f"  tenant {name}: slices={sorted(ts['slices'])} "
                       f"completed={ts['completed']} dead={ts['dead']} "
                       f"routed_to={sorted(ts['routed_to'])}")
+        _export(engine.registry, engine.tracer, args.metrics_out,
+                args.trace_out, virtual=False)
         return
 
     engine = build_engine(cfg, ec=ec)
@@ -246,6 +297,8 @@ def main():
         f"served {len(done)} requests in {engine.batcher.formed} batches; "
         f"exec p50={1e3*np.percentile(lats,50):.1f}ms p95={1e3*np.percentile(lats,95):.1f}ms"
     )
+    _export(engine.registry, engine.tracer, args.metrics_out,
+            args.trace_out, virtual=False)
 
 
 if __name__ == "__main__":

@@ -71,8 +71,10 @@ from repro.core.batching.buckets import (
 from repro.core.batching.policy import BatchPolicy, pick_chunk_len
 from repro.core.batching.scheduler import SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
+from repro.core.metrics import MetricsRegistry
 from repro.core.prefix import PrefixLease, PrefixStore
 from repro.models import api, lm
+from repro.serving import telemetry as tm
 
 
 @dataclass
@@ -194,23 +196,45 @@ class _ChunkAdmission:
     # Hit groups are split per base so each admission stays column-pure;
     # classes of the same (chunk, lp) still merge into one program call.
     base: int = 0
+    # rows whose TTFT was already stamped at the scatter step (entire
+    # prompt served from the prefix store — see _begin_chunked); the
+    # final chunk must not overwrite their earlier stamp
+    stamped: List[int] = field(default_factory=list)
 
 
 class ServingEngine:
     """Single-slice engine: enqueue requests, run_until_idle() drains them
     through preprocess -> dynamic batching -> prefill -> decode.
 
-    `stats` tracks the compile-once invariant: `prefill_traces` /
-    `generate_traces` / `segment_traces` / `decode_step_traces` increment
-    only while JAX is tracing (Python side effects don't run on cached
-    executables), and `prefill_cache_hits` counts bucket reuse. Continuous
-    batching adds `admitted` / `retired` / `segments` counters and
-    `slot_occupancy` (active-slot fraction per segment).
+    `stats` is a registry-backed view tracking the compile-once invariant:
+    `prefill_traces` / `generate_traces` / `segment_traces` /
+    `decode_step_traces` increment only while JAX is tracing (Python side
+    effects don't run on cached executables), and `prefill_cache_hits`
+    counts bucket reuse. Continuous batching adds `admitted` / `retired` /
+    `segments` counters and the `engine_slot_occupancy_ratio` histogram
+    (active-slot fraction per segment). Exec times, request latency, and
+    TTFT are streaming histograms on the same registry; lifecycle events
+    (admit / prefill_chunk / prefix_scatter / decode_segment / retire) land
+    on the shared tracer.
     """
+
+    # trace/compile counters mirror the jitted-executable caches, which a
+    # metrics reset does NOT evict — they are registered `persistent` and
+    # readers diff across the warmup boundary (the bench harness already
+    # does exactly that)
+    _PERSISTENT_STATS = (
+        "prefill_compiles", "prefill_cache_hits", "prefill_traces",
+        "generate_traces", "segment_traces", "decode_step_traces",
+        "prefix_scatter_traces",
+    )
 
     def __init__(self, cfg: ModelConfig, params, policy: BatchPolicy,
                  ec: Optional[EngineConfig] = None, *,
-                 knee_profiles: Optional[Dict[int, Any]] = None):
+                 knee_profiles: Optional[Dict[int, Any]] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[tm.Tracer] = None,
+                 slice_id: Optional[int] = None,
+                 tenant: Optional[str] = None):
         # mutable-default hazard: a shared EngineConfig() default instance
         # would leak field mutations across engines — build a fresh one here.
         ec = EngineConfig() if ec is None else ec
@@ -226,30 +250,51 @@ class ServingEngine:
         self.dpu = DPU(DpuConfig()) if ec.preprocess == "dpu" else None
         self.completed: List[Request] = []
         self.batch_exec_s: List[float] = []
-        self.slot_occupancy: List[float] = []
-        self.stats: Dict[str, int] = {
-            "batches": 0,
-            "prefill_compiles": 0,
-            "prefill_cache_hits": 0,
-            "prefill_traces": 0,
-            "generate_traces": 0,
-            "segment_traces": 0,
-            "decode_step_traces": 0,
-            "admitted": 0,
-            "retired": 0,
-            "segments": 0,
-            "dpu_batches": 0,
+        # telemetry: every counter/histogram lives in the registry (a fresh
+        # engine gets a fresh registry, so slice rebuilds keep their
+        # fresh-counter semantics; composing layers attach it as a child).
+        # The tracer is shared downward by the composing layer; timestamps
+        # come from the caller's clock under virtual replay (_stamp).
+        self._sid = slice_id
+        self._tenant = tenant
+        self._labels = {"slice": "-" if slice_id is None else str(slice_id),
+                        "tenant": tenant if tenant is not None else "-"}
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("engine")
+        self.tracer = tracer if tracer is not None else tm.Tracer()
+        self._virtual = False  # virtual-clock stamping (set by the runtime)
+        self.stats = self.registry.view("engine", (
+            "batches",
+            "prefill_compiles",
+            "prefill_cache_hits",
+            "prefill_traces",
+            "generate_traces",
+            "segment_traces",
+            "decode_step_traces",
+            "admitted",
+            "retired",
+            "segments",
+            "dpu_batches",
             # radix prefix cache (zero when disabled; bench/CI read these
             # uniformly): hit admissions, K/V tokens reused instead of
             # recomputed, total prompt tokens admitted, store inserts, and
             # the hit path's own trace counter (one scatter program per
             # bucket, compiled at warmup — steady state retraces nothing)
-            "prefix_hits": 0,
-            "prefix_hit_tokens": 0,
-            "prefix_prompt_tokens": 0,
-            "prefix_inserts": 0,
-            "prefix_scatter_traces": 0,
-        }
+            "prefix_hits",
+            "prefix_hit_tokens",
+            "prefix_prompt_tokens",
+            "prefix_inserts",
+            "prefix_scatter_traces",
+        ), labels=self._labels, persistent=self._PERSISTENT_STATS)
+        self._h_exec = self.registry.histogram(
+            "engine_batch_exec_seconds", self._labels)
+        self._h_occ = self.registry.histogram(
+            "engine_slot_occupancy_ratio", self._labels)
+        self._h_lat = self.registry.histogram(
+            "request_latency_seconds", self._labels)
+        self._h_ttft = self.registry.histogram(
+            "request_ttft_seconds", self._labels)
+        self.registry.on_reset(self._reset_state)
         # (padded_batch, padded_len) -> jitted prefill executable
         self._prefill_cache: Dict[Tuple[int, int], Any] = {}
 
@@ -315,7 +360,9 @@ class ServingEngine:
                 from repro.core.batching import kv_bytes_per_token
                 tb = kv_bytes_per_token(cfg)
                 assert tb > 0, cfg.name  # attn-only families (chunk-gated)
-                self.prefix_store = PrefixStore(ec.prefix_cache_bytes, tb)
+                self.prefix_store = PrefixStore(
+                    ec.prefix_cache_bytes, tb, registry=self.registry,
+                    labels=self._labels)
             self._prefix_leases: Dict[int, PrefixLease] = {}  # rid -> pin
             self._prefix_scatter_cache: Dict[int, Any] = {}   # lp -> jit
 
@@ -439,16 +486,16 @@ class ServingEngine:
                      _next_pow2(max(max(1, int(r.length)) for r in group)))
             c = self._pick_chunk(lp)
             if c:
-                self._begin_chunked(group, lp, c)
+                self._begin_chunked(group, lp, c, now)
             else:
-                self._admit(group)
+                self._admit(group, now)
             progressed = True
         # advance every in-flight chunked admission by ONE chunk, so chunk
         # work and the decode segment below interleave step by step and a
         # long prompt never freezes resident decoders
-        progressed |= self._advance_chunks()
+        progressed |= self._advance_chunks(now)
         if any(st is not None and st.live for st in self._slots):
-            self._decode_segment(plan.segment_len)
+            self._decode_segment(plan.segment_len, now)
             progressed = True
         elif all(st is None for st in self._slots) \
                 and not self.slot_scheduler.backlog() \
@@ -471,6 +518,33 @@ class ServingEngine:
                 deadline = self.batcher.next_deadline()
                 self.step(deadline if deadline is not None else time.monotonic())
         return self.completed
+
+    # --- telemetry ----------------------------------------------------------
+    def _stamp(self, now: Optional[float]) -> float:
+        """Timestamp for request lifecycle stamps and tracer events: the
+        caller's clock under virtual replay — so exported timelines are a
+        deterministic pure function of trace + fault plan — and wall time
+        otherwise, so wall-mode TTFT still includes real prefill execution
+        (identical to the historical stamping)."""
+        if self._virtual and now is not None:
+            return now
+        return time.monotonic()
+
+    def _reset_state(self) -> None:
+        """Registry reset hook: clear Python-side accumulators alongside
+        the counters so no signal survives the warmup boundary unpaired.
+        `batch_exec_s` is also the EMA drain buffer of composing layers;
+        their own hooks rewind the drain marks in the same reset pass."""
+        self.completed.clear()
+        self.batch_exec_s.clear()
+        self.tracer.reset()
+
+    def reset_metrics(self) -> None:
+        """One registry-wide reset (warmup boundary): zeroes every
+        non-persistent counter/histogram (prefix-store counters included —
+        the registry is shared) and runs the reset hooks. Trace/compile
+        counters persist (they mirror executable caches); readers diff."""
+        self.registry.reset()
 
     # --- hot path ----------------------------------------------------------
     def bucket_shape(self, batch_size: int, max_len: int) -> Tuple[int, int]:
@@ -563,6 +637,7 @@ class ServingEngine:
         done = time.monotonic()
         self.stats["batches"] += 1
         self.batch_exec_s.append(done - t0)
+        self._h_exec.observe(done - t0)
         for i, r in enumerate(batch.requests):
             r.dispatched_at = t0
             r.completed_at = done
@@ -574,6 +649,10 @@ class ServingEngine:
             # continuous batching removes)
             r.payload = self._truncate(tokens[i], self._budget(r))
             self.completed.append(r)
+            self._h_lat.observe(done - r.arrival)
+            self._h_ttft.observe(done - r.arrival)
+            self.tracer.event(tm.RETIRE, done, rid=r.rid, sid=self._sid,
+                              tenant=self._tenant, tokens=len(r.payload))
 
     def _truncate(self, tokens, budget: int) -> np.ndarray:
         out = np.asarray(tokens[:budget], np.int32)
@@ -613,7 +692,8 @@ class ServingEngine:
         self.stats["prefill_compiles"] += 1
         return fn
 
-    def _admit(self, reqs: List[Request]) -> None:
+    def _admit(self, reqs: List[Request],
+               now: Optional[float] = None) -> None:
         """Prefill a left-padded admission group and join it into free slots."""
         self._ensure_pool()
         free = [i for i, s in enumerate(self._slots) if s is None]
@@ -631,18 +711,20 @@ class ServingEngine:
             jnp.asarray(sids), jnp.int32(self._clock),
         )
         tok0 = np.asarray(tok0)
-        now = time.monotonic()
+        t = self._stamp(now)
         for i, r in enumerate(reqs):
             s = free[i]
             self._pool_off[s] = self._clock - lens[i]
             self._tok[s] = tok0[i]
             self._slots[s] = _Slot(req=r, budget=self._budget(r),
                                    produced=[int(tok0[i, 0])])
-            r.dispatched_at = now
-            r.first_token_at = now  # TTFT: prefill emits the first token
+            r.dispatched_at = t
+            r.first_token_at = t  # TTFT: prefill emits the first token
             self.stats["prefix_prompt_tokens"] += lens[i]
         self.stats["admitted"] += len(reqs)
-        self._retire_finished(now)  # budget-1 / instant-EOS requests
+        self.tracer.event(tm.ADMIT, t, sid=self._sid, tenant=self._tenant,
+                          bucket=lp, rids=[r.rid for r in reqs])
+        self._retire_finished(t)  # budget-1 / instant-EOS requests
 
     # --- chunked prefill ----------------------------------------------------
     def _pick_chunk(self, lp: int) -> int:
@@ -685,7 +767,8 @@ class ServingEngine:
         lp = max(self.ec.min_prompt_len, _next_pow2(n))
         return self.prefix_store.peek(lp, self._prompt_tokens(r, n))
 
-    def _begin_chunked(self, reqs: List[Request], lp: int, chunk: int) -> None:
+    def _begin_chunked(self, reqs: List[Request], lp: int, chunk: int,
+                       now: Optional[float] = None) -> None:
         """Reserve slots for a chunked admission group and queue its prompt
         block; chunks run one per engine step (_advance_chunks), interleaved
         with decode segments.
@@ -710,9 +793,10 @@ class ServingEngine:
         toks = np.zeros((bp, lp), np.int32)
         off = np.full(bp, lp, np.int32)  # sentinel: rows not ours stay masked
         slots = free[: len(reqs)]
-        now = time.monotonic()
+        t = self._stamp(now)
         by_base: Dict[int, Tuple[List[Request], List[int]]] = {}
         hits: List[Tuple[int, int, Any]] = []  # (slot, m, host K/V tree)
+        pre_stamped: set = set()
         for i, r in enumerate(reqs):
             n = max(1, int(r.length))
             s = slots[i]
@@ -723,18 +807,35 @@ class ServingEngine:
             self._slots[s] = _Slot(req=r, budget=self._budget(r), produced=[],
                                    live=False, filled=m)
             self._pool_off[s] = self._clock - m  # refreshed per segment
-            r.dispatched_at = now
+            r.dispatched_at = t
             # hit rows resume at their aligned column; cold rows start at 0
             # (left-pad columns are fully masked, same as before)
-            g = by_base.setdefault((lp - n) + m if m else 0, ([], []))
+            col = (lp - n) + m if m else 0
+            if m and col >= lp:
+                # the ENTIRE prompt was served from the store (zero suffix
+                # chunks): the final-chunk TTFT stamp in _chunk_step can
+                # never fire for this row, so the scatter below IS its first
+                # observable progress — stamp TTFT here, then re-run the
+                # last chunk anyway (an idempotent true-position K/V
+                # rewrite) purely to produce the first-token logits that
+                # seed decode. _prefix_match's n-1 cap makes this branch
+                # unreachable today; it guards the invariant that a
+                # completed request NEVER retires with first_token_at=None
+                # (regression-tested in tests/test_telemetry.py).
+                r.first_token_at = t
+                pre_stamped.add(s)
+                self._slots[s].filled = lp - int(off[s]) - chunk
+                col = lp - chunk
+            g = by_base.setdefault(col, ([], []))
             g[0].append(r)
             g[1].append(s)
         if hits:
-            self._scatter_hits(hits, lp)
+            self._scatter_hits(hits, lp, t)
         for base, (greqs, gslots) in sorted(by_base.items()):
             self._chunk_q.append(_ChunkAdmission(
                 reqs=greqs, slots=gslots, toks=toks, off=off, lp=lp,
                 chunk=chunk, base=base,
+                stamped=[s for s in gslots if s in pre_stamped],
             ))
 
     def _prefix_match(self, r: Request, lp: int, chunk: int, n: int,
@@ -776,7 +877,8 @@ class ServingEngine:
         self._prefix_scatter_cache[lp] = fn
         return fn
 
-    def _scatter_hits(self, hits: List[Tuple[int, int, Any]], lp: int) -> None:
+    def _scatter_hits(self, hits: List[Tuple[int, int, Any]], lp: int,
+                      t: float) -> None:
         """Batched scatter of this admission's prefix hits: assemble one
         prefill-cache-shaped host tree (hit rows at their slot index, true
         positions [0, m) filled, rest zero — the zeros land on columns the
@@ -805,8 +907,11 @@ class ServingEngine:
         self._pool = self._get_prefix_scatter(lp)(
             self._pool, jax.tree.map(jnp.asarray, batch), jnp.asarray(sids)
         )
+        self.tracer.event(
+            tm.PREFIX_SCATTER, t, sid=self._sid, tenant=self._tenant,
+            bucket=lp, rows=len(hits), tokens=sum(m for _, m, _ in hits))
 
-    def _advance_chunks(self) -> bool:
+    def _advance_chunks(self, now: Optional[float] = None) -> bool:
         """Advance every in-flight chunked admission by ONE chunk, merging
         admissions of the same (chunk len, prompt bucket) class into a
         single program call (per-row start positions): trickled
@@ -818,7 +923,7 @@ class ServingEngine:
         for adm in self._chunk_q:
             classes.setdefault((adm.chunk, adm.lp), []).append(adm)
         for (c, lp), adms in classes.items():
-            self._chunk_step(c, lp, adms)
+            self._chunk_step(c, lp, adms, now)
         self._chunk_q = [a for a in self._chunk_q if a.base + a.pos < a.lp]
         return True
 
@@ -845,7 +950,8 @@ class ServingEngine:
         return fn
 
     def _chunk_step(self, c: int, lp: int,
-                    adms: List[_ChunkAdmission]) -> None:
+                    adms: List[_ChunkAdmission],
+                    now: Optional[float] = None) -> None:
         """Run one chunk for every admission of a (chunk, bucket) class in
         ONE program call (per-row start); admissions reaching their final
         chunk flip their rows live (decode starts at the next segment)."""
@@ -864,7 +970,14 @@ class ServingEngine:
             self.params, jnp.asarray(toks), jnp.asarray(off), self._pool,
             jnp.asarray(start),
         )
-        self.batch_exec_s.append(time.monotonic() - t0)
+        exec_s = time.monotonic() - t0
+        self.batch_exec_s.append(exec_s)
+        self._h_exec.observe(exec_s)
+        self.tracer.event(
+            tm.PREFILL_CHUNK, self._stamp(now), sid=self._sid,
+            tenant=self._tenant, bucket=lp, chunk=c,
+            rows=sum(len(a.slots) for a in adms),
+            dur=None if self._virtual else exec_s)
         finished: List[_ChunkAdmission] = []
         for adm in adms:
             adm.pos += c
@@ -878,7 +991,7 @@ class ServingEngine:
         # final chunk: column lp-1 is every row's last true prompt position,
         # so its greedy tokens seed decode exactly like prefill_into_slots
         tok0 = np.asarray(tok0)
-        now = time.monotonic()
+        t = self._stamp(now)
         for adm in finished:
             for s in adm.slots:
                 st = self._slots[s]
@@ -887,11 +1000,13 @@ class ServingEngine:
                 self._tok[s] = tok0[s]
                 st.produced = [int(tok0[s, 0])]
                 st.live = True
-                st.req.first_token_at = now  # TTFT: final chunk's greedy tok
+                if s not in adm.stamped:  # scatter-stamped rows keep theirs
+                    st.req.first_token_at = t  # TTFT: final chunk greedy tok
             self.stats["admitted"] += len(adm.reqs)
-        self._retire_finished(now)
+        self._retire_finished(t)
 
-    def _decode_segment(self, steps: int) -> None:
+    def _decode_segment(self, steps: int,
+                        now: Optional[float] = None) -> None:
         """One fused segment over the whole pool; finished rows retire after."""
         # mid-prefill rows: pin the (ignored) segment write to ring slot
         # `filled` — at or above the written prefix, below the pool ring —
@@ -911,17 +1026,24 @@ class ServingEngine:
             self._rebase_clock()
         self._tok = toks[:, -1:].astype(np.int32).copy()
         done = time.monotonic()
-        self.batch_exec_s.append(done - t0)
+        exec_s = done - t0
+        self.batch_exec_s.append(exec_s)
+        self._h_exec.observe(exec_s)
         self.stats["segments"] += 1
         n_active = self.ec.max_slots - self._free_slots()
-        self.slot_occupancy.append(n_active / self.ec.max_slots)
+        self._h_occ.observe(n_active / self.ec.max_slots)
+        stamp = now if (self._virtual and now is not None) else done
+        self.tracer.event(
+            tm.DECODE_SEGMENT, stamp, sid=self._sid, tenant=self._tenant,
+            steps=int(steps), active=n_active,
+            dur=None if self._virtual else exec_s)
         for s, st in enumerate(self._slots):
             if st is None or not st.live:
                 continue  # mid-prefill rows produce nothing yet
             take = min(steps, st.budget - len(st.produced))
             if take > 0:
                 st.produced.extend(int(t) for t in toks[s, :take])
-        self._retire_finished(done)
+        self._retire_finished(stamp)
 
     def _rebase_clock(self) -> None:
         """Shift the clock and every slot offset down by a multiple of the
@@ -954,6 +1076,11 @@ class ServingEngine:
                                        st.budget)
             r.completed_at = now
             self.completed.append(r)
+            self._h_lat.observe(now - r.arrival)
+            if r.first_token_at is not None:
+                self._h_ttft.observe(r.first_token_at - r.arrival)
+            self.tracer.event(tm.RETIRE, now, rid=r.rid, sid=self._sid,
+                              tenant=self._tenant, tokens=len(r.payload))
             # prefix store maintenance BEFORE the slot is freed: the row's
             # prompt K/V (true positions [0, n), untouched by decode — the
             # ring never wraps into them) is the donor material for future
@@ -1000,9 +1127,9 @@ class ServingEngine:
         return jax.tree.map(f, self._pool)
 
     def mean_slot_occupancy(self) -> float:
-        if not self.slot_occupancy:
-            return 0.0
-        return float(np.mean(self.slot_occupancy))
+        """Exact mean of the per-segment active-slot fraction (the
+        occupancy histogram keeps exact sum/count; 0.0 before any segment)."""
+        return float(self._h_occ.mean)
 
     def slots_in_use(self) -> int:
         """Occupied KV pool rows right now (pipelined-runtime telemetry)."""

@@ -239,6 +239,18 @@ class FaultInjector:
             self._i += 1
             self._apply(rt, ms, ev, now)
             self.log.append((round(rel, 6), ev.kind, ev.target))
+            # telemetry: every injected fault lands on the shared timeline
+            # and in a per-kind counter (PR 9) — guarded getattrs keep the
+            # injector usable against bare test doubles
+            tracer = getattr(rt, "tracer", None)
+            if tracer is not None:
+                from repro.serving import telemetry as tm
+
+                tracer.event(tm.FAULT, now, fault=ev.kind, target=ev.target)
+            registry = getattr(rt, "registry", None)
+            if registry is not None:
+                registry.counter("faults_injected_total",
+                                 labels={"kind": ev.kind}).inc()
 
     def _stall(self, ms, sid: int, ev: FaultEvent) -> None:
         ms.stalled_slices.add(sid)

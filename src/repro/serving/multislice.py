@@ -124,10 +124,12 @@ from repro.core.batching.buckets import BucketedBatcher, Request, next_pow2
 from repro.core.batching.policy import BatchPolicy
 from repro.core.batching.scheduler import SliceScheduler, SlotScheduler
 from repro.core.dpu.runtime import DPU, DpuConfig
+from repro.core.metrics import MetricsRegistry
 from repro.core.slicing.mig import (
     PlacementAsk, PodSlice, SlicedPod, SliceSpec, partition_pod,
     plan_placement, rebalance_slices, slice_name,
 )
+from repro.serving import telemetry as tm
 from repro.serving.engine import (
     EngineConfig, ServingEngine, enqueue_requests,
 )
@@ -293,11 +295,19 @@ class MultiSliceEngine:
         self.probe_interval_s = probe_interval_s
         self._stall_rounds: Dict[int, int] = {}
         self._quarantined: Dict[int, float] = {}  # sid -> next probe time
-        self.stats: Dict[str, int] = {
-            "dispatched": 0, "hedge_wins": 0, "cancelled": 0,
-            "requeued": 0, "resizes": 0, "dpu_batches": 0,
-            "quarantined": 0, "readmitted": 0, "dead_lettered": 0,
-        }
+        # fleet registry: per-slice engine registries attach as children on
+        # every (re)build, so ONE reset() clears the whole fleet's counters
+        # at the warmup boundary; the tracer is shared downward into every
+        # slice engine (one lifecycle timeline per fleet)
+        self.registry = MetricsRegistry("multislice")
+        self.tracer = tm.Tracer()
+        self._virtual = False
+        self.registry.on_reset(self._reset_state)
+        self.stats = self.registry.view("fleet", (
+            "dispatched", "hedge_wins", "cancelled",
+            "requeued", "resizes", "dpu_batches",
+            "quarantined", "readmitted", "dead_lettered",
+        ))
         self._hedges_base = 0
         self._seg_ema: Optional[float] = None
         self._tenant_ema: Dict[str, float] = {}
@@ -375,6 +385,11 @@ class MultiSliceEngine:
 
     # --- construction / elastic re-slice -----------------------------------
     def _build(self, n_slices: int) -> None:
+        # detach the previous generation's engine registries (resize rebuilds
+        # every engine): a rebuilt slice starts from fresh counters, and the
+        # stale series must not linger as duplicates under the fleet root
+        for e in getattr(self, "engines", {}).values():
+            self.registry.detach(e.registry)
         self.pod, self.replicated = _slice_pod(self._devices, n_slices)
         # slice -> tenant assignment: largest-remainder apportionment over
         # the tenants' original asks (>=1 slice each), contiguous runs in
@@ -433,8 +448,12 @@ class MultiSliceEngine:
         t = self._tenants[self.slice_tenant[ps.slice_id]]
         ec_s = dc_replace(t.ec, continuous=True, preprocess="none")
         pol = dc_replace(t.policy, time_queue=0.0)
-        return ServingEngine(t.cfg, self._params_for(ps, t.params), pol, ec_s,
-                             knee_profiles=t.knee_profiles)
+        e = ServingEngine(t.cfg, self._params_for(ps, t.params), pol, ec_s,
+                          knee_profiles=t.knee_profiles, tracer=self.tracer,
+                          slice_id=ps.slice_id, tenant=t.name)
+        e._virtual = self._virtual
+        self.registry.attach(e.registry)
+        return e
 
     def _params_for(self, ps: PodSlice, params):
         """Replicate params onto the slice's mesh when it owns real devices;
@@ -499,10 +518,12 @@ class MultiSliceEngine:
         self._build(n_slices)
         self.sched.adopt_retries(old_sched)
         for r in dead:
-            self._dead_letter(r, ShedReason.RETRIES_EXHAUSTED)
+            self._dead_letter(r, ShedReason.RETRIES_EXHAUSTED, now)
         self.slot_scheduler.requeue(carry + backlog)
         self.stats["resizes"] += 1
         self.stats["requeued"] += len(carry)
+        self.tracer.event(tm.RESIZE, now, n_slices=n_slices,
+                          requeued=len(carry))
         return len(carry)
 
     def fail_slice(self, slice_id: int,
@@ -533,14 +554,18 @@ class MultiSliceEngine:
                 if self.sched.note_requeue(rid, now):
                     requeued.append(tr.req)
                 else:
-                    self._dead_letter(tr.req, ShedReason.RETRIES_EXHAUSTED)
+                    self._dead_letter(tr.req, ShedReason.RETRIES_EXHAUSTED,
+                                      now)
         if requeued:
             self.slot_scheduler.requeue(requeued)
             self.stats["requeued"] += len(requeued)
+            self.tracer.event(tm.REQUEUE, now, sid=slice_id,
+                              rids=[r.rid for r in requeued])
         self._stall_rounds.pop(slice_id, None)
         if self.probe_interval_s > 0 and slice_id not in self._quarantined:
             self._quarantined[slice_id] = now + self.probe_interval_s
             self.stats["quarantined"] += 1
+            self.tracer.event(tm.QUARANTINE, now, sid=slice_id)
         return requeued
 
     def recover_slice(self, slice_id: int) -> None:
@@ -559,6 +584,9 @@ class MultiSliceEngine:
         steady-state compile-once gates."""
         now = time.monotonic() if now is None else now
         ps = next(p for p in self.pod.slices if p.slice_id == slice_id)
+        old = self.engines.get(slice_id)
+        if old is not None:  # stale series must not shadow the rebuild's
+            self.registry.detach(old.registry)
         self.engines[slice_id] = self._make_engine(ps)
         self._exec_seen[slice_id] = 0
         self.sched.recover_slice(slice_id)
@@ -566,6 +594,7 @@ class MultiSliceEngine:
         self._quarantined.pop(slice_id, None)
         self._stall_rounds.pop(slice_id, None)
         self.stats["readmitted"] += 1
+        self.tracer.event(tm.READMIT, now, sid=slice_id)
 
     def _probe_slice(self, slice_id: int) -> bool:
         """Health probe for a quarantined slice. The default models a device
@@ -586,7 +615,8 @@ class MultiSliceEngine:
                 self._quarantined[sid] = now + self.probe_interval_s
         return did
 
-    def _dead_letter(self, req: Request, reason: ShedReason) -> None:
+    def _dead_letter(self, req: Request, reason: ShedReason,
+                     now: Optional[float] = None) -> None:
         """Terminal verdict for a request that exhausted its retry budget:
         record it in the dead-letter queue with a typed reason, drop its
         retry bookkeeping, and cancel any residual copy on any engine —
@@ -599,6 +629,10 @@ class MultiSliceEngine:
         for e in self.engines.values():
             self.stats["cancelled"] += e.cancel([req.rid])
         self.stats["dead_lettered"] += 1
+        self.tracer.event(
+            tm.DEAD_LETTER, time.monotonic() if now is None else now,
+            rid=req.rid, tenant=getattr(req, "model", None),
+            reason=reason.value)
 
     # --- shared admission queue --------------------------------------------
     def submit(self, req: Request) -> None:
@@ -811,6 +845,7 @@ class MultiSliceEngine:
         self._inflight[r.rid] = _ReqTrack(req=r, primary_sid=sid,
                                           copies={sid: r})
         self.stats["dispatched"] += 1
+        self.tracer.event(tm.DISPATCH, now, rid=r.rid, tenant=t.name, sid=sid)
 
     def _expected_s(self, r: Request) -> float:
         """Analytic per-request time budget for straggler detection: chunked
@@ -947,21 +982,39 @@ class MultiSliceEngine:
             track.copies[twin] = clone
             self.sched.hedge(rid, now, twin)
             load[twin] += 1
+            self.tracer.event(tm.HEDGE, now, rid=rid, tenant=t.name, sid=twin)
+
+    def set_virtual_clock(self, v: bool) -> None:
+        """Virtual-clock stamping for every slice engine (the pipelined
+        runtime sets this under rc.clock='virtual'): request lifecycle
+        stamps and tracer timestamps come from the replay clock, so the
+        exported timeline is a deterministic function of trace + plan.
+        Sticky across rebuilds (_make_engine re-applies it)."""
+        self._virtual = bool(v)
+        for e in self.engines.values():
+            e._virtual = self._virtual
 
     # --- reporting ----------------------------------------------------------
-    def reset_metrics(self) -> None:
-        """Clear per-request results and timing samples (not trace/compile
-        counters) — the benchmark calls this between warmup and the
-        measured trace."""
+    def _reset_state(self) -> None:
+        """Registry reset hook (fleet part): clear the harvested-result and
+        dead-letter state and rewind the per-slice exec-drain marks; each
+        engine's own hook clears its completed/exec lists in the same
+        cascade, so nothing survives the warmup boundary unpaired."""
         self.completed = []
         self._done_rids = set()
         self.dead = []
         self.dead_reasons = {}
-        for e in self.engines.values():
-            e.completed.clear()
-            e.batch_exec_s.clear()
-            e.slot_occupancy.clear()
         self._exec_seen = {sid: 0 for sid in self.engines}
+        self.tracer.reset()
+
+    def reset_metrics(self) -> None:
+        """ONE registry-wide reset at the warmup boundary: zeroes the fleet
+        counters AND every attached slice engine's (the historical drift —
+        runtime, engines, and DPU service resetting at separate call sites
+        — is gone; composing layers cascade through registry children).
+        Trace/compile counters persist (executable caches survive a reset);
+        readers diff, as the bench harness always has."""
+        self.registry.reset()
 
     def trace_counts(self) -> Dict[int, int]:
         """Per-slice jit trace totals (compile-once invariant): in steady
@@ -1035,8 +1088,11 @@ class MultiSliceEngine:
         return out
 
     def mean_slot_occupancy(self) -> float:
-        xs = [x for e in self.engines.values() for x in e.slot_occupancy]
-        return float(np.mean(xs)) if xs else 0.0
+        """Fleet-wide mean active-slot fraction: the merged per-slice
+        occupancy histograms keep exact sums/counts, so this is the exact
+        mean over every segment any engine ran (0.0 before any segment)."""
+        h = self.registry.merged_histogram("engine_slot_occupancy_ratio")
+        return float(h.mean)
 
     def slots_in_use(self) -> int:
         """Occupied KV pool rows across every slice (runtime telemetry)."""

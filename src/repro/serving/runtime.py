@@ -99,38 +99,15 @@ from typing import Any, Deque, Dict, List, Optional, Union
 from repro.core.batching.buckets import Request, next_pow2
 from repro.core.dpu.runtime import payload_error
 from repro.core.dpu.service import DpuService
+from repro.core.metrics import Histogram, MetricsRegistry
+from repro.serving import telemetry as tm
 from repro.serving.engine import ServingEngine, validate_requests
 from repro.serving.faults import FaultInjector, FaultPlan, ShedReason, reason_counts
 from repro.serving.multislice import MultiSliceEngine
 
 Engine = Union[ServingEngine, MultiSliceEngine]
 
-
-class _StageStat:
-    """Streaming mean/max accumulator for per-step queue-depth telemetry —
-    O(1) memory however long the serving loop runs (a wall-clock server
-    steps thousands of times per second; keeping raw samples would grow
-    without bound)."""
-
-    __slots__ = ("n", "total", "peak")
-
-    def __init__(self):
-        self.n = 0
-        self.total = 0.0
-        self.peak = 0
-
-    def add(self, x) -> None:
-        self.n += 1
-        self.total += x
-        if x > self.peak:
-            self.peak = x
-
-    @property
-    def mean(self) -> float:
-        return self.total / self.n if self.n else 0.0
-
-    def reset(self) -> None:
-        self.n, self.total, self.peak = 0, 0.0, 0
+_STAGES = ("ingest", "preprocess", "ready", "admission", "slots")
 
 
 @dataclass(frozen=True)
@@ -176,12 +153,33 @@ class PipelinedRuntime:
         self.dead: List[Request] = []
         self.shed_reasons: Dict[int, ShedReason] = {}
         self.dead_reasons: Dict[int, ShedReason] = {}
-        self.stats: Dict[str, int] = {
-            "submitted": 0, "accepted": 0, "offered": 0,
-            "shed_slo": 0, "shed_backpressure": 0, "shed_error": 0,
-            "shed_malformed": 0, "dead": 0,
-            "breaker_trips": 0, "cpu_fallback": 0, "pp_retries": 0,
-        }
+        # unified metrics root: the runtime adopts the engine's and the
+        # service's registries as children, so one reset()/snapshot()
+        # covers every layer of the pipeline, and shares ONE tracer with
+        # all of them — the whole lifecycle lands on a single timeline
+        self.registry = MetricsRegistry("runtime")
+        self.registry.attach(engine.registry)
+        self.tracer = getattr(engine, "tracer", None) or tm.Tracer()
+        engine.tracer = self.tracer
+        if service is not None:
+            self.registry.attach(service.registry)
+            service.tracer = self.tracer
+        if rc.clock == "virtual":
+            # deterministic stamping: engine timestamps/trace events use
+            # the replay clock instead of time.monotonic(), so exported
+            # timelines are a pure function of trace + plan
+            svc = getattr(engine, "set_virtual_clock", None)
+            if svc is not None:
+                svc(True)
+            else:
+                engine._virtual = True
+        self.registry.on_reset(self._reset_state)
+        self.stats = self.registry.view("runtime", (
+            "submitted", "accepted", "offered",
+            "shed_slo", "shed_backpressure", "shed_error",
+            "shed_malformed", "dead",
+            "breaker_trips", "cpu_fallback", "pp_retries",
+        ))
         # preprocess retry accounting + DPU circuit breaker state
         self._pp_retries: Dict[int, int] = {}
         self._brk_consec = 0            # consecutive failed launches
@@ -191,13 +189,16 @@ class PipelinedRuntime:
         self._proc_mark = 0             # service processed-counter watermark
         self._cpu_dpu = None            # lazily-built synchronous CPU DPU
         self.injector: Optional[FaultInjector] = None
-        # per-stage queue-depth accumulators, fed once per step() (telemetry
-        # for BENCH_serve.json's preprocess_overlap section)
-        self._depths: Dict[str, _StageStat] = {
-            k: _StageStat()
-            for k in ("ingest", "preprocess", "ready", "admission", "slots")
+        # per-stage queue-depth sketches, fed once per step() (telemetry
+        # for BENCH_serve.json's preprocess_overlap section) — streaming
+        # histograms: O(1) memory however long the serving loop runs
+        self._depths: Dict[str, Histogram] = {
+            k: self.registry.histogram("runtime_stage_depth",
+                                       labels={"stage": k})
+            for k in _STAGES
         }
-        self._pre_busy = _StageStat()   # DPU occupancy samples (0/1)
+        # DPU occupancy samples (0/1)
+        self._pre_busy = self.registry.histogram("runtime_dpu_busy")
         self._now = 0.0                 # virtual-clock high-water mark
         # EMA of the engine's per-dispatch execution times (chunk/admit/
         # segment calls) feeding the decode-backlog SLO estimate; the
@@ -215,16 +216,26 @@ class PipelinedRuntime:
         return self._now
 
     # --- typed shed / dead-letter bookkeeping -------------------------------
-    def _shed(self, r: Request, reason: ShedReason, stat_key: str) -> None:
+    def _shed(self, r: Request, reason: ShedReason, stat_key: str,
+              now: Optional[float] = None) -> None:
         self.stats[stat_key] += 1
         self.shed.append(r)
         self.shed_reasons[r.rid] = reason
+        self.tracer.event(tm.SHED, self._now if now is None else now,
+                          rid=r.rid, tenant=getattr(r, "model", None),
+                          reason=reason.value)
 
-    def _dead_letter(self, r: Request, reason: ShedReason) -> None:
+    def _dead_letter(self, r: Request, reason: ShedReason,
+                     now: Optional[float] = None, trace: bool = True) -> None:
         self.dead.append(r)
         self.dead_reasons[r.rid] = reason
         self.stats["dead"] += 1
         self._pp_retries.pop(r.rid, None)
+        if trace:  # the fleet already stamps drained slice dead-letters
+            self.tracer.event(tm.DEAD_LETTER,
+                              self._now if now is None else now,
+                              rid=r.rid, tenant=getattr(r, "model", None),
+                              reason=reason.value)
 
     def shed_counts(self) -> Dict[str, int]:
         """{reason -> count} over the shed list (bench telemetry)."""
@@ -286,7 +297,7 @@ class PipelinedRuntime:
                     and payload_error(r.payload, modality) is not None:
                 # structurally invalid raw payload: typed shed at the door
                 # instead of crashing a whole same-shape CU batch later
-                self._shed(r, ShedReason.MALFORMED, "shed_malformed")
+                self._shed(r, ShedReason.MALFORMED, "shed_malformed", now)
                 continue
             # effective SLO = the tighter of the runtime-wide knob and the
             # request's tenant SLO class (multi-tenant fleets)
@@ -304,13 +315,15 @@ class PipelinedRuntime:
                 # payload is already structurally validated above)
                 est += self.service.estimate_s(r.payload)
             if now + est > r.arrival + slo:
-                self._shed(r, ShedReason.SLO, "shed_slo")
+                self._shed(r, ShedReason.SLO, "shed_slo", now)
             elif len(self._ingest) >= self.rc.max_ingest:
-                self._shed(r, ShedReason.OVERFLOW, "shed_backpressure")
+                self._shed(r, ShedReason.OVERFLOW, "shed_backpressure", now)
             else:
                 self._ingest.append(r)
                 self.stats["accepted"] += 1
                 accepted += 1
+                self.tracer.event(tm.INGEST, now, rid=r.rid,
+                                  tenant=getattr(r, "model", None))
         return accepted
 
     # --- event loop ---------------------------------------------------------
@@ -348,7 +361,8 @@ class PipelinedRuntime:
             reasons = getattr(self.engine, "dead_reasons", {})
             for r in eng_dead:
                 self._dead_letter(
-                    r, reasons.pop(r.rid, ShedReason.RETRIES_EXHAUSTED)
+                    r, reasons.pop(r.rid, ShedReason.RETRIES_EXHAUSTED),
+                    now, trace=False,
                 )
             eng_dead.clear()
             progressed = True
@@ -363,6 +377,7 @@ class PipelinedRuntime:
                 self.engine.offer(ready)
                 space -= len(ready)
                 self.stats["offered"] += len(ready)
+                self.tracer.event(tm.OFFER, now, rids=[r.rid for r in ready])
                 progressed = True
 
         # stage 2 — the DPU service drains same-shape groups into batched
@@ -381,6 +396,7 @@ class PipelinedRuntime:
                     # a launch went through: the DPU is back — close
                     self._brk_open = False
                     self._brk_probing = False
+                    self.tracer.event(tm.BREAKER_CLOSE, now)
             self._proc_mark = proc
             failed = self.service.take_failed()
             if failed:
@@ -394,16 +410,18 @@ class PipelinedRuntime:
                     self._brk_open = True
                     self._brk_retry_at = now + self.rc.breaker_probe_s
                     self.stats["breaker_trips"] += 1
+                    self.tracer.event(tm.BREAKER_TRIP, now,
+                                      consec=self._brk_consec)
                 for r in failed:
                     n = self._pp_retries.get(r.rid, 0) + 1
                     self._pp_retries[r.rid] = n
                     if n > self.rc.preprocess_retries:
                         if self.rc.preprocess_retries > 0:
                             # kept killing launches: poison verdict
-                            self._dead_letter(r, ShedReason.POISON)
+                            self._dead_letter(r, ShedReason.POISON, now)
                         else:
                             self._shed(r, ShedReason.PREPROCESS_ERROR,
-                                       "shed_error")
+                                       "shed_error", now)
                     else:
                         self.stats["pp_retries"] += 1
                         self._ingest.appendleft(r)  # retry at queue head
@@ -446,6 +464,7 @@ class PipelinedRuntime:
         if direct:
             self.engine.offer(direct)
             self.stats["offered"] += len(direct)
+            self.tracer.event(tm.OFFER, now, rids=[r.rid for r in direct])
 
         self._sample()
         return progressed
@@ -466,10 +485,11 @@ class PipelinedRuntime:
                                                backend="cpu"))
             r.payload = self._cpu_dpu.process(r.payload)
         except Exception:
-            self._dead_letter(r, ShedReason.POISON)
+            self._dead_letter(r, ShedReason.POISON, now)
             return False
         r.preprocessed_at = now
         self.stats["cpu_fallback"] += 1
+        self.tracer.event(tm.CPU_FALLBACK, now, rid=r.rid)
         return True
 
     def run_until_idle(self) -> List[Request]:
@@ -636,26 +656,27 @@ class PipelinedRuntime:
 
     def _sample(self) -> None:
         self._observe_exec()
-        self._depths["ingest"].add(len(self._ingest))
+        self._depths["ingest"].observe(len(self._ingest))
         if self.service is not None:
-            self._depths["preprocess"].add(
+            self._depths["preprocess"].observe(
                 self.service.pending() + self.service.in_flight()
             )
-            self._depths["ready"].add(self.service.ready())
+            self._depths["ready"].observe(self.service.ready())
             # occupancy counts actual CU execution, not queued-but-idle
-            self._pre_busy.add(int(self.service.executing() > 0))
+            self._pre_busy.observe(int(self.service.executing() > 0))
         else:
-            self._depths["preprocess"].add(0)
-            self._depths["ready"].add(0)
-            self._pre_busy.add(0)
-        self._depths["admission"].add(self.engine.admission_depth())
-        self._depths["slots"].add(self.engine.slots_in_use())
+            self._depths["preprocess"].observe(0)
+            self._depths["ready"].observe(0)
+            self._pre_busy.observe(0)
+        self._depths["admission"].observe(self.engine.admission_depth())
+        self._depths["slots"].observe(self.engine.slots_in_use())
 
     # --- telemetry ----------------------------------------------------------
     def stage_summary(self) -> Dict[str, Dict[str, float]]:
         """Per-stage queue-depth stats over every step() sample."""
         return {
-            k: {"mean": round(st.mean, 3), "max": int(st.peak)}
+            k: {"mean": round(st.mean, 3),
+                "max": int(st.vmax) if st.count else 0}
             for k, st in self._depths.items()
         }
 
@@ -669,27 +690,29 @@ class PipelinedRuntime:
             "slots": round(slots.mean / cap, 3) if cap else 0.0,
         }
 
-    def reset_metrics(self) -> None:
-        """Clear telemetry, shed/dead records, and every counter that pairs
-        with them (benchmark warmup boundary) — stats must stay consistent
-        with the shed list (shed_slo + shed_backpressure + shed_error +
-        shed_malformed == len(shed), dead == len(dead)) across the reset.
-        Breaker open/probing state is deliberately KEPT (a reset must not
-        silently close an open breaker); only its counters restart."""
-        for st in self._depths.values():
-            st.reset()
-        self._pre_busy.reset()
+    def _reset_state(self) -> None:
+        """Registry reset hook: clear the records that pair with the zeroed
+        counters (shed_slo + shed_backpressure + shed_error + shed_malformed
+        == len(shed), dead == len(dead) must hold across the reset) and
+        rewind the watermarks over child counters that just reset. Breaker
+        open/probing state is deliberately KEPT (a reset must not silently
+        close an open breaker); only its counters restart."""
         self.shed = []
         self.dead = []
         self.shed_reasons = {}
         self.dead_reasons = {}
         self._pp_retries = {}
         self._brk_consec = 0
-        for k in self.stats:
-            self.stats[k] = 0
-        if self.service is not None:
-            self.service.reset_metrics()
-            self._proc_mark = 0
+        self._proc_mark = 0
+        self._exec_seen = 0
+
+    def reset_metrics(self) -> None:
+        """One registry-wide reset (benchmark warmup boundary): every
+        counter and histogram of every layer — runtime, engine(s), DPU
+        service, prefix stores — zeroes together with the shed/dead records
+        and the trace stream, so no counter survives the boundary unpaired
+        with its ledger."""
+        self.registry.reset()
 
 
 def build_pipelined_runtime(
