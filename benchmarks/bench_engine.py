@@ -103,7 +103,7 @@ from repro.core.batching.buckets import Batch, Request
 from repro.core.dpu.service import DpuService, DpuServiceConfig
 from repro.serving.engine import EngineConfig, ServingEngine, build_engine
 from repro.serving.multislice import MultiSliceEngine, build_multislice_engine
-from repro.serving.requests import WorkloadSpec, generate_requests
+from repro.serving.requests import Phase, WorkloadSpec, generate_requests
 from repro.serving.runtime import PipelinedRuntime, RuntimeConfig
 
 ARCH = "tinyllama-1.1b"
@@ -1427,6 +1427,227 @@ def bench_multi_tenant(cfg) -> dict:
     }
 
 
+# --- part 9: online partition controller (PR 10) -------------------------
+#
+# A phase-shifting trace replayed on the virtual clock through every static
+# menu point (1 / 2 / 4 slices) and through the closed-loop controller:
+#
+#   phase 1  heavy  — long template-prefix prompts at moderate rate: one
+#            coarse slice consolidates the prefix store (one cold prefill
+#            total); fine slices scatter the template across n stores and
+#            pay ~n cold prefills;
+#   phase 2  burst  — a hot wave of small cold prompts: the fine pool's
+#            n x max_slots capacity rides it out while coarse/medium queue
+#            at the front door;
+#   phase 3  heavy  — the template mix returns (gentle ramp, then fast):
+#            the controller folds back to coarse and the warm partition
+#            cache restores the template-bearing store intact, so the
+#            switch-back serves hits from the first request.
+#
+# Useful tokens/s is GOODPUT: tokens of requests that completed within
+# P9_SLO_S of arrival, per second of virtual makespan — raw completed
+# tokens would tie (every busy engine steps once per tick, so fine slot
+# capacity weakly dominates); what the controller buys is tokens delivered
+# on time. p99 and goodput both come from virtual request stamps, which
+# survive resize() (registry histograms detach with old engine sets).
+#
+# Gates (absolute): the controller beats EVERY static point on p99 AND
+# goodput; 1 <= reconfigurations <= P9_MAX_RECONFIGS with both decision
+# directions exercised; conservation + exactly-once accounting; survivor
+# outputs bit-identical to the static-fine reference; decision log and
+# trace timeline byte-identical across two same-seed replays.
+
+P9_TICK = 2e-3                   # fixed virtual tick (chaos-soak contract)
+P9_SEED = 71
+P9_TRACE_N = 196
+P9_TEMPLATE_LEN = 448
+P9_MAX_PROMPT = 512
+P9_CHUNK = 32                    # 14 cold chunks vs <=2 hit chunks: the gap
+P9_MAX_NEW = 8                   # the SLO separates
+P9_SEG = 4
+P9_SLOTS = 4                     # per-slice slots: menu spans 4..16 total
+P9_MENU = (1, 2, 4)
+P9_MAX_RECONFIGS = 4
+P9_SLO_S = 0.030                 # goodput deadline: hits + burst clear it,
+P9_CACHE_BYTES = 256 << 20       # cold template prefills (~35ms) blow it
+P9_HEAVY_CUT = 100.0             # generated length above this => template
+# measured window: requests arriving before this are the warm-in (they
+# seed the template solo, one isolated cold for every config alike) and
+# are excluded from the scoreboard — steady-state measurement, the same
+# reason every other section warms up before reset_metrics()
+P9_WARM_S = 0.12
+P9_PHASES = (
+    Phase(0.12, 20.0, mean_len=480.0, sigma=0.05, max_len=511.0),   # warm-in
+    Phase(0.15, 400.0, mean_len=480.0, sigma=0.05, max_len=511.0),  # heavy
+    Phase(0.03, 20.0, mean_len=480.0, sigma=0.05, max_len=511.0),   # dip
+    Phase(0.03, 2600.0, mean_len=48.0, sigma=0.20, max_len=63.0),   # burst
+    Phase(0.06, 30.0, mean_len=480.0, sigma=0.05, max_len=511.0),   # restart
+    Phase(0.30, 400.0, mean_len=480.0, sigma=0.05, max_len=511.0),  # heavy
+)
+
+
+def make_controller_trace(cfg):
+    """Phase-shifting trace from the shared phased generator (ISSUE 10
+    satellite: bench and tests replay the same schedule machinery), with
+    prompts rebuilt per phase: heavy-phase requests share one
+    P9_TEMPLATE_LEN-token template plus a per-rid suffix (all in the
+    lp=512 bucket), burst requests are small cold prompts (lp=32).
+    Returns (spec, template); spec rows are (rid, arrival, prompt)."""
+    base = generate_requests(
+        WorkloadSpec(modality="text", rate_qps=100.0, mean_len=480.0,
+                     sigma=0.05, max_len=511.0, vocab=cfg.vocab,
+                     seed=P9_SEED, phases=P9_PHASES), P9_TRACE_N)
+    rng = np.random.default_rng(P9_SEED + 1)
+    template = rng.integers(0, cfg.vocab, P9_TEMPLATE_LEN).astype(np.int32)
+    spec = []
+    for r in base:
+        if r.length > P9_HEAVY_CUT:
+            sl = int(min(max(r.length - P9_TEMPLATE_LEN, 1), 63))
+            prompt = np.concatenate(
+                [template, rng.integers(0, cfg.vocab, sl).astype(np.int32)])
+        else:
+            prompt = rng.integers(
+                0, cfg.vocab, max(1, int(r.length))).astype(np.int32)
+        spec.append((r.rid, float(r.arrival), prompt))
+    return spec, template
+
+
+def _fresh_controller_requests(spec):
+    return [
+        Request(rid=rid, arrival=arr, length=float(len(p)), prompt=p,
+                max_new_tokens=P9_MAX_NEW)
+        for rid, arr, p in spec
+    ]
+
+
+def _controller_point(rt, reqs, done) -> dict:
+    """Per-run scoreboard from virtual request stamps only (registry
+    histograms detach with pre-resize engine sets; request stamps
+    survive). Measured over the steady-state window (arrival >=
+    P9_WARM_S): p99 of request latency, and useful tokens/s as GOODPUT —
+    tokens of window requests that completed within P9_SLO_S, per second
+    of window makespan. A shed request completes nothing: its tokens are
+    lost from the numerator by construction."""
+    win = [r for r in done if float(r.arrival) >= P9_WARM_S]
+    n_win = sum(1 for r in reqs if float(r.arrival) >= P9_WARM_S)
+    lat = sorted(float(r.completed_at - r.arrival) for r in win)
+    p99 = lat[int(0.99 * (len(lat) - 1))] if lat else float("inf")
+    good = [r for r in win
+            if float(r.completed_at - r.arrival) <= P9_SLO_S]
+    good_toks = int(sum(len(np.asarray(r.payload)) for r in good))
+    makespan = max(
+        (float(r.completed_at) for r in win), default=P9_WARM_S + 1.0
+    ) - P9_WARM_S
+    shed = int(rt.stats["shed_slo"] + rt.stats["shed_backpressure"]
+               + rt.stats["shed_error"] + rt.stats["shed_malformed"])
+    return {
+        "requests": len(reqs),
+        "window_requests": n_win,
+        "completed": len(done),
+        "shed": shed,
+        "p99_latency_ms": round(1e3 * p99, 3),
+        "slo_attained_frac": round(len(good) / max(1, n_win), 4),
+        "goodput_tokens_per_s": round(good_toks / makespan, 1),
+        "makespan_s": round(makespan, 4),
+        "conservation_ok": bool(rt.conservation_ok()),
+    }
+
+
+def bench_partition_controller(cfg) -> dict:
+    import jax
+
+    from repro.core.control import ControllerConfig, PartitionController
+    from repro.models import api
+    from repro.serving.faults import replay_virtual
+
+    spec, _template = make_controller_trace(cfg)
+    ec = EngineConfig(
+        max_new_tokens=P9_MAX_NEW, continuous=True, max_slots=P9_SLOTS,
+        segment_len=P9_SEG, max_prompt_len=P9_MAX_PROMPT,
+        chunk_lens=(P9_CHUNK,), prefix_cache_bytes=P9_CACHE_BYTES)
+    params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=cfg.dtype)
+
+    def _mk_rt(n_slices, controller=None):
+        ms = build_multislice_engine(
+            cfg, n_slices=n_slices, ec=ec, params=params)
+        ms.fixed_expected_s = 1.0   # pin hedging off the wall-clock EMA
+        return PipelinedRuntime(
+            ms, None, RuntimeConfig(clock="virtual"), controller=controller)
+
+    def _ctl():
+        return PartitionController(ControllerConfig(
+            menu=P9_MENU, eval_interval_s=0.004, window_s=0.03,
+            cooldown_s=0.05, improve_frac=0.3, amortize_horizon_s=0.5,
+            max_reconfigs=P9_MAX_RECONFIGS, min_observations=2,
+            slo_target_s=P9_SLO_S))
+
+    # static menu sweep (the PREBA hand-picked design points)
+    statics = {}
+    ref_payloads = {}
+    for n in P9_MENU:
+        rt = _mk_rt(n)
+        reqs = _fresh_controller_requests(spec)
+        done = replay_virtual(rt, reqs, None, tick=P9_TICK)
+        statics[str(n)] = _controller_point(rt, reqs, done)
+        if n == max(P9_MENU):   # fine completes everything: the reference
+            ref_payloads = {r.rid: np.asarray(r.payload) for r in done}
+
+    # the closed loop, twice: same seed, byte-identical decisions required
+    runs = []
+    for _rep in range(2):
+        ctl = _ctl()
+        rt = _mk_rt(P9_MENU[0], controller=ctl)
+        reqs = _fresh_controller_requests(spec)
+        done = replay_virtual(rt, reqs, None, tick=P9_TICK)
+        runs.append((rt, ctl, reqs, done))
+    rt, ctl, reqs, done = runs[0]
+    ctl_point = _controller_point(rt, reqs, done)
+    decisions = [d.to_row() for d in ctl.decisions]
+    reasons = {d["reason"] for d in decisions}
+
+    bit_identical = all(
+        r.rid in ref_payloads
+        and np.array_equal(np.asarray(r.payload), ref_payloads[r.rid])
+        for r in done)
+    beats = {
+        n: bool(ctl_point["p99_latency_ms"] < p["p99_latency_ms"]
+                and ctl_point["goodput_tokens_per_s"]
+                > p["goodput_tokens_per_s"])
+        for n, p in statics.items()
+    }
+    return {
+        "trace": {
+            "n": P9_TRACE_N, "seed": P9_SEED, "tick_s": P9_TICK,
+            "slo_s": P9_SLO_S, "menu": list(P9_MENU),
+            "max_reconfigs": P9_MAX_RECONFIGS, "warm_window_s": P9_WARM_S,
+            "phases": [
+                {"duration_s": p.duration_s, "rate_qps": p.rate_qps,
+                 "mean_len": p.mean_len} for p in P9_PHASES
+            ],
+        },
+        "static": statics,
+        "controller": ctl_point,
+        "decisions": decisions,
+        "reconfigs": len(decisions),
+        "beats_static": beats,
+        # --- gates ---
+        "wins_every_point": bool(all(beats.values())),
+        "reconfigs_bounded": bool(1 <= len(decisions) <= P9_MAX_RECONFIGS),
+        "both_directions": bool({"burst_fine", "heavy_coarse"} <= reasons),
+        "conservation_ok": bool(
+            ctl_point["conservation_ok"]
+            and all(p["conservation_ok"] for p in statics.values())),
+        "bit_identical_survivors": bool(bit_identical),
+        "decision_log_deterministic": bool(
+            runs[0][1].decisions_json() == runs[1][1].decisions_json()),
+        "trace_deterministic": bool(
+            runs[0][0].tracer.to_json(0.0) == runs[1][0].tracer.to_json(0.0)),
+        "reconfig_observable": bool(
+            int(rt.registry.value("fleet_reconfigs_total")) == len(decisions)
+            and len(rt.tracer.of("reconfig")) == len(decisions)),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -1474,6 +1695,9 @@ def main():
         "chaos_soak": bench_chaos_soak(cfg),
         # two-model fleet: same size in smoke and full (gates are absolute)
         "multi_tenant": bench_multi_tenant(cfg),
+        # closed-loop controller vs the static menu: same size in smoke
+        # and full (virtual-clock replay, absolute gates)
+        "partition_controller": bench_partition_controller(cfg),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -1529,6 +1753,19 @@ def main():
           f"bit_identical={mt['bit_identical_per_tenant']}, "
           f"isolation={mt['no_cross_tenant_routing']}, "
           f"executables_bounded={mt['executables_bounded']}")
+    pc = result["partition_controller"]
+    print(f"controller:   p99={pc['controller']['p99_latency_ms']:.1f}ms "
+          f"goodput={pc['controller']['goodput_tokens_per_s']:.1f} tok/s "
+          f"vs static "
+          + " ".join(
+              f"[{n}]={p['p99_latency_ms']:.1f}ms/"
+              f"{p['goodput_tokens_per_s']:.1f}"
+              for n, p in pc["static"].items())
+          + f"; reconfigs={pc['reconfigs']} "
+          f"wins_every_point={pc['wins_every_point']}, "
+          f"both_directions={pc['both_directions']}, "
+          f"deterministic={pc['decision_log_deterministic']}, "
+          f"bit_identical={pc['bit_identical_survivors']}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ Two estimators:
 """
 from __future__ import annotations
 
+import json
 import math
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -118,6 +119,59 @@ def analytical_knee(
         )
         b *= 2
     return find_knee(bs, lats, eps)
+
+
+def profiles_to_json(profiles: Dict[int, KneeProfile]) -> str:
+    """Deterministic JSON for a {context bucket: KneeProfile} map — the
+    calibration artifact `serve.py --calibrate-knee` writes and
+    `--knee-profiles` reads back."""
+    out = {
+        str(b): {
+            "batch_sizes": list(p.batch_sizes),
+            "latencies": list(p.latencies),
+            "batch_knee": p.batch_knee,
+            "time_knee": p.time_knee,
+        }
+        for b, p in sorted(profiles.items())
+    }
+    return json.dumps(out, sort_keys=True, indent=1)
+
+
+def profiles_from_json(text: str) -> Dict[int, KneeProfile]:
+    """Inverse of `profiles_to_json` (round-trips exactly)."""
+    raw = json.loads(text)
+    out: Dict[int, KneeProfile] = {}
+    for b, d in raw.items():
+        out[int(b)] = KneeProfile(
+            tuple(int(x) for x in d["batch_sizes"]),
+            tuple(float(x) for x in d["latencies"]),
+            int(d["batch_knee"]),
+            float(d["time_knee"]),
+        )
+    return out
+
+
+def calibrate_knees(
+    measure: Callable[[int, int], float],
+    buckets: Sequence[int],
+    bucket_width: int,
+    *,
+    max_batch: int = 64,
+    eps: float = 0.10,
+) -> Dict[int, KneeProfile]:
+    """Measured calibration pass (carried ROADMAP item): for each context
+    bucket, sweep batch sizes through `measure(batch, context_len) ->
+    seconds` (a real timed decode step — `serve.py --calibrate-knee`
+    supplies one) and find the knee. Returns the {bucket: KneeProfile}
+    map the engine builders and the partition controller's cost model
+    consume, replacing the analytical default with measurements."""
+    out: Dict[int, KneeProfile] = {}
+    for b in buckets:
+        context_len = int((b + 0.5) * bucket_width)
+        out[b] = profile_knee(
+            lambda bs, _cl=context_len: measure(bs, _cl),
+            max_batch=max_batch, eps=eps)
+    return out
 
 
 def kv_bytes_per_token(cfg) -> int:

@@ -1,0 +1,3 @@
+from repro.core.control.partition import (  # noqa: F401
+    ControllerConfig, Decision, PartitionController,
+)

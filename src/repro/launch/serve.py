@@ -57,6 +57,52 @@ def _export(registry, tracer, metrics_out: str, trace_out: str,
         print(f"  trace   -> {trace_out}")
 
 
+def _calibrate_knee(cfg, ec, out_path: str, *, max_batch: int) -> None:
+    """The paper's offline profiling pass (§3.2, 'several minutes,
+    amortized over millions of queries'): for every context bucket the
+    engine serves, sweep batch sizes through a REAL timed decode step
+    (prefill a padded context, then time lm.decode with the cache
+    resident) and find the Batch_knee/Time_knee. Writes the {bucket:
+    profile} JSON artifact `--knee-profiles` loads back."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.batching.knee import calibrate_knees, profiles_to_json
+    from repro.models import api, lm
+
+    params = api.init_params(cfg, jax.random.PRNGKey(0), dtype=cfg.dtype)
+    step = jax.jit(lambda p, c, t, pos: lm.decode(p, c, t, pos, cfg))
+
+    def measure(batch: int, context_len: int) -> float:
+        ctx = max(int(ec.min_prompt_len), context_len)
+        toks = jnp.zeros((batch, ctx), jnp.int32)
+        _, cache = jax.jit(
+            lambda p, t: lm.prefill(p, t, cfg, cache_len=ctx + 2)
+        )(params, toks)
+        tok = jnp.zeros((batch, 1), jnp.int32)
+        pos = jnp.int32(ctx)
+        jax.block_until_ready(step(params, cache, tok, pos))  # compile
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(params, cache, tok, pos))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    bw = max(1, int(ec.bucket_width))
+    buckets = list(range(max(1, ec.max_prompt_len // bw)))
+    profiles = calibrate_knees(measure, buckets, bw, max_batch=max_batch)
+    with open(out_path, "w") as f:
+        f.write(profiles_to_json(profiles))
+    for b, p in sorted(profiles.items()):
+        print(f"  bucket {b} (ctx~{int((b + 0.5) * bw)}): "
+              f"Batch_knee={p.batch_knee} "
+              f"Time_knee={1e3 * p.time_knee:.2f}ms")
+    print(f"  knee profiles -> {out_path}")
+
+
 def main():
     ap = argparse.ArgumentParser(
         epilog=MENU_HELP,
@@ -111,6 +157,31 @@ def main():
                          "deterministic replay (arrivals drive the clock — "
                          "two runs of the same seed export byte-identical "
                          "timelines, the CI determinism gate)")
+    ap.add_argument("--controller", action="store_true",
+                    help="close the resize() loop (--pipelined): an online "
+                         "partition controller watches arrival rate / "
+                         "prompt-length mix / queue depths and re-slices "
+                         "the fleet mid-serve — fine slices for bursts, "
+                         "coarse for long-prompt mixes; decisions are "
+                         "hysteretic, cost-modeled against the knee "
+                         "profiles, and deterministic under --clock "
+                         "virtual")
+    ap.add_argument("--controller-menu", default="",
+                    help="comma-separated slice counts the controller may "
+                         "pick from (ascending; default '1,2,4'); --slices "
+                         "must be one of them (the starting point)")
+    ap.add_argument("--calibrate-knee", default="", metavar="OUT",
+                    help="run the offline Batch_knee/Time_knee profiling "
+                         "pass (paper §3.2: sweep batch sizes per context "
+                         "bucket through a real timed decode step, knee = "
+                         "where throughput plateaus) and write the "
+                         "{bucket: profile} JSON to OUT, then exit; feed "
+                         "it back with --knee-profiles")
+    ap.add_argument("--knee-profiles", default="", metavar="IN",
+                    help="load a --calibrate-knee JSON artifact and use "
+                         "the measured knees (instead of the analytical "
+                         "roofline default) for admission batching and "
+                         "the partition controller's cost model")
     ap.add_argument("--metrics-out", default="",
                     help="write the full metrics-registry snapshot (every "
                          "layer: runtime, engines, DPU service, prefix "
@@ -144,6 +215,9 @@ def main():
         ap.error("--tenants given but holds no model:slices entries")
     if not tenant_asks and not args.arch:
         ap.error("--arch is required unless --tenants is given")
+    if args.controller and not args.pipelined:
+        ap.error("--controller closes the loop over the pipelined "
+                 "runtime; add --pipelined")
 
     cfg = (reduced(args.arch) if args.reduced else get_config(args.arch)) \
         if args.arch else None
@@ -163,6 +237,22 @@ def main():
         preprocess=args.preprocess if not args.pipelined else "none",
         chunk_lens=chunk_lens,
     )
+
+    if args.calibrate_knee:
+        if cfg is None:
+            ap.error("--calibrate-knee needs --arch (one model per pass)")
+        _calibrate_knee(cfg, ec, args.calibrate_knee,
+                        max_batch=args.max_slots)
+        return
+
+    knee_profiles = None
+    if args.knee_profiles:
+        from repro.core.batching.knee import profiles_from_json
+
+        with open(args.knee_profiles) as f:
+            knee_profiles = profiles_from_json(f.read())
+        print(f"  knee profiles <- {args.knee_profiles} "
+              f"({len(knee_profiles)} context buckets)")
 
     tenants = None
     if tenant_asks:
@@ -211,11 +301,25 @@ def main():
             # baseline, not the service
             service = DpuService(DpuServiceConfig(
                 clock=args.clock, dpu=DpuConfig(backend="dpu")))
+        controller = None
+        if args.controller:
+            from repro.core.control import (
+                ControllerConfig, PartitionController,
+            )
+
+            menu = tuple(
+                int(x) for x in args.controller_menu.split(",") if x.strip()
+            ) or (1, 2, 4)
+            if n_slices not in menu:
+                ap.error(f"--slices {n_slices} must be on the controller "
+                         f"menu {menu} (it is the starting point)")
+            controller = PartitionController(ControllerConfig(menu=menu))
         rt = build_pipelined_runtime(
             cfg, n_slices=n_slices, ec=ec, service=service,
             rc=RuntimeConfig(clock=args.clock, slo_s=args.slo,
                              max_ingest=max(64, 2 * args.requests)),
             hedge_factor=args.hedge_factor, tenants=tenants,
+            controller=controller, knee_profiles=knee_profiles,
         )
         if args.clock == "virtual":
             # deterministic replay: the trace's 0-based arrivals ARE the
@@ -252,6 +356,14 @@ def main():
         occ = rt.stage_occupancy()
         print(f"  occupancy: preprocess={occ['preprocess']:.3f} "
               f"slots={occ['slots']:.3f}")
+        if controller is not None:
+            print(f"  controller: {len(controller.decisions)} "
+                  f"reconfiguration(s), fleet now "
+                  f"{len(rt.engine.pod.slices)} slice(s)")
+            for d in controller.decisions:
+                print(f"    t={d.t:.3f}s {d.from_slices}->{d.to_slices} "
+                      f"[{d.reason}] demand={d.demand} "
+                      f"gain={d.gain_frac:.2f} requeued={d.requeued}")
         _export(rt.registry, rt.tracer, args.metrics_out, args.trace_out,
                 args.clock == "virtual")
         return
@@ -261,7 +373,7 @@ def main():
 
         engine = build_multislice_engine(
             cfg, n_slices=n_slices, ec=ec, hedge_factor=args.hedge_factor,
-            tenants=tenants,
+            tenants=tenants, knee_profiles=knee_profiles,
         )
         engine.submit_many(reqs)
         done = engine.run_until_idle()

@@ -320,6 +320,13 @@ class MultiSliceEngine:
         # detection (None = analytic chunk/segment count * EMA of measured
         # execution times)
         self.fixed_expected_s: Optional[float] = None
+        # warm partition cache (ISSUE 10): drained engine generations are
+        # stashed per (n_slices, slice->tenant map) on resize, so the online
+        # controller's switch BACK to a configuration it has served before
+        # restores the engines — executable caches intact — instead of
+        # paying a rebuild + recompile for every oscillation of the menu
+        self._engine_cache: Dict[Any, Dict[int, ServingEngine]] = {}
+        self._gen_key: Any = None
         self._build(n_slices)
 
     # --- tenancy -------------------------------------------------------------
@@ -388,8 +395,18 @@ class MultiSliceEngine:
         # detach the previous generation's engine registries (resize rebuilds
         # every engine): a rebuilt slice starts from fresh counters, and the
         # stale series must not linger as duplicates under the fleet root
-        for e in getattr(self, "engines", {}).values():
+        outgoing = dict(getattr(self, "engines", {}))
+        for e in outgoing.values():
             self.registry.detach(e.registry)
+        # stash the outgoing generation in the warm partition cache IF it is
+        # fully drained (resize cancels every in-flight request and drains
+        # the backlog before rebuilding, so the controller path qualifies);
+        # an engine still holding slots or prefix leases would smuggle live
+        # state across a re-slice, so any residue voids the stash
+        if outgoing and self._gen_key is not None and all(
+                not e.busy() and e.prefix_lease_count() == 0
+                for e in outgoing.values()):
+            self._engine_cache[self._gen_key] = outgoing
         self.pod, self.replicated = _slice_pod(self._devices, n_slices)
         # slice -> tenant assignment: largest-remainder apportionment over
         # the tenants' original asks (>=1 slice each), contiguous runs in
@@ -427,9 +444,30 @@ class MultiSliceEngine:
             self.policy, max_slots=sum(self._cap.values()),
             segment_len=self.ec.segment_len, segment_lens=self.ec.segment_lens,
         )
-        self.engines: Dict[int, ServingEngine] = {
-            ps.slice_id: self._make_engine(ps) for ps in self.pod.slices
-        }
+        # warm partition cache hit: a configuration served before restores
+        # its drained engines — compiled executables AND prefix-store
+        # contents intact — so a controller switch-back costs requeue +
+        # re-admission, not a recompile. Restore re-applies the ambient
+        # virtual-clock mode, re-attaches the engine registries (their
+        # counters resume where they left off; readers diff), and fast-
+        # forwards the exec-sample drain marks so pre-stash batch timings
+        # are not re-ingested into the hedging EMA.
+        self._gen_key = (n_slices, tuple(sorted(self.slice_tenant.items())))
+        cached = self._engine_cache.pop(self._gen_key, None)
+        if cached is not None and set(cached) == {
+                ps.slice_id for ps in self.pod.slices}:
+            self.engines: Dict[int, ServingEngine] = cached
+            for e in self.engines.values():
+                e.completed = []
+                e._virtual = self._virtual
+                self.registry.attach(e.registry)
+            self._exec_seen = {sid: len(e.batch_exec_s)
+                               for sid, e in self.engines.items()}
+        else:
+            self.engines = {
+                ps.slice_id: self._make_engine(ps) for ps in self.pod.slices
+            }
+            self._exec_seen = {}
         # routing audit per build (slice ids change meaning on resize):
         # model -> every slice id that ever received one of its requests.
         # _send raises on a cross-tenant dispatch, so this records where
@@ -437,7 +475,6 @@ class MultiSliceEngine:
         self.routes: Dict[str, Set[int]] = {name: set()
                                             for name in self._tenants}
         self._inflight: Dict[int, _ReqTrack] = {}
-        self._exec_seen = {}
 
     def _make_engine(self, ps: PodSlice) -> ServingEngine:
         # per-slice engines are always continuous (own slot pool + prefill
@@ -1015,6 +1052,13 @@ class MultiSliceEngine:
         Trace/compile counters persist (executable caches survive a reset);
         readers diff, as the bench harness always has."""
         self.registry.reset()
+        # warm-partition-cached generations are detached from the fleet
+        # root, so the cascade above misses them — reset explicitly, or a
+        # restored generation would re-attach warmup-era counters (and
+        # stale exec samples) mid-measurement
+        for gen in self._engine_cache.values():
+            for e in gen.values():
+                e.registry.reset()
 
     def trace_counts(self) -> Dict[int, int]:
         """Per-slice jit trace totals (compile-once invariant): in steady
@@ -1103,8 +1147,9 @@ class MultiSliceEngine:
 
 
 def _resolve_tenants(specs: Sequence[TenantSpec], n_slices: int,
-                     ec: EngineConfig,
-                     devices: Optional[Sequence]) -> List[_Tenant]:
+                     ec: EngineConfig, devices: Optional[Sequence],
+                     knee_profiles: Optional[Dict[int, Any]] = None,
+                     ) -> List[_Tenant]:
     """Resolve TenantSpec asks into fully-built tenants: per-tenant params
     (seeded init unless supplied), per-tenant knee profiles and policy
     (V = the tenant's apportioned slice count, so Time_queue = Time_knee/V
@@ -1140,7 +1185,9 @@ def _resolve_tenants(specs: Sequence[TenantSpec], n_slices: int,
             params = api.init_params(spec.cfg, jax.random.PRNGKey(spec.seed),
                                      dtype=spec.cfg.dtype)
         n_active = spec.cfg.active_param_count()
-        profiles = {
+        # measured calibration (serve.py --knee-profiles) overrides the
+        # analytical roofline default, fleet-wide
+        profiles = knee_profiles or {
             b: analytical_knee(
                 n_active, chips=1,
                 context_len=int((b + 0.5) * t_ec.bucket_width),
@@ -1169,6 +1216,7 @@ def build_multislice_engine(
     max_retries: int = 3, retry_backoff_s: float = 0.0,
     watchdog_rounds: int = 0, probe_interval_s: float = 0.0,
     tenants: Optional[Sequence[TenantSpec]] = None,
+    knee_profiles: Optional[Dict[int, Any]] = None,
 ) -> MultiSliceEngine:
     """Mirror of engine.build_engine for the multi-slice system: same param
     init (bit-identical outputs vs a single engine), knee-derived policy
@@ -1187,7 +1235,8 @@ def build_multislice_engine(
 
     ec = EngineConfig() if ec is None else ec
     if tenants is not None:
-        resolved = _resolve_tenants(list(tenants), n_slices, ec, devices)
+        resolved = _resolve_tenants(list(tenants), n_slices, ec, devices,
+                                    knee_profiles)
         return MultiSliceEngine(
             n_slices=n_slices, tenants=resolved, devices=devices,
             hedge_factor=hedge_factor, dispatch=dispatch,
@@ -1205,7 +1254,9 @@ def build_multislice_engine(
         params = api.init_params(cfg, jax.random.PRNGKey(seed),
                                  dtype=cfg.dtype)
     n_active = cfg.active_param_count()
-    profiles = {
+    # measured calibration (serve.py --knee-profiles) overrides the
+    # analytical roofline default
+    profiles = knee_profiles or {
         b: analytical_knee(
             n_active, chips=1, context_len=int((b + 0.5) * ec.bucket_width),
             kv_bytes_per_token=kv_bytes_per_token(cfg),

@@ -7,6 +7,12 @@ Multi-tenant traffic (ISSUE 8): `generate_requests` also accepts a list of
 merged by arrival time, with per-tenant rid namespacing so two tenants'
 request ids never collide. The bench and the tests share this one
 generator, so a "mixed trace" means the same thing everywhere.
+
+Phase-shifting traffic (ISSUE 10): a spec may carry a tuple of `Phase`
+segments — a piecewise rate/mix schedule. Arrivals follow the phase active
+at the request's arrival time (burst of short requests, then a long-prompt
+regime, ...), per tenant, so the partition-controller bench and its tests
+replay the same regime changes from one generator.
 """
 from __future__ import annotations
 
@@ -26,6 +32,18 @@ RID_NAMESPACE = 1_000_000
 
 
 @dataclass(frozen=True)
+class Phase:
+    """One segment of a piecewise traffic schedule: for `duration_s` the
+    stream runs at `rate_qps` with the given length mix (None = inherit the
+    spec's value). The last phase extends to the end of the trace."""
+    duration_s: float
+    rate_qps: float
+    mean_len: Optional[float] = None
+    sigma: Optional[float] = None
+    max_len: Optional[float] = None
+
+
+@dataclass(frozen=True)
 class WorkloadSpec:
     modality: str = "audio"        # audio | image | text
     rate_qps: float = 100.0
@@ -39,19 +57,64 @@ class WorkloadSpec:
     # tenant/model id stamped on every generated Request (multi-tenant
     # fleets route on it; None = single-tenant default)
     model: Optional[str] = None
+    # piecewise rate/mix schedule (ISSUE 10): when set, arrivals and length
+    # draws follow the phase active at the request's arrival time instead
+    # of the flat spec-level rate/mix; None = flat Poisson (all prior PRs)
+    phases: Optional[Tuple[Phase, ...]] = None
+
+
+def _phase_at(phases: Sequence[Phase], t: float) -> Phase:
+    """Phase active at absolute trace time `t` (last phase is open-ended)."""
+    edge = 0.0
+    for ph in phases[:-1]:
+        edge += ph.duration_s
+        if t < edge:
+            return ph
+    return phases[-1]
+
+
+def _generate_phased(spec: WorkloadSpec, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Sequential piecewise-Poisson draw: each request's inter-arrival gap
+    and length come from the phase active at its arrival. One rng, one
+    draw order — deterministic for a given (spec, n)."""
+    assert spec.phases, spec
+    rng = np.random.default_rng(spec.seed)
+    arrivals = np.empty(n)
+    lengths = np.empty(n)
+    t = 0.0
+    for i in range(n):
+        ph = _phase_at(spec.phases, t)
+        t += float(rng.exponential(1.0 / ph.rate_qps))
+        arrivals[i] = t
+        if spec.modality == "image":
+            lengths[i] = spec.fixed_len
+            continue
+        mean = ph.mean_len if ph.mean_len is not None else spec.mean_len
+        sigma = ph.sigma if ph.sigma is not None else spec.sigma
+        cap = ph.max_len if ph.max_len is not None else spec.max_len
+        mu = math.log(mean) - sigma**2 / 2
+        lengths[i] = max(0.5, min(float(rng.lognormal(mu, sigma)), cap))
+    return arrivals, lengths
 
 
 def _generate_single(spec: WorkloadSpec, n: int, *,
                      rid_base: int = 0) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
-    gaps = rng.exponential(1.0 / spec.rate_qps, size=n)
-    arrivals = np.cumsum(gaps)
-    if spec.modality == "image":
-        lengths = np.full(n, spec.fixed_len)
+    if spec.phases:
+        arrivals, lengths = _generate_phased(spec, n)
+        # re-seed the payload/prompt stream so attachment draws below stay
+        # independent of how many arrival/length draws the schedule used
+        rng = np.random.default_rng(spec.seed + 1)
     else:
-        mu = math.log(spec.mean_len) - spec.sigma**2 / 2
-        lengths = np.minimum(rng.lognormal(mu, spec.sigma, size=n), spec.max_len)
-        lengths = np.maximum(lengths, 0.5)
+        gaps = rng.exponential(1.0 / spec.rate_qps, size=n)
+        arrivals = np.cumsum(gaps)
+        if spec.modality == "image":
+            lengths = np.full(n, spec.fixed_len)
+        else:
+            mu = math.log(spec.mean_len) - spec.sigma**2 / 2
+            lengths = np.minimum(rng.lognormal(mu, spec.sigma, size=n),
+                                 spec.max_len)
+            lengths = np.maximum(lengths, 0.5)
     if spec.modality == "text" and spec.vocab > 0:
         # prompt length is the unit of `length` for text — round to ints so
         # the token array matches max(1, int(length)) exactly

@@ -131,7 +131,7 @@ class PipelinedRuntime:
     (single- or multi-slice) and an optional DpuService."""
 
     def __init__(self, engine: Engine, service: Optional[DpuService] = None,
-                 rc: Optional[RuntimeConfig] = None):
+                 rc: Optional[RuntimeConfig] = None, controller=None):
         rc = RuntimeConfig() if rc is None else rc
         if rc.clock not in ("virtual", "wall"):
             raise ValueError(f"unknown clock mode {rc.clock!r}")
@@ -199,6 +199,13 @@ class PipelinedRuntime:
         }
         # DPU occupancy samples (0/1)
         self._pre_busy = self.registry.histogram("runtime_dpu_busy")
+        # optional online partition controller (core/control/partition.py):
+        # observes front-door arrivals and is polled once per step(); when
+        # its hysteresis + cost model clear, it drives engine.resize()
+        # mid-trace — the closed reconfiguration loop of ISSUE 10
+        self.controller = controller
+        if controller is not None:
+            controller.bind(self)
         self._now = 0.0                 # virtual-clock high-water mark
         # EMA of the engine's per-dispatch execution times (chunk/admit/
         # segment calls) feeding the decode-backlog SLO estimate; the
@@ -293,6 +300,11 @@ class PipelinedRuntime:
         modality = self.service.cfg.dpu.modality if check else "audio"
         for r in reqs:
             self.stats["submitted"] += 1
+            if self.controller is not None:
+                # the controller windows OFFERED load (shed included): a
+                # shed storm is exactly the signal that the current
+                # partitioning is wrong for the traffic
+                self.controller.observe(r, now)
             if check and r.payload is not None \
                     and payload_error(r.payload, modality) is not None:
                 # structurally invalid raw payload: typed shed at the door
@@ -345,6 +357,13 @@ class PipelinedRuntime:
         # this tick (deterministic on the virtual clock)
         if self.injector is not None:
             self.injector.step(self, now)
+
+        # partition-control poll — a firing decision calls engine.resize()
+        # BEFORE this tick's decode step, so the drained backlog requeues
+        # and redispatches onto the new slice layout within the same tick
+        if self.controller is not None:
+            if self.controller.maybe_reconfigure(now) is not None:
+                progressed = True
 
         # stages 4+5 — decode + emit: the engine's own admit -> segment ->
         # retire iteration; completions land on engine.completed. A drained
@@ -652,6 +671,10 @@ class PipelinedRuntime:
             t = self.injector.next_at()
             if t is not None:
                 ts.append(t)
+        if self.controller is not None:
+            t = self.controller.next_wakeup()
+            if t is not None and t > self._now:
+                ts.append(t)
         return min(ts) if ts else None
 
     def _sample(self) -> None:
@@ -705,6 +728,8 @@ class PipelinedRuntime:
         self._brk_consec = 0
         self._proc_mark = 0
         self._exec_seen = 0
+        if self.controller is not None:
+            self.controller.reset()
 
     def reset_metrics(self) -> None:
         """One registry-wide reset (benchmark warmup boundary): every
@@ -721,7 +746,7 @@ def build_pipelined_runtime(
     params=None, hedge_factor: float = 3.0,
     max_retries: int = 3, retry_backoff_s: float = 0.0,
     watchdog_rounds: int = 0, probe_interval_s: float = 0.0,
-    tenants=None,
+    tenants=None, controller=None, knee_profiles=None,
 ) -> PipelinedRuntime:
     """Convenience mirror of build_engine/build_multislice_engine: one
     continuous-batching engine (or a multi-slice pool) behind the pipelined
@@ -751,17 +776,19 @@ def build_pipelined_runtime(
             n_slices=n_slices, seed=seed, ec=ec, tenants=tenants,
             hedge_factor=hedge_factor, max_retries=max_retries,
             retry_backoff_s=retry_backoff_s, watchdog_rounds=watchdog_rounds,
-            probe_interval_s=probe_interval_s,
+            probe_interval_s=probe_interval_s, knee_profiles=knee_profiles,
         )
-    elif n_slices > 1:
+    elif n_slices > 1 or controller is not None:
+        # a partition controller needs a resizable fleet even when the
+        # starting menu point is a single coarse slice
         engine = build_multislice_engine(
             cfg, n_slices=n_slices, seed=seed, ec=ec, params=params,
             hedge_factor=hedge_factor, max_retries=max_retries,
             retry_backoff_s=retry_backoff_s, watchdog_rounds=watchdog_rounds,
-            probe_interval_s=probe_interval_s,
+            probe_interval_s=probe_interval_s, knee_profiles=knee_profiles,
         )
     else:
         engine = build_engine(cfg, seed=seed, ec=ec)
         if params is not None:
             engine.params = params
-    return PipelinedRuntime(engine, service, rc)
+    return PipelinedRuntime(engine, service, rc, controller=controller)

@@ -44,6 +44,7 @@ REQUEUE = "requeue"
 QUARANTINE = "quarantine"
 READMIT = "readmit"
 RESIZE = "resize"
+RECONFIG = "reconfig"              # partition controller repartitioned
 FAULT = "fault"                    # injector fired a FaultEvent
 BREAKER_TRIP = "breaker_trip"
 BREAKER_CLOSE = "breaker_close"
@@ -52,8 +53,8 @@ CPU_FALLBACK = "cpu_fallback"
 SPAN_KINDS = (
     INGEST, PREPROCESS_LAUNCH, PREPROCESS_DONE, PREPROCESS_FAIL, OFFER,
     DISPATCH, ADMIT, PREFILL_CHUNK, PREFIX_SCATTER, DECODE_SEGMENT, RETIRE,
-    SHED, DEAD_LETTER, HEDGE, REQUEUE, QUARANTINE, READMIT, RESIZE, FAULT,
-    BREAKER_TRIP, BREAKER_CLOSE, CPU_FALLBACK,
+    SHED, DEAD_LETTER, HEDGE, REQUEUE, QUARANTINE, READMIT, RESIZE, RECONFIG,
+    FAULT, BREAKER_TRIP, BREAKER_CLOSE, CPU_FALLBACK,
 )
 
 
